@@ -1,0 +1,36 @@
+"""Paper Fig. 5-6: base-solver generalization. A single HyperMidpoint
+(trained with the alpha=0.5 base) is evaluated, WITHOUT finetuning, under
+other members of the 2nd-order alpha-family; it should stay pareto-ahead
+of each plain alpha solver."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    eval_solver, fit_image_hypersolver, train_image_node,
+)
+from repro.core import alpha_family
+from repro.data import synthetic_images
+
+
+def main(budget: str = "small"):
+    node, params = train_image_node()
+    gp = fit_image_hypersolver(node, params, "midpoint", K=10,
+                               iters=150 if budget == "small" else 1500)
+    xt, _ = synthetic_images("mnist28", 64, seed=13)
+    rows = []
+    for alpha in (0.3, 0.4, 0.5, 2.0 / 3.0, 0.8, 1.0):
+        tab = alpha_family(alpha)
+        plain = eval_solver(node, params, "midpoint", 10, xt, alpha_tab=tab)
+        hyper = eval_solver(node, params, "hyper_midpoint", 10, xt, gp=gp,
+                            alpha_tab=tab)
+        rows.append({
+            "bench": "alpha_family", "alpha": round(alpha, 3),
+            "mape_plain": round(plain["mape"], 4),
+            "mape_hyper": round(hyper["mape"], 4),
+            "hyper_wins": hyper["mape"] < plain["mape"],
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,113 @@
+"""Beyond-paper: the hypersolver technique applied to LM serving
+(continuous-depth mode, DESIGN.md §4). A reduced qwen3-family model is
+trained briefly on the synthetic token stream; a HyperEuler g_omega is fit
+by residual fitting against the full-depth trajectory; scoring quality
+(argmax agreement + logit MAE vs full depth) is swept over NFE."""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CACHE
+from repro.checkpoint import CheckpointManager
+from repro.configs import get
+from repro.data import token_batches
+from repro.models.cdepth import (
+    cdepth_residual_loss, lm_forward_cdepth, lm_g_init,
+)
+from repro.models.lm import group_layout, init_lm, lm_forward, lm_loss
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+
+
+def _cfg():
+    return dataclasses.replace(get("qwen3_4b").reduced(), n_layers=8)
+
+
+def train_small_lm(steps=150):
+    cfg = _cfg()
+    cm = CheckpointManager(os.path.join(CACHE, "cdepth_lm"), keep=1)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    latest = cm.latest_step()
+    if latest is not None and latest >= steps:
+        return cfg, cm.restore(latest, jax.eval_shape(lambda: params))
+    opt = adamw(1e-3)
+    st = opt.init(params)
+
+    @jax.jit
+    def step(p, st, i, toks, tgts):
+        (l, m), g = jax.value_and_grad(
+            lambda pp: lm_loss(pp, cfg, toks, tgts), has_aux=True)(p)
+        g, _ = clip_by_global_norm(g, 1.0)
+        u, st = opt.update(g, st, p, i)
+        return apply_updates(p, u), st, l
+
+    it = token_batches(cfg.vocab, 8, 64, seed=3)
+    for i in range(steps):
+        toks, tgts = next(it)
+        params, st, l = step(params, st, i, toks, tgts)
+    cm.save(steps, params)
+    return cfg, params
+
+
+def main(budget: str = "small"):
+    cfg, params = train_small_lm(150 if budget == "small" else 600)
+    _, n_groups, _ = group_layout(cfg)
+    it = token_batches(cfg.vocab, 4, 32, seed=11)
+    toks, _ = next(it)
+    full, _ = lm_forward(params, cfg, toks)
+
+    rows = []
+    for K in [k for k in (1, 2, 4, 8) if n_groups % k == 0]:
+        # fit a hypersolver for this K
+        gp = lm_g_init(jax.random.PRNGKey(2), cfg, rank=32,
+                       param_dtype=jnp.float32)
+        opt = adamw(3e-3)
+        st = opt.init(gp)
+
+        @jax.jit
+        def fit(gp, st, i, batch):
+            l, g = jax.value_and_grad(
+                lambda gg: cdepth_residual_loss(params, gg, cfg, batch, K)
+            )(gp)
+            g, _ = clip_by_global_norm(g, 1.0)
+            u, st = opt.update(g, st, gp, i)
+            return apply_updates(gp, u), st, l
+
+        fit_it = token_batches(cfg.vocab, 4, 32, seed=13)
+        batch, _ = next(fit_it)
+        iters = 80 if budget == "small" else 300
+        for i in range(iters):
+            if i % 10 == 0:
+                batch, _ = next(fit_it)
+            gp, st, _ = fit(gp, st, i, batch)
+
+        for solver, g_used in (("euler", None), ("euler", gp)):
+            out = lm_forward_cdepth(params, cfg, toks, K=K, solver=solver,
+                                    g_params=g_used)
+            agree = float(jnp.mean(jnp.argmax(full, -1)
+                                   == jnp.argmax(out, -1)))
+            mae = float(jnp.mean(jnp.abs(full - out)))
+            # KL(full || approx): smooth serving-quality metric
+            lp_full = jax.nn.log_softmax(full, -1)
+            lp_out = jax.nn.log_softmax(out, -1)
+            kl = float(jnp.mean(jnp.sum(
+                jnp.exp(lp_full) * (lp_full - lp_out), -1)))
+            rows.append({
+                "bench": "cdepth_lm",
+                "solver": "hyper_euler" if g_used is not None else "euler",
+                "K": K, "full_depth_groups": n_groups,
+                "nfe_fraction": round(K / n_groups, 3),
+                "argmax_agreement": round(agree, 4),
+                "logit_mae": round(mae, 4),
+                "kl_vs_full_depth": round(kl, 4),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

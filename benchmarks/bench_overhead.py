@@ -1,0 +1,57 @@
+"""Paper Sec. 6 (Fig. 2 complement): hypersolver relative overhead
+O_r = 1 + MAC_g / (p * MAC_f) -> 1 as the base-solver order p grows, plus
+the asymptotic-complexity table (empirical local-error order fits)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EULER, HEUN, MIDPOINT, RK4, rk_psi
+from repro.models.conv_node import mnist_f_macs, mnist_g_macs
+
+
+def main(budget: str = "small"):
+    rows = []
+    macs_f = mnist_f_macs()
+    macs_g = mnist_g_macs()
+    for tab in (EULER, MIDPOINT, HEUN, RK4):
+        p = tab.order
+        o_r = 1.0 + macs_g / (tab.stages * macs_f)
+        rows.append({
+            "bench": "overhead", "base": tab.name, "order": p,
+            "stages": tab.stages,
+            "mac_g_over_mac_f": round(macs_g / macs_f, 4),
+            "relative_overhead_O_r": round(o_r, 4),
+        })
+
+    # Fig. 2 table: empirical local-error order e_k ~ eps^{p+1}
+    A = jnp.array([[-0.4, -1.6], [1.6, -0.4]])
+    f = lambda s, z: z @ A.T
+    w, V = np.linalg.eig(np.asarray(A))
+
+    def expm(t):
+        return (V @ np.diag(np.exp(w * t)) @ np.linalg.inv(V)).real
+
+    z = jnp.array([[0.7, -0.3]])
+    for tab in (EULER, MIDPOINT, HEUN, RK4):
+        # eps large enough that even RK4's eps^5 local error clears the
+        # fp32 noise floor (the fp64 fit lives in tests/test_solvers.py)
+        errs, epss = [], [0.8, 0.6, 0.45, 0.33]
+        for eps in epss:
+            z_true = jnp.asarray(np.asarray(z) @ expm(eps).T)
+            psi, _ = rk_psi(f, tab, 0.0, eps, z)
+            errs.append(float(jnp.linalg.norm(z_true - (z + eps * psi))))
+        slope = float(np.polyfit(np.log(epss), np.log(errs), 1)[0])
+        rows.append({
+            "bench": "complexity_table", "solver": tab.name,
+            "nfe_per_step": tab.stages,
+            "theory_local_order": tab.order + 1,
+            "empirical_local_order": round(slope, 2),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,47 @@
+"""Paper Fig. 3 / Fig. 9: MAPE-NFE and accuracy-loss-GMAC pareto fronts on
+the image-classification Neural ODE.
+
+HyperEuler (trained by residual fitting at K=10) vs Euler / midpoint / RK4
+across step counts; MACs account for the g_omega overhead (0.02 vs 0.04
+GMAC per NFE in the paper's arch; here computed from the actual convs).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (
+    accuracy_drop, eval_solver, fit_image_hypersolver, train_image_node,
+)
+from repro.data import synthetic_images
+from repro.models.conv_node import mnist_f_macs, mnist_g_macs
+
+
+def main(budget: str = "small"):
+    steps = 60 if budget == "small" else 1000
+    iters = 120 if budget == "small" else 1500
+    node, params = train_image_node(steps=steps)
+    gp = fit_image_hypersolver(node, params, "euler", K=10, iters=iters)
+    xt, _ = synthetic_images("mnist28", 64, seed=9)
+
+    macs_f = mnist_f_macs() / 1e9
+    macs_g = mnist_g_macs() / 1e9
+    rows = []
+    for K in (2, 4, 8, 10, 20):
+        for name in ("euler", "hyper_euler", "midpoint", "rk4"):
+            out = eval_solver(node, params, name, K, xt,
+                              gp=gp if name.startswith("hyper") else None)
+            acc_loss = accuracy_drop(node, params, out["zT"], out["z_ref"])
+            gmac = out["nfe"] * macs_f + (K * macs_g
+                                          if name.startswith("hyper") else 0)
+            rows.append({
+                "bench": "pareto_mnist", "solver": name, "K": K,
+                "nfe": out["nfe"], "gmac": round(gmac, 4),
+                "mape": round(out["mape"], 4),
+                "acc_loss_pct": round(acc_loss, 3),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,67 @@
+"""Paper Fig. 4: wall-clock solve time of fixed-step methods vs dopri5 at
+iso-accuracy (each method runs the minimum K keeping accuracy loss vs
+dopri5 under 0.1% -> paper's protocol). CPU timings (documented); the
+paper's metric of record, NFE/MACs, is hardware-neutral and also reported.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (
+    accuracy_drop, eval_solver, fit_image_hypersolver, timed,
+    train_image_node,
+)
+from repro.core import FixedGrid, get_tableau, odeint_fixed
+from repro.core.train import make_hypersolver
+from repro.data import synthetic_images
+from repro.models.conv_node import mnist_g_apply
+
+
+def _min_K_for_accuracy(node, params, name, xt, gp, threshold=0.1,
+                        K_grid=(1, 2, 4, 8, 16, 32)):
+    for K in K_grid:
+        out = eval_solver(node, params, name, K, xt,
+                          gp=gp if name.startswith("hyper") else None)
+        if accuracy_drop(node, params, out["zT"], out["z_ref"]) <= threshold:
+            return K, out["nfe"]
+    return K_grid[-1], out["nfe"]
+
+
+def main(budget: str = "small"):
+    node, params = train_image_node()
+    gp = fit_image_hypersolver(node, params, "euler", K=10)
+    xt, _ = synthetic_images("mnist28", 32, seed=11)
+
+    f = node.field(params, xt)
+    z0 = node.hx_apply(params, xt)
+
+    rows = []
+    # dopri5 reference timing
+    ref_fn = jax.jit(lambda z: node.reference_trajectory(
+        params, xt, K=1, atol=1e-4, rtol=1e-4)[0][-1])
+    t_ref, _ = timed(ref_fn, z0)
+    rows.append({"bench": "wallclock_mnist", "solver": "dopri5", "K": "-",
+                 "nfe": "adaptive", "ms": round(t_ref * 1e3, 2),
+                 "speedup_vs_dopri5": 1.0})
+
+    for name in ("euler", "hyper_euler", "midpoint", "rk4"):
+        K, nfe = _min_K_for_accuracy(node, params, name, xt, gp)
+        grid = FixedGrid.over(0.0, 1.0, K)
+        if name.startswith("hyper"):
+            hs = make_hypersolver("euler", mnist_g_apply, gp, xt)
+            fn = jax.jit(lambda z: hs.odeint(f, z, grid, return_traj=False))
+        else:
+            tab = get_tableau(name)
+            fn = jax.jit(lambda z: odeint_fixed(f, z, grid, tab,
+                                                return_traj=False))
+        t, _ = timed(fn, z0)
+        rows.append({"bench": "wallclock_mnist", "solver": name, "K": K,
+                     "nfe": nfe, "ms": round(t * 1e3, 2),
+                     "speedup_vs_dopri5": round(t_ref / t, 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

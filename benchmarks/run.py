@@ -1,0 +1,67 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+
+    PYTHONPATH=src python -m benchmarks.run [--budget small|full] [--only X]
+
+Prints one CSV-ish line per result row: ``name,us_per_call,derived``.
+Figure mapping: bench_pareto (Fig 3/9), bench_wallclock (Fig 4),
+bench_alpha_family (Fig 5-6), bench_cnf (Fig 1/7), bench_trajectory
+(Fig 8), bench_overhead (Fig 2 + Sec 6), bench_kernels (kernel layer),
+bench_cdepth_lm (beyond paper: the technique on LM serving).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+MODULES = [
+    "bench_overhead",
+    "bench_pareto",
+    "bench_wallclock",
+    "bench_alpha_family",
+    "bench_trajectory",
+    "bench_cnf",
+    "bench_kernels",
+    "bench_cdepth_lm",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="small", choices=["small", "full"])
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    all_rows = []
+    failures = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            rows = mod.main(budget=args.budget)
+            dt = time.time() - t0
+            for r in rows:
+                derived = {k: v for k, v in r.items() if k != "bench"}
+                print(f"{r['bench']},{dt / max(len(rows), 1) * 1e6:.0f},"
+                      f"{json.dumps(derived, default=str)}")
+            all_rows.extend(rows)
+            print(f"# {mod_name}: {len(rows)} rows in {dt:.1f}s")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((mod_name, str(e)))
+    with open(os.path.join(out_dir, "bench_results.json"), "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        raise SystemExit(1)
+    print(f"# total rows: {len(all_rows)} -> artifacts/bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""CNF density estimation + 2-NFE HyperHeun sampling (paper Sec. 4.2).
+
+Trains a FFJORD CNF on a chosen 2-D density, fits a HyperHeun with a
+single K=1 residual, and prints sample-quality metrics at 2 NFEs vs
+dopri5 (Fig. 7 quantified). ASCII density render included.
+
+    PYTHONPATH=src python examples/cnf_density.py --density pinwheel
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_cnf import _g_apply, fit_hyperheun, train_cnf
+from repro.core import FixedGrid, HyperSolver, get_tableau, odeint_dopri5
+from repro.data import density_sampler
+from repro.nn.cnf import exact_trace_dynamics
+
+
+def ascii_density(x, bins=28, lo=-4.0, hi=4.0):
+    h, _, _ = np.histogram2d(x[:, 1], x[:, 0], bins=bins,
+                             range=[[lo, hi], [lo, hi]])
+    h = h / max(h.max(), 1)
+    chars = " .:-=+*#%@"
+    return "\n".join(
+        "".join(chars[min(int(v * 9.99), 9)] for v in row)
+        for row in h[::-1])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--density", default="pinwheel",
+                    choices=["pinwheel", "rings", "checkerboard", "circles"])
+    ap.add_argument("--iters", type=int, default=600)
+    args = ap.parse_args()
+
+    print(f"training CNF on {args.density} ...")
+    p = train_cnf(args.density, iters=args.iters)
+    print("fitting HyperHeun (K=1 residual, paper Sec. 4.2) ...")
+    gp = fit_hyperheun(p, args.density, iters=500)
+
+    aug = exact_trace_dynamics(p)
+    z0 = jax.random.normal(jax.random.PRNGKey(0), (4096, 2))
+    state0 = (z0, jnp.zeros(z0.shape[0]))
+
+    ref, nfe = odeint_dopri5(aug, state0, FixedGrid.over(0, 1, 1),
+                             atol=1e-5, rtol=1e-5)
+    x_ref = np.asarray(ref[0][-1])
+
+    hs = HyperSolver(tableau=get_tableau("heun"),
+                     g=lambda e, s, z, dz: _g_apply(gp, e, s, None, z, dz))
+    x_hyper = np.asarray(hs.odeint(aug, state0, FixedGrid.over(0, 1, 1),
+                                   return_traj=False)[0])
+    heun = HyperSolver(tableau=get_tableau("heun"), g=None)
+    x_heun = np.asarray(heun.odeint(aug, state0, FixedGrid.over(0, 1, 1),
+                                    return_traj=False)[0])
+
+    d_hyper = float(np.mean(np.linalg.norm(x_hyper - x_ref, -1)))
+    d_heun = float(np.mean(np.linalg.norm(x_heun - x_ref, -1)))
+    print(f"\ndopri5 used {int(nfe)} NFEs; fixed methods use 2 NFEs")
+    print(f"mean sample displacement vs dopri5:  "
+          f"HyperHeun {d_hyper:.4f}   plain Heun {d_heun:.4f}   "
+          f"({d_heun / max(d_hyper, 1e-9):.1f}x worse)")
+
+    data = np.asarray(next(density_sampler(args.density, 4096, seed=3)))
+    print("\n-- data --")
+    print(ascii_density(data))
+    print("\n-- HyperHeun samples @ 2 NFE --")
+    print(ascii_density(x_hyper))
+
+
+if __name__ == "__main__":
+    main()

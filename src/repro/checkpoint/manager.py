@@ -1,0 +1,155 @@
+"""Fault-tolerant checkpointing: atomic writes, keep-N GC, async save,
+elastic restore (re-shard to whatever mesh is live at restore time).
+
+Layout:  <dir>/step_<N>/{manifest.json, <idx>.npy.zst}
+A checkpoint is only visible once its directory is atomically renamed from
+a ``.tmp`` staging name (crash-safe: partial writes are never picked up by
+``latest_step``). Leaves are zstd-compressed npy buffers.
+
+Restore takes a target sharding tree (or None for host arrays): each leaf
+is ``jax.device_put`` with its NamedSharding, so a run checkpointed on a
+512-chip mesh restores onto 256 chips (or a CPU) unchanged — this is the
+elastic-scaling path.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import zstandard
+
+_CTX = zstandard.ZstdCompressor(level=3)
+_DCTX = zstandard.ZstdDecompressor()
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve extended dtypes (bfloat16, float8_*) via ml_dtypes."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _save_leaf(path: str, arr) -> None:
+    # raw little-endian bytes; dtype/shape live in the manifest (numpy's
+    # npy writer mangles extended dtypes like bfloat16 into void types)
+    raw = np.ascontiguousarray(np.asarray(arr)).tobytes()
+    with open(path, "wb") as f:
+        f.write(_CTX.compress(raw))
+
+
+def _load_leaf(path: str, dtype: str, shape) -> np.ndarray:
+    with open(path, "rb") as f:
+        raw = _DCTX.decompress(f.read())
+    return np.frombuffer(raw, dtype=_np_dtype(dtype)).reshape(shape)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save ----
+    def save(self, step: int, tree: Any, wait: bool = False) -> None:
+        # Pull to host BEFORE handing to the writer thread (device buffers
+        # may be donated by the next step).
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        host = [np.asarray(l) for l in flat]
+        spec = jax.tree_util.tree_map(lambda _: 0, tree)
+        structure = jax.tree_util.tree_structure(spec)
+
+        def write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            for i, arr in enumerate(host):
+                _save_leaf(os.path.join(tmp, f"{i}.npy.zst"), arr)
+            manifest = {
+                "step": step,
+                "n_leaves": len(host),
+                "treedef": str(structure),
+                "dtypes": [str(a.dtype) for a in host],
+                "shapes": [list(a.shape) for a in host],
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self._gc()
+
+        if self.async_save and not wait:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---------------------------------------------------------- restore ----
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name,
+                                                 "manifest.json")):
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """``like``: a pytree with the target structure (concrete or
+        abstract). ``shardings``: matching NamedSharding tree or None."""
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        assert manifest["n_leaves"] == len(flat_like), \
+            (manifest["n_leaves"], len(flat_like))
+        flat_sh = (treedef.flatten_up_to(shardings)
+                   if shardings is not None else [None] * len(flat_like))
+        out = []
+        for i, (l, sh) in enumerate(zip(flat_like, flat_sh)):
+            arr = _load_leaf(os.path.join(d, f"{i}.npy.zst"),
+                             manifest["dtypes"][i], manifest["shapes"][i])
+            assert list(arr.shape) == list(l.shape), (i, arr.shape, l.shape)
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, like, shardings)
+
+    # --------------------------------------------------------------- gc ----
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1)) for m in
+            (re.fullmatch(r"step_(\d+)", n) for n in os.listdir(self.dir)) if m
+        )
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)

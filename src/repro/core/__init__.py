@@ -1,0 +1,17 @@
+# The paper's primary contribution: hypersolvers for continuous-depth models.
+from repro.core.tableaus import (  # noqa: F401
+    Tableau, EULER, MIDPOINT, HEUN, RALSTON, RK4, RK38, RK3_KUTTA, DOPRI5,
+    alpha_family, get as get_tableau,
+)
+from repro.core.solvers import (  # noqa: F401
+    FixedGrid, odeint_fixed, rk_psi, local_error, tree_axpy, tree_lincomb,
+)
+from repro.core.adaptive import odeint_dopri5  # noqa: F401
+from repro.core.hypersolver import HyperSolver, make as make_solver  # noqa: F401
+from repro.core.residual import (  # noqa: F401
+    solver_residual, residual_fitting_loss, trajectory_fitting_loss, combined_loss,
+)
+from repro.core.neural_ode import NeuralODE  # noqa: F401
+from repro.core.train import (  # noqa: F401
+    HypersolverTrainConfig, train_hypersolver, make_hypersolver, bind_g,
+)

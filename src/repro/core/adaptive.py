@@ -1,0 +1,122 @@
+"""Adaptive-step Dormand-Prince 5(4) — the paper's ground-truth solver.
+
+Used to generate "exact" solution checkpoints z(s_k) at mesh points for
+hypersolver training (paper Sec. 3.2: "practically obtained through an
+adaptive-step solver set up with low tolerances"). Implemented with
+``lax.while_loop`` per mesh segment; not differentiated through (trainers
+``stop_gradient`` its outputs, matching the paper's ``.detach()``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solvers import FixedGrid, Pytree, VectorField, tree_axpy, tree_lincomb
+from repro.core.tableaus import DOPRI5
+
+_SAFETY = 0.9
+_MIN_FACTOR = 0.2
+_MAX_FACTOR = 5.0
+
+
+def _flat_rms(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.mean(l.astype(jnp.float32) ** 2) for l in jax.tree_util.tree_leaves(tree)]
+    n = len(leaves)
+    return jnp.sqrt(sum(leaves) / n)
+
+
+def _error_ratio(z, z_new, err, atol, rtol):
+    def leafwise(zl, znl, el):
+        tol = atol + rtol * jnp.maximum(jnp.abs(zl), jnp.abs(znl))
+        return jnp.mean((el.astype(jnp.float32) / tol.astype(jnp.float32)) ** 2)
+
+    parts = jax.tree_util.tree_leaves(jax.tree_util.tree_map(leafwise, z, z_new, err))
+    return jnp.sqrt(sum(parts) / len(parts))
+
+
+class _SegState(NamedTuple):
+    s: jnp.ndarray
+    z: Any
+    eps: jnp.ndarray
+    nfe: jnp.ndarray
+
+
+def _dopri5_stages(f: VectorField, s, eps, z):
+    tab = DOPRI5
+    stages = []
+    for i in range(tab.stages):
+        if i == 0:
+            zi = z
+        else:
+            zi = tree_axpy(eps, tree_lincomb(tab.a[i], stages), z)
+        stages.append(f(s + tab.c[i] * eps, zi))
+    z5 = tree_axpy(eps, tree_lincomb(tab.b, stages), z)
+    err_w = tuple(b - be for b, be in zip(tab.b, tab.b_err))
+    err = jax.tree_util.tree_map(lambda l: eps * l, tree_lincomb(err_w, stages))
+    return z5, err
+
+
+def _integrate_segment(f, z0, s0, s1, eps0, atol, rtol, max_steps):
+    """Adaptively integrate from s0 to s1, returning (z(s1), last_eps, nfe)."""
+
+    def cond(st: _SegState):
+        return (st.s < s1 - 1e-12) & (st.nfe < max_steps * 6)
+
+    def body(st: _SegState):
+        eps = jnp.minimum(st.eps, s1 - st.s)
+        z_new, err = _dopri5_stages(f, st.s, eps, st.z)
+        ratio = _error_ratio(st.z, z_new, err, atol, rtol)
+        accept = ratio <= 1.0
+        factor = jnp.clip(
+            _SAFETY * (jnp.maximum(ratio, 1e-10) ** -0.2), _MIN_FACTOR, _MAX_FACTOR
+        )
+        new_eps = jnp.clip(eps * factor, 1e-8, s1 - s0)
+        z_out = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(accept, a, b), z_new, st.z
+        )
+        s_out = jnp.where(accept, st.s + eps, st.s)
+        return _SegState(s=s_out, z=z_out, eps=new_eps, nfe=st.nfe + 6)
+
+    init = _SegState(
+        s=jnp.asarray(s0, jnp.float32),
+        z=z0,
+        eps=jnp.asarray(eps0, jnp.float32),
+        nfe=jnp.asarray(0, jnp.int32),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    return out.z, out.eps, out.nfe
+
+
+def odeint_dopri5(
+    f: VectorField,
+    z0: Pytree,
+    grid: FixedGrid,
+    atol: float = 1e-5,
+    rtol: float = 1e-5,
+    max_steps_per_segment: int = 1000,
+):
+    """Solve the IVP, emitting the solution at every mesh point of ``grid``.
+
+    Returns (trajectory with leading axis K+1, total NFE). The trajectory is
+    the hypersolver training target {(s_k, z(s_k))} of paper Sec. 3.2.
+    """
+
+    def seg(carry, s_pair):
+        z, eps = carry
+        s_a, s_b = s_pair
+        z_b, eps_out, nfe = _integrate_segment(
+            f, z, s_a, s_b, eps, atol, rtol, max_steps_per_segment
+        )
+        return (z_b, eps_out), (z_b, nfe)
+
+    s_span = grid.s_span
+    pairs = jnp.stack([s_span[:-1], s_span[1:]], axis=1)
+    (_, _), (traj, nfes) = jax.lax.scan(
+        seg, (z0, jnp.asarray(grid.eps, jnp.float32)), pairs
+    )
+    full = jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a[None], b], axis=0), z0, traj
+    )
+    return full, jnp.sum(nfes)

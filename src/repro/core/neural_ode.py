@@ -1,0 +1,85 @@
+"""General Neural ODE formulation (paper Eq. 1, Massaroli et al. 2020b):
+
+    z' = f_theta(s, x, z),  z(0) = h_x(x),  y_hat(s) = h_y(z(s))
+
+``h_x`` / ``h_y`` are kept linear maps (paper Sec. 2) to avoid collapsing the
+dynamics. This module is functional: parameters are explicit pytrees, and the
+three maps are ``apply(params, ...)`` callables, so it composes with pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import odeint_dopri5
+from repro.core.hypersolver import HyperSolver
+from repro.core.solvers import FixedGrid, odeint_fixed
+from repro.core.tableaus import Tableau
+
+Params = Any
+Apply = Callable[..., Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuralODE:
+    """Functional Neural ODE. ``f_apply(params, s, x, z) -> dz``.
+
+    ``hx_apply(params, x) -> z0`` and ``hy_apply(params, z) -> y`` are the
+    linear input/output maps; identity lambdas are valid.
+    """
+
+    f_apply: Apply
+    hx_apply: Apply
+    hy_apply: Apply
+    s_span: tuple = (0.0, 1.0)
+
+    def field(self, params: Params, x: Any) -> Callable:
+        """Close f over (params, x): the VectorField handed to solvers."""
+        return lambda s, z: self.f_apply(params, s, x, z)
+
+    def solve(
+        self,
+        params: Params,
+        x: Any,
+        solver: HyperSolver,
+        K: int,
+        return_traj: bool = False,
+    ):
+        grid = FixedGrid.over(self.s_span[0], self.s_span[1], K)
+        f = self.field(params, x)
+        z0 = self.hx_apply(params, x)
+        out = solver.odeint(f, z0, grid, return_traj=return_traj)
+        return out
+
+    def forward(self, params: Params, x: Any, solver: HyperSolver, K: int):
+        """y_hat(S) = h_y(z(S)) (paper Sec. 2)."""
+        zT = self.solve(params, x, solver, K, return_traj=False)
+        return self.hy_apply(params, zT)
+
+    def reference_trajectory(
+        self,
+        params: Params,
+        x: Any,
+        K: int,
+        atol: float = 1e-5,
+        rtol: float = 1e-5,
+    ):
+        """Ground-truth mesh checkpoints {z(s_k)} via dopri5 (paper Sec. 3.2)."""
+        grid = FixedGrid.over(self.s_span[0], self.s_span[1], K)
+        f = self.field(params, x)
+        z0 = self.hx_apply(params, x)
+        traj, nfe = odeint_dopri5(f, z0, grid, atol=atol, rtol=rtol)
+        return jax.lax.stop_gradient(traj), grid, nfe
+
+    def forward_fixed(
+        self, params: Params, x: Any, tab: Tableau, K: int
+    ):
+        """Plain fixed-step baseline forward (no hypersolver)."""
+        grid = FixedGrid.over(self.s_span[0], self.s_span[1], K)
+        f = self.field(params, x)
+        z0 = self.hx_apply(params, x)
+        zT = odeint_fixed(f, z0, grid, tab, return_traj=False)
+        return self.hy_apply(params, zT)

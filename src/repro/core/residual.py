@@ -1,0 +1,116 @@
+"""Hypersolver training losses (paper Sec. 3.2).
+
+Residual fitting targets the *local* truncation error (Theorem 1); trajectory
+fitting targets the *global* truncation error. Both operate on ground-truth
+trajectories {z(s_k)} produced by a tightly-tolerated adaptive solver.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypersolver import Correction, HyperSolver
+from repro.core.solvers import (
+    FixedGrid,
+    Pytree,
+    VectorField,
+    rk_psi,
+    tree_axpy,
+)
+from repro.core.tableaus import Tableau
+
+
+def _tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def _tree_l2(t: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(l.astype(jnp.float32) ** 2)
+              for l in jax.tree_util.tree_leaves(t)]
+    return jnp.sqrt(sum(leaves) + 1e-24)
+
+
+def _index(traj: Pytree, k) -> Pytree:
+    return jax.tree_util.tree_map(lambda l: l[k], traj)
+
+
+def solver_residual(
+    f: VectorField, tab: Tableau, s, eps, z_k: Pytree, z_k1: Pytree
+):
+    """R(s_k, z(s_k), z(s_{k+1})) = [z(s_{k+1}) - z(s_k) - eps psi] / eps^{p+1}.
+
+    (paper Eq. 6). Also returns dz = f(s_k, z_k) for reuse by g_omega.
+    """
+    psi, stages = rk_psi(f, tab, s, eps, z_k)
+    pred = tree_axpy(eps, psi, z_k)
+    resid = jax.tree_util.tree_map(
+        lambda a, b: (a - b) / (eps ** (tab.order + 1)), z_k1, pred
+    )
+    return resid, stages[0]
+
+
+def residual_fitting_loss(
+    hs: HyperSolver, f: VectorField, traj: Pytree, grid: FixedGrid
+) -> jnp.ndarray:
+    """ell = (1/K) sum_k || R_k - g(eps, s_k, z(s_k)) ||_2  (paper Sec. 3.2).
+
+    ``traj`` has a leading mesh axis of length K+1; it is treated as ground
+    truth (gradients are stopped through it and through f's stage evals, as
+    in the paper's reference implementation which detaches f evaluations).
+    """
+    assert hs.g is not None
+    traj = jax.lax.stop_gradient(traj)
+    s_knots = grid.s0 + grid.eps * jnp.arange(grid.K)
+
+    def per_k(k, s):
+        z_k = _index(traj, k)
+        z_k1 = _index(traj, k + 1)
+        resid, dz = solver_residual(f, hs.tableau, s, grid.eps, z_k, z_k1)
+        resid = jax.lax.stop_gradient(resid)
+        dz = jax.lax.stop_gradient(dz)
+        pred = hs.g(grid.eps, s, z_k, dz)
+        return _tree_l2(_tree_sub(resid, pred))
+
+    ks = jnp.arange(grid.K)
+    losses = jax.vmap(per_k)(ks, s_knots)
+    return jnp.mean(losses)
+
+
+def trajectory_fitting_loss(
+    hs: HyperSolver, f: VectorField, traj: Pytree, grid: FixedGrid
+) -> jnp.ndarray:
+    """L = sum_k || z(s_k) - z_k ||_2 with z_k the unrolled hypersolve."""
+    assert hs.g is not None
+    traj = jax.lax.stop_gradient(traj)
+    z0 = _index(traj, 0)
+
+    def body(z, inp):
+        k, s = inp
+        z_next, _, _ = hs.step(f, s, grid.eps, z)
+        target = _index(traj, k + 1)
+        return z_next, _tree_l2(_tree_sub(target, z_next))
+
+    ks = jnp.arange(grid.K)
+    s_knots = grid.s0 + grid.eps * jnp.arange(grid.K)
+    _, losses = jax.lax.scan(body, z0, (ks, s_knots))
+    return jnp.sum(losses)
+
+
+def combined_loss(
+    hs: HyperSolver,
+    f: VectorField,
+    traj: Pytree,
+    grid: FixedGrid,
+    residual_weight: float = 1.0,
+    trajectory_weight: float = 0.0,
+) -> jnp.ndarray:
+    """Residual and trajectory fitting 'can be combined into a single loss
+    term, depending on the application' (paper Sec. 3.2)."""
+    loss = jnp.asarray(0.0, jnp.float32)
+    if residual_weight:
+        loss = loss + residual_weight * residual_fitting_loss(hs, f, traj, grid)
+    if trajectory_weight:
+        loss = loss + trajectory_weight * trajectory_fitting_loss(hs, f, traj, grid)
+    return loss

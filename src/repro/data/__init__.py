@@ -1,0 +1,4 @@
+from repro.data.synthetic import (  # noqa: F401
+    token_batches, density_sampler, synthetic_images, DENSITIES,
+)
+from repro.data.loader import ShardedLoader  # noqa: F401

@@ -1,0 +1,53 @@
+"""Sharded, prefetching data loader.
+
+Host-side iterator -> device arrays with the global-batch NamedSharding.
+On a real multi-host pod each process feeds only its addressable shard
+(``jax.make_array_from_process_local_data``); in this single-process
+container the full batch is placed with ``jax.device_put`` under the same
+sharding, which is semantically identical for SPMD. A background thread
+keeps ``prefetch`` batches in flight so host data prep overlaps device
+compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Iterator, Optional
+
+import jax
+
+
+class ShardedLoader:
+    def __init__(self, it: Iterator[Any], sharding=None, prefetch: int = 2):
+        self._it = it
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self._sharding is None:
+            return batch
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), batch, self._sharding)
+
+    def _fill(self):
+        try:
+            for batch in self._it:
+                self._q.put(self._place(batch))
+        except BaseException as e:  # surfaced on next __next__
+            self._err = e
+        finally:
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item

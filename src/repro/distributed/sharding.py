@@ -1,0 +1,290 @@
+"""Name-path sharding rules: DP / TP / EP / SP without touching model code.
+
+``param_pspec(path, ndim)`` maps a parameter's tree path to a
+PartitionSpec; stacked layer params (leading group axis) get a None
+prepended automatically. ``zero_spec`` additionally shards optimizer
+moments over the 'data' axis (ZeRO-1). Activation constraints are applied
+through the module-level hooks ``constrain`` (no-ops outside a mesh
+context, so unit tests are unaffected).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# (regex on 'a/b/c' path, spec for the UNSTACKED param). Order matters.
+_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    (r"embed/table$", ("model", None)),          # vocab sharding
+    (r"head/kernel$", (None, "model")),
+    (r"patch_proj/kernel$", (None, "model")),
+    (r"pos_embed$", (None, None)),
+    (r"enc_pos$", (None, None)),
+    (r"dec_pos$", (None, None)),
+    # attention
+    (r"(attn|self_attn|cross_attn)/w[qkv]/kernel$", (None, "model")),
+    (r"(attn|self_attn|cross_attn)/wo/kernel$", ("model", None)),
+    (r"(q_norm|k_norm)/scale$", (None,)),
+    # dense ffn
+    (r"ffn/w[ig]/kernel$", (None, "model")),
+    (r"ffn/wd/kernel$", ("model", None)),
+    (r"shared/w[ig]/kernel$", (None, "model")),
+    (r"shared/wd/kernel$", ("model", None)),
+    # MoE: expert-parallel over 'model'
+    (r"moe/router/kernel$", (None, None)),
+    (r"moe/w[igd]$", ("model", None, None)),
+    # RWKV6
+    (r"tmix/w[rkvg]/kernel$", (None, "model")),
+    (r"tmix/wo/kernel$", ("model", None)),
+    (r"tmix/(mu_x|u|w0)$", ("model",)),
+    (r"tmix/mu$", (None, "model")),
+    (r"tmix/lora_a1$", (None, None)),
+    (r"tmix/lora_a2$", (None, None, "model")),
+    (r"tmix/w_lora1$", (None, None)),
+    (r"tmix/w_lora2$", (None, "model")),
+    (r"tmix/gn_(scale|bias)$", ("model", None)),
+    (r"cmix/w[k]/kernel$", (None, "model")),
+    (r"cmix/wv/kernel$", ("model", None)),
+    (r"cmix/wr/kernel$", (None, "model")),
+    (r"cmix/mix_[kr]$", ("model",)),
+    # Griffin / RG-LRU (recurrence width sharded over 'model')
+    (r"griffin/in_(rec|gate)/kernel$", (None, "model")),
+    (r"griffin/out/kernel$", ("model", None)),
+    (r"griffin/conv/w$", (None, "model")),
+    (r"griffin/conv/b$", ("model",)),
+    (r"rglru/w[ax]/kernel$", (None, "model")),
+    (r"rglru/(ba|bx|lam)$", ("model",)),
+    # norms & anything 1-D: replicate
+    (r"(ln1|ln2|ln_x|ln_f|ln_enc|ln_dec)/(scale|bias)$", (None,)),
+)
+
+
+def path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# Expert-parallel placement: 'model' (default, Switch/GShard style: the
+# all-to-all shares the TP axis) or 'data' (DeepSpeed-MoE style: expert
+# weights live on the DP axis — no FSDP weight all-gather for experts,
+# dispatch a2a crosses the data axis instead). §Perf hillclimb B.
+_EP = {"axis": "model"}
+
+
+def set_ep_axis(axis: str) -> None:
+    assert axis in ("model", "data")
+    _EP["axis"] = axis
+
+
+def param_pspec(path: str, ndim: int) -> P:
+    if _EP["axis"] == "data" and re.search(r"moe/w[igd]$", path):
+        # wi/wg: (E, d, f) -> E over data, f over model;
+        # wd:    (E, f, d) -> E over data, f over model
+        spec = ("data", None, "model") if not path.endswith("wd") \
+            else ("data", "model", None)
+        if ndim > 3:
+            spec = (None,) * (ndim - 3) + spec
+        return P(*spec)
+    spec: Optional[Tuple] = None
+    for pat, sp in _RULES:
+        if re.search(pat, path):
+            spec = sp
+            break
+    if spec is None:
+        spec = (None,) * ndim  # replicate unknowns (safe default)
+    if len(spec) < ndim:  # stacked group/layer leading axes
+        spec = (None,) * (ndim - len(spec)) + tuple(spec)
+    assert len(spec) == ndim, (path, spec, ndim)
+    return P(*spec)
+
+
+def sanitize_spec(mesh, spec: P, shape) -> P:
+    """Drop mesh axes from dims they don't divide (e.g. whisper's 51865
+    vocab on a 16-way model axis -> replicate that dim)."""
+    out = []
+    for ax, dim in zip(spec, shape):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(ax if dim % n == 0 else None)
+    return P(*out)
+
+
+def param_shardings(mesh, abstract_params):
+    """NamedSharding tree for an abstract (eval_shape) param tree."""
+    def one(path, leaf):
+        spec = param_pspec(path_str(path), leaf.ndim)
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+_STACKED_RE = re.compile(r"^(groups|enc_blocks|dec_blocks)/")
+
+
+def _stack_skip(path: str) -> int:
+    """Parameters under a scanned stack have a leading layer axis that
+    lax.scan slices each iteration — it must stay UNSHARDED, otherwise XLA
+    hoists a full all-gather of the stacked tensor out of the loop."""
+    return 1 if _STACKED_RE.search(path) else 0
+
+
+def zero_pspec(path: str, shape: Tuple[int, ...], data_size: int,
+               skip: int | None = None) -> P:
+    """ZeRO/FSDP: param spec plus 'data' sharding on the first eligible
+    dim (unsharded, divisible) — skipping the scanned stack axis."""
+    base = list(param_pspec(path, len(shape)))
+    skip = _stack_skip(path) if skip is None else skip
+
+    def _used(ax):
+        return [ax] if isinstance(ax, str) else list(ax or ())
+
+    in_use = {a for ax in base for a in _used(ax)}
+    if "data" in in_use:          # e.g. EP-over-data expert weights
+        return P(*base)
+    for i in range(skip, len(shape)):
+        ax, dim = base[i], shape[i]
+        if ax is None and dim % data_size == 0 and dim >= data_size:
+            base[i] = "data"
+            break
+    return P(*base)
+
+
+def grad_shardings(mesh, abstract_params, zero: bool = True):
+    """Sharding for gradient accumulators: param spec + 'data' sharding of
+    the first divisible unsharded dim (ZeRO-2: grads live reduce-scattered
+    across the data axis during accumulation)."""
+    data_size = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        ps = path_str(path)
+        spec = zero_pspec(ps, leaf.shape, data_size) if zero \
+            else param_pspec(ps, leaf.ndim)
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def opt_state_shardings(mesh, abstract_opt_state, zero: bool = True):
+    data_size = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        ps = path_str(path)
+        # strip AdamState prefix (mu/..., nu/..., index keys) for matching
+        ps = re.sub(r"^(mu|nu|momentum|[01])/", "", ps)
+        if not zero:
+            spec = param_pspec(ps, leaf.ndim)
+        else:
+            spec = zero_pspec(ps, leaf.shape, data_size)
+        return NamedSharding(mesh, sanitize_spec(mesh, spec, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, abstract_opt_state)
+
+
+# ------------------------------------------------ activation constraints ----
+
+_ACT: dict = {"enabled": False, "batch": ("data",), "seq": None}
+_PARAM_RESHARD: dict = {"enabled": False, "mesh": None}
+
+
+def set_param_resharding(mesh) -> None:
+    """FSDP mode: inside the layer scan, constrain the per-iteration param
+    slice to its TP-only spec. The data-axis all-gather then happens on ONE
+    group's weights per step inside the loop (and its transpose is a
+    per-group reduce-scatter of grads), instead of XLA hoisting a full
+    all-gather of the stacked weights out of the loop."""
+    _PARAM_RESHARD["enabled"] = True
+    _PARAM_RESHARD["mesh"] = mesh
+
+
+def clear_param_resharding() -> None:
+    _PARAM_RESHARD["enabled"] = False
+    _PARAM_RESHARD["mesh"] = None
+
+
+def constrain_group_params(gp):
+    """FSDP in-loop resharding with a custom VJP:
+
+    forward : constrain each param slice to its TP-only spec -> the 'data'
+              all-gather of ONE group's weights happens inside the loop;
+    backward: cast the weight cotangent to the PARAM dtype (bf16) and
+              constrain it to the FSDP grad spec -> the backward scan's
+              stacked ys buffer is bf16 and reduce-scattered over 'data'
+              instead of an fp32 full replica (85 GiB/device at 340B).
+    """
+    if not _PARAM_RESHARD["enabled"]:
+        return gp
+    mesh = _PARAM_RESHARD["mesh"]
+    data_size = mesh.shape.get("data", 1)
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(gp)
+    paths = [path_str(p) for p, _ in flat]
+    leaves = [l for _, l in flat]
+    fwd_specs = [sanitize_spec(mesh, param_pspec(p, l.ndim), l.shape)
+                 for p, l in zip(paths, leaves)]
+    # cotangent spec: TP spec + 'data' on the first eligible dim (the
+    # slice has no stack axis, so skip=0)
+    bwd_specs = [sanitize_spec(mesh, zero_pspec(p, l.shape, data_size,
+                                                skip=0), l.shape)
+                 for p, l in zip(paths, leaves)]
+    dtypes = [l.dtype for l in leaves]
+
+    @jax.custom_vjp
+    def reshard(*ls):
+        return tuple(jax.lax.with_sharding_constraint(l, s)
+                     for l, s in zip(ls, fwd_specs))
+
+    def fwd(*ls):
+        return reshard(*ls), None
+
+    def bwd(_, dls):
+        return tuple(
+            jax.lax.with_sharding_constraint(d.astype(dt), s)
+            for d, dt, s in zip(dls, dtypes, bwd_specs))
+
+    reshard.defvjp(fwd, bwd)
+    return jax.tree_util.tree_unflatten(tdef, reshard(*leaves))
+
+
+def set_activation_sharding(batch_axes: Sequence[str],
+                            seq_axis: Optional[str] = None):
+    """Enable with_sharding_constraint hooks inside model code.
+    seq_axis='model' activates sequence partitioning (SP) of the residual
+    stream between blocks."""
+    _ACT["enabled"] = True
+    _ACT["batch"] = tuple(batch_axes)
+    _ACT["seq"] = seq_axis
+
+
+def clear_activation_sharding():
+    _ACT["enabled"] = False
+    _ACT["seq"] = None
+
+
+def constrain(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """kind: 'residual' (B,S,d) | 'logits' (B,S,V) | 'batch' (B, ...)."""
+    if not _ACT["enabled"]:
+        return x
+    b = tuple(_ACT["batch"]) if len(_ACT["batch"]) > 1 else _ACT["batch"][0]
+    if kind == "residual":
+        spec = P(b, _ACT["seq"], None)
+    elif kind == "logits":
+        spec = P(b, None, "model")
+    elif kind == "batch":
+        spec = P(b, *([None] * (x.ndim - 1)))
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

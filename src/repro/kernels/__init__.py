@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §3).
+
+Each kernel directory holds:
+  <name>.py — pl.pallas_call + BlockSpec VMEM tiling (the TPU target)
+  ops.py    — jit'd public wrapper (auto-interpret on CPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels: hyper_step (fused hypersolver update — the paper's Eq. 5 inner
+loop), flash_attention (blocked causal GQA), rwkv6_scan (chunked WKV6
+recurrence), rglru_scan (chunked gated linear recurrence).
+"""
+
+
+def on_cpu() -> bool:
+    import jax
+    return jax.default_backend() == "cpu"

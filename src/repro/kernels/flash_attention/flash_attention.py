@@ -1,0 +1,103 @@
+"""Blocked causal GQA attention with online softmax (FlashAttention
+adapted to the TPU memory hierarchy).
+
+Grid: (batch*kv_head, q_group, nq) — one program per (bh pair, q block);
+the kv loop runs inside the kernel over ``pl.ds`` dynamic slices of the
+kv panel resident in VMEM. Blocks are MXU-aligned (bq = bk = 128,
+d_head <= 256 lanes). Online softmax carries (m, l, acc) in fp32.
+
+Causality: kv blocks strictly above the diagonal are never visited — the
+fori upper bound is derived from the q block index — so the kernel does
+~(S/bk)^2/2 block-dots instead of masking a dense S^2. This is the same
+2x win FlashAttention gets on GPU, realized through the loop bound rather
+than warp predication (HARDWARE ADAPTATION, DESIGN.md §3). A sliding
+window additionally raises the loop LOWER bound, making local attention
+O(S * window).
+
+VMEM budget: the kv panel is (S, d_head) per program — fine to S ~ 8k at
+d_head 128; longer sequences run under a sequence-sharded layout (SP)
+where the per-shard S stays bounded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         *, causal: bool = True, window: int | None = None,
+                         bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                         seq_k: int | None = None,
+                         interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) with H % KV == 0.
+    Returns (B, H, S, hd). S must divide by the block sizes (ops.py pads).
+    """
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    assert H % KV == 0 and S % bq == 0 and S % bk == 0, (H, KV, S, bq, bk)
+    group = H // KV
+    scale = hd ** -0.5
+    seq_k = S if seq_k is None else seq_k  # true (unpadded) kv length
+    grid = (B * KV, group, S // bq)
+
+    q_spec = pl.BlockSpec(
+        (1, 1, bq, hd),
+        lambda bh, g, i: (bh // KV, (bh % KV) * group + g, i, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, S, hd), lambda bh, g, i: (bh // KV, bh % KV, 0, 0))
+
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        iq = pl.program_id(2)
+        q_ = q_ref[0, 0].astype(jnp.float32) * scale     # (bq, hd)
+
+        def body(j, carry):
+            acc, m, l = carry
+            kk = k_ref[0, 0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+            vv = v_ref[0, 0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+            s = jax.lax.dot_general(q_, kk, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            ok = k_pos < seq_k
+            if causal:
+                ok = ok & (k_pos <= q_pos)
+            if window is not None:
+                ok = ok & (q_pos - k_pos < window)
+            s = jnp.where(ok, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+                p, vv, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return acc_new, m_new, l_new
+
+        hi = (jax.lax.div(iq * jnp.int32(bq) + jnp.int32(bq + bk - 1),
+                          jnp.int32(bk))
+              if causal else jnp.int32(S // bk))
+        lo = (jnp.maximum(jnp.int32(0),
+                          jax.lax.div(iq * jnp.int32(bq)
+                                      - jnp.int32(window - 1),
+                                      jnp.int32(bk)))
+              if window is not None else jnp.int32(0))
+        acc0 = jnp.zeros((bq, hd), jnp.float32)
+        m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((bq,), jnp.float32)
+        acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc0, m0, l0))
+        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(
+            o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,40 @@
+"""Public flash-attention wrapper: (B, S, H, hd) layout in/out (matching
+nn/attention.py), sequence padding to block multiples, CPU auto-interpret.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_cpu
+from repro.kernels.flash_attention.flash_attention import (
+    DEFAULT_BK, DEFAULT_BQ, flash_attention_bhsd,
+)
+
+
+@partial(jax.jit,
+         static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) -> (B, S, H, hd)."""
+    interpret = on_cpu() if interpret is None else interpret
+    B, S, H, hd = q.shape
+    blk = max(bq, bk)
+    S_pad = -(-S // blk) * blk
+    pad = S_pad - S
+
+    def prep(x):  # (B, S, n, hd) -> (B, n, S_pad, hd)
+        x = jnp.moveaxis(x, 1, 2)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x
+
+    o = flash_attention_bhsd(prep(q), prep(k), prep(v), causal=causal,
+                             window=window, bq=bq, bk=bk, seq_k=S,
+                             interpret=interpret)
+    o = jnp.moveaxis(o, 1, 2)
+    return o[:, :S] if pad else o

@@ -1,0 +1,27 @@
+"""Dense softmax-attention oracle (fp32) for the flash kernel."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    group = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, group, S, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bngsh,bnth->bngst", qf, kf) * hd ** -0.5
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok = ok & (k_pos <= q_pos)
+    if window is not None:
+        ok = ok & (q_pos - k_pos < window)
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngst,bnth->bngsh", p, vf)
+    return o.reshape(B, H, S, hd).astype(q.dtype)

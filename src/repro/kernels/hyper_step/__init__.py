@@ -1,0 +1,1 @@
+from repro.kernels.hyper_step.ops import hyper_step  # noqa: F401

@@ -1,0 +1,32 @@
+"""Public wrapper: arbitrary-shape pytree-leaf update with padding to the
+(ROWS, 128) tile grid; auto-interpret on CPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_cpu
+from repro.kernels.hyper_step.hyper_step import LANES, ROWS, hyper_step_2d
+
+
+@partial(jax.jit, static_argnames=("eps", "order", "interpret"))
+def hyper_step(z: jnp.ndarray, psi: jnp.ndarray, g: jnp.ndarray,
+               eps: float, order: int = 1, interpret: bool | None = None):
+    """Fused z + eps*psi + eps^{order+1}*g over any-shaped arrays."""
+    interpret = on_cpu() if interpret is None else interpret
+    shape = z.shape
+    n = z.size
+    cols = LANES
+    rows = -(-n // cols)
+    pad_rows = (-rows) % ROWS
+    total = (rows + pad_rows) * cols
+
+    def flat(x):
+        x = x.reshape(-1)
+        return jnp.pad(x, (0, total - n)).reshape(rows + pad_rows, cols)
+
+    out = hyper_step_2d(flat(z), flat(psi), flat(g), eps, order,
+                        interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused hypersolver update."""
+import jax.numpy as jnp
+
+
+def hyper_step_ref(z, psi, g, eps: float, order: int):
+    z32 = z.astype(jnp.float32)
+    out = z32 + eps * psi.astype(jnp.float32) \
+        + (eps ** (order + 1)) * g.astype(jnp.float32)
+    return out.astype(z.dtype)

@@ -1,0 +1,26 @@
+"""Public RG-LRU scan wrapper: padding (a=1, b=0 pass-through) + interpret
+auto-detect."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_cpu
+from repro.kernels.rglru_scan.rglru_scan import BW, CHUNK, rglru_scan_btw
+
+
+@partial(jax.jit, static_argnames=("chunk", "bw", "interpret"))
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, *, chunk: int = CHUNK,
+               bw: int = BW, interpret: bool | None = None):
+    """a, b: (B, T, W) -> fp32 (B, T, W) recurrence outputs."""
+    interpret = on_cpu() if interpret is None else interpret
+    B, T, W = a.shape
+    T_pad = (-(-T // chunk)) * chunk
+    W_pad = (-(-W // bw)) * bw
+    ap = jnp.pad(a, ((0, 0), (0, T_pad - T), (0, W_pad - W)),
+                 constant_values=1.0)
+    bp = jnp.pad(b, ((0, 0), (0, T_pad - T), (0, W_pad - W)))
+    h = rglru_scan_btw(ap, bp, chunk=chunk, bw=bw, interpret=interpret)
+    return h[:, :T, :W]

@@ -1,0 +1,19 @@
+"""Oracle: sequential linear recurrence h_t = a_t h_{t-1} + b_t."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """a, b: (B, T, W) -> (B, T, W) fp32."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                    jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,69 @@
+"""Chunked gated-linear-recurrence kernel (RG-LRU inner scan):
+
+    h_t = a_t * h_{t-1} + b_t        (elementwise over width)
+
+Grid: (B, W/bw parallel, T/CHUNK sequential); fp32 carry (1, bw) in VMEM
+scratch across the chunk axis. The unrolled-by-8 inner loop gives the VPU
+longer dependency-free runs per 128-lane vector (the recurrence itself is
+a strict serial chain per lane — the parallelism is the 128-wide lane
+axis and the (B, W/bw) grid, NOT time; see DESIGN.md §3 for why the
+associative-scan form is used at training time and this kernel at
+long-context decode/prefill time where its O(1) state memory wins).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 256
+BW = 128
+
+
+def _kernel(a_ref, b_ref, o_ref, h_ref, *, chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)   # (chunk, bw)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        h, out = carry
+        a_t = jax.lax.dynamic_slice_in_dim(a, t, 1, 0)
+        b_t = jax.lax.dynamic_slice_in_dim(b, t, 1, 0)
+        h = a_t * h + b_t
+        out = jax.lax.dynamic_update_slice_in_dim(out, h, t, 0)
+        return h, out
+
+    h0 = h_ref[...]
+    out0 = jnp.zeros_like(a)
+    h_fin, out = jax.lax.fori_loop(0, chunk, step, (h0, out0))
+    h_ref[...] = h_fin
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def rglru_scan_btw(a: jnp.ndarray, b: jnp.ndarray, *, chunk: int = CHUNK,
+                   bw: int = BW, interpret: bool = False):
+    """a, b: (B, T, W) -> h: (B, T, W) fp32. T % chunk == 0, W % bw == 0."""
+    B, T, W = a.shape
+    assert T % chunk == 0 and W % bw == 0, (T, W)
+    grid = (B, W // bw, T // chunk)
+    spec = pl.BlockSpec((1, chunk, bw), lambda i, j, c: (i, c, j))
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+        if not interpret else None,
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,34 @@
+"""Public WKV6 wrapper: (B, T, H, D) layout, chunk padding (pad region
+uses w = 1, k = 0 so the state passes through unchanged), CPU interpret."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_cpu
+from repro.kernels.rwkv6_scan.rwkv6_scan import CHUNK, wkv6_bthd
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk: int = CHUNK,
+         interpret: bool | None = None):
+    """r,k,v,w: (B, T, H, D); u: (H, D). Returns o: (B, T, H, D) fp32."""
+    interpret = on_cpu() if interpret is None else interpret
+    B, T, H, D = r.shape
+    T_pad = -(-T // chunk) * chunk
+    pad = T_pad - T
+
+    def to_bh(x, pad_value=0.0):
+        x = jnp.moveaxis(x, 2, 1).reshape(B * H, T, D)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=pad_value)
+        return x
+
+    o = wkv6_bthd(to_bh(r), to_bh(k), to_bh(v), to_bh(w, 1.0),
+                  jnp.broadcast_to(u[None], (B, H, D)).reshape(B * H, 1, D),
+                  chunk=chunk, interpret=interpret)
+    o = o[:, :T].reshape(B, H, T, D)
+    return jnp.moveaxis(o, 1, 2)

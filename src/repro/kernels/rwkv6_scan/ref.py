@@ -1,0 +1,10 @@
+"""Oracle: exact lax.scan WKV6 recurrence (shared with nn/rwkv6.py)."""
+import jax.numpy as jnp
+
+from repro.nn.rwkv6 import wkv6_scan_ref
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,v,w: (B, T, H, D); u: (H, D) -> o (B, T, H, D) fp32."""
+    o, _ = wkv6_scan_ref(r, k, v, w, u)
+    return o.astype(jnp.float32)

@@ -1,0 +1,82 @@
+"""Chunked WKV6 recurrence kernel (RWKV-6 'Finch').
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Grid: (B*H parallel, T/CHUNK sequential). The (D, D) fp32 state lives in a
+VMEM scratch buffer and is carried across the sequential chunk axis —
+only (CHUNK, D) input panels stream from HBM per step, so HBM traffic is
+O(T D) instead of the O(T D^2) a naive state-materializing approach
+would pay. Inside a chunk the recurrence is stepped on the VPU
+(elementwise (D, D) FMAs); the per-channel data-dependent decay makes the
+inter-token dependence diagonal, which is why no MXU matmul form exists
+without log-space renormalization (HARDWARE ADAPTATION, DESIGN.md §3 —
+the CUDA kernel's per-thread sequential loop maps to a VPU-vectorized
+(D,D) loop here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 128
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *,
+            chunk: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)   # (chunk, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)   # (1, D) broadcast row
+
+    def step(t, carry):
+        S, out = carry
+        k_t = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)      # (1, D)
+        v_t = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)
+        r_t = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)
+        w_t = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)
+        kv = k_t.T * v_t                                    # (D, D) outer
+        o_t = r_t @ (S + u.T * kv)                          # (1, D)
+        S_new = w_t.T * S + kv
+        out = jax.lax.dynamic_update_slice_in_dim(out, o_t, t, 0)
+        return S_new, out
+
+    S0 = state_ref[...]
+    out0 = jnp.zeros((chunk, r.shape[-1]), jnp.float32)
+    S_fin, out = jax.lax.fori_loop(0, chunk, step, (S0, out0))
+    state_ref[...] = S_fin
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def wkv6_bthd(r, k, v, w, u, *, chunk: int = CHUNK,
+              interpret: bool = False):
+    """r,k,v,w: (BH, T, D); u: (BH, 1, D). Returns o: (BH, T, D) fp32.
+    T must be a chunk multiple (ops.py pads with w=1, k=0)."""
+    BH, T, D = r.shape
+    assert T % chunk == 0, (T, chunk)
+    grid = (BH, T // chunk)
+    x_spec = pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0))
+    u_spec = pl.BlockSpec((1, 1, D), lambda b, c: (b, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[x_spec, x_spec, x_spec, x_spec, u_spec],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, T, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")) if not interpret
+        else None,
+        interpret=interpret,
+    )(r, k, v, w, u)

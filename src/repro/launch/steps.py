@@ -1,0 +1,299 @@
+"""pjit-able train / prefill / serve step builders + ShapeDtypeStruct input
+specs for every (arch x shape) cell.
+
+These are shared by the dry-run (AOT lower+compile on the production mesh)
+and the real training/serving loops. Conventions:
+
+  * train cell   = one optimizer step (microbatched grad accumulation,
+    remat policy per config), donated params/opt-state.
+  * prefill cell = full-sequence forward scoring pass (logits) — the
+    compute-bound half of serving. (Cache-materializing prefill is a
+    documented simplification; see EXPERIMENTS.md §Dry-run.)
+  * decode cell  = one cached token step (serve_step): embed -> stacked
+    per-group cache updates -> logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.launch.mesh import batch_axes
+from repro.models import encdec as whisper
+from repro.models.lm import (
+    dtype_of, init_lm, init_lm_cache, lm_decode_step, lm_forward, lm_loss,
+)
+from repro.optim import Optimizer, adamw, apply_updates, clip_by_global_norm
+from repro.optim.schedules import linear_warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSettings:
+    microbatches: int = 1
+    remat: str = "dots"            # none | dots | full
+    zero_opt: bool = True          # ZeRO-1 opt-state sharding
+    seq_shard: bool = False        # SP: shard residual seq over 'model'
+    fsdp: bool = False             # params data+model sharded (>= ~100B)
+    grad_clip: float = 1.0
+    lr: float = 3e-4
+    moment_dtype: str = "float32"  # float32 | bfloat16
+    acc_dtype: str = "float32"     # grad-accumulator dtype (bf16 >= ~340B)
+
+
+def make_optimizer(s: StepSettings) -> Optimizer:
+    return adamw(linear_warmup_cosine(s.lr, s.lr * 0.1, 200, 10_000),
+                 weight_decay=0.1,
+                 moment_dtype=dtype_of(s.moment_dtype))
+
+
+# -------------------------------------------------------------- specs ----
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_params(cfg: ArchConfig):
+    init = (whisper.init_encdec if cfg.is_encdec else init_lm)
+    return jax.eval_shape(partial(init, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg.dtype)
+    if cfg.is_encdec:
+        L = cfg.max_target_len
+        if shape.kind == "train":
+            return {"frames": _sds((B, S, cfg.d_model), dt),
+                    "tokens": _sds((B, L), jnp.int32),
+                    "targets": _sds((B, L), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"frames": _sds((B, S, cfg.d_model), dt),
+                    "tokens": _sds((B, L), jnp.int32)}
+        # decode: cross KV over S encoder frames, self cache of max_target
+        return {
+            "token": _sds((B,), jnp.int32),
+            "caches": {
+                "self": {
+                    "k": _sds((cfg.dec_layers, B, L, cfg.n_kv, cfg.d_head), dt),
+                    "v": _sds((cfg.dec_layers, B, L, cfg.n_kv, cfg.d_head), dt),
+                },
+                "cross": {
+                    "k": _sds((cfg.dec_layers, B, S, cfg.n_kv, cfg.d_head), dt),
+                    "v": _sds((cfg.dec_layers, B, S, cfg.n_kv, cfg.d_head), dt),
+                },
+            },
+            "cur_index": _sds((), jnp.int32),
+        }
+    # decoder-only families
+    fe = None
+    if cfg.frontend == "patches":
+        fe = _sds((B, cfg.n_frontend_tokens, cfg.d_model), dt)
+    if shape.kind == "train":
+        out = {"tokens": _sds((B, S), jnp.int32),
+               "targets": _sds((B, S), jnp.int32)}
+        if fe is not None:
+            out["frontend"] = fe
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32)}
+        if fe is not None:
+            out["frontend"] = fe
+        return out
+    caches = jax.eval_shape(partial(init_lm_cache, cfg, B, S))
+    return {"token": _sds((B,), jnp.int32), "caches": caches,
+            "cur_index": _sds((), jnp.int32)}
+
+
+# ---------------------------------------------------------- shardings ----
+
+def _batch_spec(mesh, B: int, extra_dims: int) -> P:
+    ba = batch_axes(mesh)
+    n = 1
+    for a in ba:
+        n *= mesh.shape[a]
+    first = ba if B % n == 0 else None
+    return P(first, *([None] * extra_dims))
+
+
+def data_shardings(mesh, cfg: ArchConfig, specs) -> Any:
+    """Shardings for the input_specs tree."""
+    def one(path, leaf):
+        ps = shd.path_str(path)
+        B = leaf.shape[0] if leaf.ndim else 1
+        if ps in ("tokens", "targets", "token"):
+            return NamedSharding(mesh, _batch_spec(mesh, B, leaf.ndim - 1))
+        if ps in ("frames", "frontend"):
+            return NamedSharding(mesh, _batch_spec(mesh, B, leaf.ndim - 1))
+        if ps == "cur_index":
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, cache_pspec(mesh, ps, leaf))
+    return jax.tree_util.tree_map_with_path(one, specs)
+
+
+def cache_pspec(mesh, path: str, leaf) -> P:
+    """Cache sharding: batch over data axes when divisible, else the
+    longest non-head axis; head/width axes over 'model'."""
+    ba = batch_axes(mesh)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    n_m = mesh.shape["model"]
+    shape = leaf.shape
+    spec = [None] * leaf.ndim
+
+    def try_axis(i, axes, size_needed):
+        if spec[i] is None and shape[i] % size_needed == 0 \
+                and shape[i] >= size_needed:
+            spec[i] = axes
+            return True
+        return False
+
+    if path.endswith("/k") or path.endswith("/v"):
+        # (G?, B, S, KV, hd): model on KV if divisible else hd else S
+        kv_i, hd_i = leaf.ndim - 2, leaf.ndim - 1
+        s_i, b_i = leaf.ndim - 3, leaf.ndim - 4
+        (try_axis(kv_i, "model", n_m) or try_axis(hd_i, "model", n_m)
+         or try_axis(s_i, "model", n_m))
+        (try_axis(b_i, ba, n_b) or try_axis(s_i, ba, n_b))
+        return P(*spec)
+    if path.endswith("_scale"):
+        # int8 KV scales (G?, B, S, KV)
+        kv_i, s_i, b_i = leaf.ndim - 1, leaf.ndim - 2, leaf.ndim - 3
+        (try_axis(kv_i, "model", n_m) or try_axis(s_i, "model", n_m))
+        (try_axis(b_i, ba, n_b) or try_axis(s_i, ba, n_b))
+        return P(*spec)
+    nd = leaf.ndim  # tail-layer caches lack the leading group axis
+    if path.endswith("/S"):          # (G?, B, H, hd, hd)
+        try_axis(nd - 3, "model", n_m)
+        try_axis(nd - 4, ba, n_b)
+        return P(*spec)
+    if path.endswith("x_tmix") or path.endswith("x_cmix"):  # (G?, B, d)
+        try_axis(nd - 1, "model", n_m)
+        try_axis(nd - 2, ba, n_b)
+        return P(*spec)
+    if path.endswith("/conv"):       # (G?, B, 3, W)
+        try_axis(nd - 1, "model", n_m)
+        try_axis(nd - 3, ba, n_b)
+        return P(*spec)
+    if path.endswith("/h"):          # (G?, B, W)
+        try_axis(nd - 1, "model", n_m)
+        try_axis(nd - 2, ba, n_b)
+        return P(*spec)
+    return P(*spec)
+
+
+# --------------------------------------------------------------- steps ----
+
+def split_microbatches(batch: Dict[str, jnp.ndarray], m: int):
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+
+
+def make_train_step(cfg: ArchConfig, settings: StepSettings, mesh):
+    """Returns (jit_step, abstract trees + shardings) for one optimizer
+    update with microbatched gradient accumulation."""
+    opt = make_optimizer(settings)
+
+    def loss_fn(p, mb):
+        if cfg.is_encdec:
+            return whisper.encdec_loss(p, cfg, mb["frames"], mb["tokens"],
+                                       mb["targets"], remat=settings.remat)
+        return lm_loss(p, cfg, mb["tokens"], mb["targets"],
+                       frontend=mb.get("frontend"), remat=settings.remat)
+
+    a_params0 = abstract_params(cfg)
+    g_sh = shd.grad_shardings(mesh, a_params0, zero=settings.zero_opt)
+
+    def constrain_grads(g):
+        # ZeRO-2: keep the fp32 accumulator reduce-scattered over 'data'
+        # (an un-sharded fp32 replica of a 340B model is 85 GiB/device).
+        # NamedShardings carry their mesh -> no ambient mesh ctx needed.
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, g, g_sh)
+
+    def train_step(params, opt_state, step, batch):
+        m = settings.microbatches
+        if m == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            mbs = split_microbatches(batch, m)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g = constrain_grads(g)  # reduce-scatter before accumulate
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), met
+
+            acc_dt = dtype_of(settings.acc_dtype)
+            g0 = constrain_grads(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params))
+            (grads, loss), mets = jax.lax.scan(acc, (g0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+            loss = loss / m
+            metrics = jax.tree_util.tree_map(lambda a: jnp.mean(a, 0), mets)
+        grads, gnorm = clip_by_global_norm(grads, settings.grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    a_params = abstract_params(cfg)
+    a_opt = jax.eval_shape(opt.init, a_params)
+    p_sh = (shd.grad_shardings(mesh, a_params, zero=True)
+            if settings.fsdp else shd.param_shardings(mesh, a_params))
+    o_sh = shd.opt_state_shardings(mesh, a_opt, zero=settings.zero_opt)
+    jit_step = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, NamedSharding(mesh, P()), None),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return jit_step, opt, (a_params, a_opt, p_sh, o_sh)
+
+
+def _param_sh(cfg, settings, mesh):
+    a_params = abstract_params(cfg)
+    p_sh = (shd.grad_shardings(mesh, a_params, zero=True)
+            if settings.fsdp else shd.param_shardings(mesh, a_params))
+    return a_params, p_sh
+
+
+def make_prefill_step(cfg: ArchConfig, settings: StepSettings, mesh):
+    def prefill(params, batch):
+        if cfg.is_encdec:
+            enc = whisper.encode(params, cfg, batch["frames"],
+                                 remat=settings.remat)
+            return whisper.decode_train(params, cfg, enc, batch["tokens"],
+                                        remat=settings.remat)
+        logits, _ = lm_forward(params, cfg, batch["tokens"],
+                               frontend=batch.get("frontend"),
+                               remat=settings.remat)
+        return logits
+
+    a_params, p_sh = _param_sh(cfg, settings, mesh)
+    return jax.jit(prefill, in_shardings=(p_sh, None)), (a_params, p_sh)
+
+
+def make_serve_step(cfg: ArchConfig, mesh, settings: StepSettings = None):
+    settings = settings or StepSettings()
+
+    def serve(params, token, caches, cur_index):
+        if cfg.is_encdec:
+            return whisper.encdec_decode_step(params, cfg, token, caches,
+                                              cur_index)
+        return lm_decode_step(params, cfg, token, caches, cur_index)
+
+    a_params, p_sh = _param_sh(cfg, settings, mesh)
+    return jax.jit(serve, in_shardings=(p_sh, None, None, None),
+                   donate_argnums=(2,)), (a_params, p_sh)

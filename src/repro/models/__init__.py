@@ -1,0 +1,3 @@
+from repro.models.lm import (  # noqa: F401
+    block_pattern, init_lm, lm_forward, lm_loss, init_lm_cache, lm_decode_step,
+)

@@ -1,0 +1,159 @@
+"""Continuous-depth mode for the unified LM — the paper's technique at
+framework scale (DESIGN.md §4).
+
+A pre-norm residual stack is read as the Euler discretization of a depth
+ODE with piecewise-constant parameters theta(s) (paper Eq. 1 allows
+s-dependent parameters):
+
+    f(s, h) = n_groups * (group_apply(theta(floor(s * n_groups)), h) - h)
+
+Euler with K = n_groups steps reproduces the discrete network EXACTLY
+(tested); K < n_groups trades NFE (~ layer evaluations) for accuracy, and a
+HyperEuler correction g_omega — trained by residual fitting against the
+full-depth trajectory (the LM analogue of the paper's dopri5 ground truth)
+— recovers most of the lost accuracy. This transplants the paper's CNF
+result (2-NFE sampling) to LM inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.core import FixedGrid, HyperSolver, get_tableau
+from repro.core.residual import combined_loss
+from repro.models.lm import (
+    ZERO_AUX, _embed, _readout, block_apply, dtype_of, group_layout,
+)
+from repro.nn.module import truncated_normal_init
+
+
+def _group_apply(params, cfg: ArchConfig, gp, h):
+    pattern, _, _ = group_layout(cfg)
+    aux = ZERO_AUX()
+    for i, kind in enumerate(pattern):
+        h, aux = block_apply(gp[f"b{i}"], cfg, kind, h, aux)
+    return h
+
+
+def depth_field(params, cfg: ArchConfig):
+    """VectorField f(s, h) over the residual stream (full sequence)."""
+    _, n_groups, _ = group_layout(cfg)
+
+    def f(s, h):
+        idx = jnp.clip(jnp.floor(s * n_groups).astype(jnp.int32), 0,
+                       n_groups - 1)
+        gp = jax.tree_util.tree_map(lambda p: p[idx], params["groups"])
+        h_out = _group_apply(params, cfg, gp, h)
+        return (n_groups * (h_out - h)).astype(h.dtype)
+
+    return f
+
+
+def discrete_depth_trajectory(params, cfg: ArchConfig, tokens: jnp.ndarray,
+                              frontend: Optional[jnp.ndarray] = None):
+    """Residual-stream states at every group boundary — the 'exact'
+    solution checkpoints for hypersolver fitting (paper Sec. 3.2; ground
+    truth here is the deployed full-depth network itself)."""
+    pattern, n_groups, tail = group_layout(cfg)
+    h0 = _embed(params, cfg, tokens)
+    if frontend is not None:
+        from repro.nn.module import dense
+        fe = dense(params["patch_proj"], frontend.astype(h0.dtype))
+        h0 = jnp.concatenate([fe, h0], axis=1)
+
+    def body(h, gp):
+        h_out = _group_apply(params, cfg, gp, h)
+        return h_out, h_out
+
+    hT, traj = jax.lax.scan(body, h0, params["groups"])
+    full = jnp.concatenate([h0[None], traj], axis=0)  # (n_groups+1, B, S, d)
+    return full
+
+
+# --------------------------------------------------- g_omega for the LM ----
+
+def lm_g_init(key, cfg: ArchConfig, rank: int = 64, n_fourier: int = 8,
+              param_dtype=None):
+    pd = param_dtype or dtype_of(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "w_h": truncated_normal_init(k1, (d, rank), d ** -0.5, pd),
+        "w_dh": truncated_normal_init(k2, (d, rank), d ** -0.5, pd),
+        "w_s": truncated_normal_init(k3, (2 * n_fourier + 1, rank), 0.3, pd),
+        # zero-init readout: correction starts at exactly 0 (pure base solver)
+        "w_out": jnp.zeros((rank, d), pd),
+    }
+
+
+def _fourier(s, n: int, dtype):
+    s = jnp.asarray(s, jnp.float32)
+    ks = jnp.arange(1, n + 1, dtype=jnp.float32)
+    feats = jnp.concatenate([jnp.sin(2 * jnp.pi * ks * s),
+                             jnp.cos(2 * jnp.pi * ks * s),
+                             jnp.ones((1,), jnp.float32) * s])
+    return feats.astype(dtype)
+
+
+def lm_g_apply(gp, eps, s, x, h, dh):
+    """Correction net: rank-r MLP over (h, dh, s). MAC cost 3*d*r per token
+    — negligible next to the ~12 d^2 block cost (paper Sec. 6 overhead)."""
+    del eps, x
+    nf = (gp["w_s"].shape[0] - 1) // 2  # w_s: (2*n_fourier + 1, rank)
+    sf = _fourier(s, nf, h.dtype) @ gp["w_s"].astype(h.dtype)
+    pre = (h @ gp["w_h"].astype(h.dtype)
+           + dh.astype(h.dtype) @ gp["w_dh"].astype(h.dtype) + sf)
+    return (jnp.tanh(pre) @ gp["w_out"].astype(h.dtype)).astype(h.dtype)
+
+
+# ----------------------------------------------------------- inference ----
+
+def lm_forward_cdepth(params, cfg: ArchConfig, tokens: jnp.ndarray, K: int,
+                      solver: str = "euler", g_params: Any = None,
+                      frontend: Optional[jnp.ndarray] = None):
+    """Full-sequence scoring with a K-step (hyper)solved depth integration.
+
+    K == n_groups with solver='euler', g=None reproduces lm_forward exactly
+    (up to tail layers, which are always applied discretely).
+    """
+    pattern, n_groups, tail = group_layout(cfg)
+    h = _embed(params, cfg, tokens)
+    if frontend is not None:
+        from repro.nn.module import dense
+        fe = dense(params["patch_proj"], frontend.astype(h.dtype))
+        h = jnp.concatenate([fe, h], axis=1)
+    f = depth_field(params, cfg)
+    g = None
+    if g_params is not None:
+        g = lambda eps, s, z, dz: lm_g_apply(g_params, eps, s, None, z, dz)
+    hs = HyperSolver(tableau=get_tableau(solver), g=g)
+    grid = FixedGrid.over(0.0, 1.0, K)
+    h = hs.odeint(f, h, grid, return_traj=False)
+    aux = ZERO_AUX()
+    for i in range(tail):
+        h, aux = block_apply(params["tail"][f"t{i}"], cfg, pattern[i], h, aux)
+    return _readout(params, cfg, h)
+
+
+def cdepth_residual_loss(params, g_params, cfg: ArchConfig,
+                         tokens: jnp.ndarray, K: int,
+                         base_solver: str = "euler"):
+    """Residual-fitting loss for the LM hypersolver at mesh length K.
+
+    Ground truth = full-depth discrete trajectory subsampled at the K-mesh
+    (requires n_groups % K == 0).
+    """
+    _, n_groups, _ = group_layout(cfg)
+    assert n_groups % K == 0, (n_groups, K)
+    stride = n_groups // K
+    traj_full = discrete_depth_trajectory(params, cfg, tokens)
+    traj = traj_full[::stride]  # (K+1, B, S, d)
+    f = depth_field(params, cfg)
+    g = lambda eps, s, z, dz: lm_g_apply(g_params, eps, s, None, z, dz)
+    hs = HyperSolver(tableau=get_tableau(base_solver), g=g)
+    grid = FixedGrid.over(0.0, 1.0, K)
+    return combined_loss(hs, f, traj, grid, residual_weight=1.0)

@@ -1,0 +1,158 @@
+"""The paper's image-classification Neural ODEs (App. C.2), in JAX.
+
+MNIST-family (28x28x1):
+    aug: conv(1->12, k3)
+    f:   DepthCat -> conv(13->64, k3) -> tanh -> DepthCat ->
+         conv(65->12, k3)                       (channels 12-64-12, paper)
+    head: conv(12->1, k3) -> flatten -> linear(784->10)
+    g (HyperEuler): conv(25->64, k3) -> PReLU -> conv(64->12, k3)
+         (input = [z(12), dz(12), s(1)] = 25 channels, paper)
+
+CIFAR-family (32x32x3):
+    aug: conv(3->5, k3) (concat -> 8 channels)
+    f:   DepthCat -> conv(9->64) -> GN -> tanh -> DepthCat ->
+         conv(65->64) -> GN -> tanh -> conv(64->8)
+    head: conv(8->1) -> flatten -> linear(1024->10)
+    g:   conv(17->64, k5) -> PReLU -> conv(64->32, k5) -> PReLU ->
+         conv(32->8, k3)
+
+GroupNorm replaces the paper's BatchNorm inside f (running-stat BN is
+ill-defined along continuous depth; documented in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neural_ode import NeuralODE
+from repro.nn.conv_blocks import (
+    conv2d, conv2d_init, depth_cat, groupnorm, groupnorm_init, prelu,
+    prelu_init,
+)
+from repro.nn.module import dense_init
+
+
+def conv_macs(h, w, cin, cout, k):
+    return h * w * cin * cout * k * k
+
+
+def init_mnist_node(key):
+    ks = jax.random.split(key, 6)
+    params = {
+        "aug": conv2d_init(ks[0], 1, 12, 3),
+        "f1": conv2d_init(ks[1], 13, 64, 3),
+        "f2": conv2d_init(ks[2], 65, 12, 3),
+        "head_conv": conv2d_init(ks[3], 12, 1, 3),
+        "head_lin": dense_init(ks[4], 28 * 28, 10),
+    }
+    return params
+
+
+def mnist_f_apply(params, s, x, z):
+    h = depth_cat(z, s)
+    h = jnp.tanh(conv2d(params["f1"], h))
+    h = depth_cat(h, s)
+    return conv2d(params["f2"], h)
+
+
+def mnist_hx(params, x):
+    return conv2d(params["aug"], x)
+
+
+def mnist_hy(params, z):
+    h = conv2d(params["head_conv"], z)
+    return h.reshape(h.shape[0], -1) @ params["head_lin"]["kernel"]
+
+
+def mnist_node(key) -> Tuple[NeuralODE, dict]:
+    params = init_mnist_node(key)
+    node = NeuralODE(f_apply=mnist_f_apply, hx_apply=mnist_hx,
+                     hy_apply=mnist_hy, s_span=(0.0, 1.0))
+    return node, params
+
+
+def mnist_f_macs(hw: int = 28) -> int:
+    return conv_macs(hw, hw, 13, 64, 3) + conv_macs(hw, hw, 65, 12, 3)
+
+
+def init_mnist_hyper(key):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "c1": conv2d_init(k1, 25, 64, 3),
+        "a1": prelu_init(64),
+        "c2": conv2d_init(k2, 64, 12, 3),
+    }
+    p["c2"]["w"] = jnp.zeros_like(p["c2"]["w"])  # start at g == 0
+    return p
+
+
+def mnist_g_apply(gp, eps, s, x, z, dz):
+    h = depth_cat(jnp.concatenate([z, dz], axis=-1), s)  # 25 channels
+    h = prelu(gp["a1"], conv2d(gp["c1"], h))
+    return conv2d(gp["c2"], h)
+
+
+def mnist_g_macs(hw: int = 28) -> int:
+    return conv_macs(hw, hw, 25, 64, 3) + conv_macs(hw, hw, 64, 12, 3)
+
+
+# ------------------------------------------------------------- CIFAR ----
+
+def init_cifar_node(key):
+    ks = jax.random.split(key, 7)
+    return {
+        "aug": conv2d_init(ks[0], 3, 5, 3),
+        "f1": conv2d_init(ks[1], 9, 64, 3),
+        "gn1": groupnorm_init(64),
+        "f2": conv2d_init(ks[2], 65, 64, 3),
+        "gn2": groupnorm_init(64),
+        "f3": conv2d_init(ks[3], 64, 8, 3),
+        "head_conv": conv2d_init(ks[4], 8, 1, 3),
+        "head_lin": dense_init(ks[5], 32 * 32, 10),
+    }
+
+
+def cifar_f_apply(params, s, x, z):
+    h = depth_cat(z, s)
+    h = jnp.tanh(groupnorm(params["gn1"], conv2d(params["f1"], h)))
+    h = depth_cat(h, s)
+    h = jnp.tanh(groupnorm(params["gn2"], conv2d(params["f2"], h)))
+    return conv2d(params["f3"], h)
+
+
+def cifar_hx(params, x):
+    return jnp.concatenate([x, conv2d(params["aug"], x)], axis=-1)
+
+
+def cifar_hy(params, z):
+    h = conv2d(params["head_conv"], z)
+    return h.reshape(h.shape[0], -1) @ params["head_lin"]["kernel"]
+
+
+def cifar_node(key) -> Tuple[NeuralODE, dict]:
+    params = init_cifar_node(key)
+    node = NeuralODE(f_apply=cifar_f_apply, hx_apply=cifar_hx,
+                     hy_apply=cifar_hy, s_span=(0.0, 1.0))
+    return node, params
+
+
+def init_cifar_hyper(key):
+    ks = jax.random.split(key, 3)
+    p = {
+        "c1": conv2d_init(ks[0], 17, 64, 5),
+        "a1": prelu_init(64),
+        "c2": conv2d_init(ks[1], 64, 32, 5),
+        "a2": prelu_init(32),
+        "c3": conv2d_init(ks[2], 32, 8, 3),
+    }
+    p["c3"]["w"] = jnp.zeros_like(p["c3"]["w"])
+    return p
+
+
+def cifar_g_apply(gp, eps, s, x, z, dz):
+    h = depth_cat(jnp.concatenate([z, dz], axis=-1), s)  # 17 channels
+    h = prelu(gp["a1"], conv2d(gp["c1"], h))
+    h = prelu(gp["a2"], conv2d(gp["c2"], h))
+    return conv2d(gp["c3"], h)

@@ -1,0 +1,172 @@
+"""Whisper-style encoder-decoder backbone (conv/mel frontend is a stub:
+inputs are precomputed frame embeddings (B, T, d) per the assignment).
+
+Pre-LN LayerNorm blocks (as in Whisper), learned positional embeddings,
+bidirectional encoder, causal decoder with cross-attention. Both stacks are
+parameter-stacked and scanned.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.lm import dtype_of
+from repro.nn.attention import (
+    attention_init, init_cache, mha, mha_decode, precompute_cross_kv,
+)
+from repro.nn.ffn import ffn_apply, ffn_init
+from repro.nn.module import (
+    dense_init, embedding_init, layernorm, layernorm_init,
+    truncated_normal_init,
+)
+
+MAX_FRAMES = 1 << 16  # learned position table ceiling for stress shapes
+
+
+def _enc_block_init(key, cfg: ArchConfig, pd):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layernorm_init(cfg.d_model, pd),
+        "attn": attention_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                               cfg.d_head, param_dtype=pd),
+        "ln2": layernorm_init(cfg.d_model, pd),
+        "ffn": ffn_init(k2, cfg.d_model, cfg.d_ff, cfg.gated_ffn, pd),
+    }
+
+
+def _dec_block_init(key, cfg: ArchConfig, pd):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layernorm_init(cfg.d_model, pd),
+        "self_attn": attention_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                    cfg.d_head, param_dtype=pd),
+        "ln_x": layernorm_init(cfg.d_model, pd),
+        "cross_attn": attention_init(k2, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                     cfg.d_head, param_dtype=pd),
+        "ln2": layernorm_init(cfg.d_model, pd),
+        "ffn": ffn_init(k3, cfg.d_model, cfg.d_ff, cfg.gated_ffn, pd),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig):
+    pd = dtype_of(cfg.param_dtype)
+    ke, kd, kt, kp1, kp2 = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    dec_keys = jax.random.split(kd, cfg.dec_layers)
+    return {
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg, pd))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg, pd))(dec_keys),
+        "embed": embedding_init(kt, cfg.vocab, cfg.d_model, pd),
+        "enc_pos": truncated_normal_init(kp1, (MAX_FRAMES, cfg.d_model), 0.02,
+                                         pd),
+        "dec_pos": truncated_normal_init(kp2, (cfg.max_target_len * 64,
+                                               cfg.d_model), 0.02, pd),
+        "ln_enc": layernorm_init(cfg.d_model, pd),
+        "ln_dec": layernorm_init(cfg.d_model, pd),
+    }
+
+
+def _attn_kw(cfg: ArchConfig):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.d_head,
+                use_rope=False)
+
+
+def encode(params, cfg: ArchConfig, frames: jnp.ndarray,
+           remat: str = "none") -> jnp.ndarray:
+    """frames: (B, T, d) stub embeddings -> encoder states (B, T, d)."""
+    dt = dtype_of(cfg.dtype)
+    T = frames.shape[1]
+    h = frames.astype(dt) + params["enc_pos"][:T].astype(dt)
+
+    def body(h, bp):
+        h = h + mha(bp["attn"], layernorm(bp["ln1"], h), causal=False,
+                    **_attn_kw(cfg))
+        h = h + ffn_apply(bp["ffn"], layernorm(bp["ln2"], h), act=cfg.act)
+        return h, None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return layernorm(params["ln_enc"], h)
+
+
+def decode_train(params, cfg: ArchConfig, enc: jnp.ndarray,
+                 tokens: jnp.ndarray, remat: str = "none") -> jnp.ndarray:
+    """Teacher-forced decoder. tokens: (B, L). Returns fp32 logits (B, L, V)."""
+    dt = dtype_of(cfg.dtype)
+    L = tokens.shape[1]
+    h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dt)
+    h = h + params["dec_pos"][:L].astype(dt)
+
+    def body(h, bp):
+        h = h + mha(bp["self_attn"], layernorm(bp["ln1"], h), causal=True,
+                    **_attn_kw(cfg))
+        h = h + mha(bp["cross_attn"], layernorm(bp["ln_x"], h), kv_x=enc,
+                    causal=False, **_attn_kw(cfg))
+        h = h + ffn_apply(bp["ffn"], layernorm(bp["ln2"], h), act=cfg.act)
+        return h, None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["dec_blocks"])
+    h = layernorm(params["ln_dec"], h)
+    return jnp.matmul(h, params["embed"]["table"].astype(h.dtype).T,
+                      preferred_element_type=jnp.float32)
+
+
+def encdec_loss(params, cfg: ArchConfig, frames, tokens, targets,
+                remat: str = "none"):
+    enc = encode(params, cfg, frames, remat)
+    logits = decode_train(params, cfg, enc, tokens, remat).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce, {"ce": ce}
+
+
+def init_dec_cache(params, cfg: ArchConfig, enc: jnp.ndarray, batch: int,
+                   max_len: int):
+    """Self-attn KV caches (stacked over layers) + precomputed cross K/V."""
+    dt = dtype_of(cfg.dtype)
+    self_kv = {
+        "k": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.n_kv, cfg.d_head),
+                       dt),
+        "v": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.n_kv, cfg.d_head),
+                       dt),
+    }
+    cross = jax.vmap(
+        lambda bp: precompute_cross_kv(bp["cross_attn"], enc, n_kv=cfg.n_kv,
+                                       d_head=cfg.d_head)
+    )(params["dec_blocks"])
+    return {"self": self_kv, "cross": cross}
+
+
+def encdec_decode_step(params, cfg: ArchConfig, token: jnp.ndarray, caches,
+                       cur_index):
+    """One decoder token. token: (B,). Returns (logits (B,V), new caches)."""
+    dt = dtype_of(cfg.dtype)
+    h = jnp.take(params["embed"]["table"], token[:, None], axis=0).astype(dt)
+    h = h + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], cur_index, 1, axis=0).astype(dt)[None]
+
+    def body(h, xs):
+        bp, kv, cross = xs
+        cache = {"k": kv["k"], "v": kv["v"]}
+        a, cache = mha_decode(bp["self_attn"], layernorm(bp["ln1"], h), cache,
+                              cur_index, **_attn_kw(cfg))
+        h = h + a
+        c, _ = mha_decode(bp["cross_attn"], layernorm(bp["ln_x"], h), {},
+                          cur_index, cross_kv=cross, **_attn_kw(cfg))
+        h = h + c
+        h = h + ffn_apply(bp["ffn"], layernorm(bp["ln2"], h), act=cfg.act)
+        return h, cache
+
+    h, new_self = jax.lax.scan(
+        body, h, (params["dec_blocks"], caches["self"], caches["cross"]))
+    h = layernorm(params["ln_dec"], h)
+    logits = jnp.matmul(h, params["embed"]["table"].astype(h.dtype).T,
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, {"self": new_self, "cross": caches["cross"]}

@@ -1,0 +1,460 @@
+"""Unified causal LM covering the dense / MoE / RWKV6 / Griffin-hybrid
+families behind one interface.
+
+Layer stacks are expressed as a repeating block *pattern* (e.g. llama4 =
+[dense, moe], recurrentgemma = [rec, rec, attn]); groups of the pattern are
+parameter-stacked on a leading axis and applied with ``lax.scan`` so HLO
+size is O(1) in depth — essential for the 96-layer dry-run compiles. A
+remainder of ``n_layers mod len(pattern)`` becomes explicit tail layers.
+
+Decode maintains per-group caches (KV for attention — rotating buffer under
+a sliding window so long_500k is O(window); recurrent states for RWKV/LRU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain_group_params as shd_constrain_group
+from repro.nn.attention import apply_rope, mha
+from repro.nn.attention import attention_init, mha_decode
+from repro.nn.ffn import ffn_apply, ffn_init, rwkv_channel_mix, rwkv_channel_mix_init
+from repro.nn.moe import moe_apply, moe_apply_sorted, moe_init
+from repro.nn.module import (
+    dense_init, embedding_init, rmsnorm, rmsnorm_init, truncated_normal_init,
+)
+from repro.nn.rglru import (
+    causal_conv1d, griffin_recurrent_apply, griffin_recurrent_init,
+    rglru_decode_step,
+)
+from repro.nn.rwkv6 import rwkv6_init, rwkv6_time_mix
+
+Params = Any
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# Runtime performance options (set by the launcher, not by model code):
+#   int8_dispatch — quantize the MoE EP all-to-all payload (§Perf A)
+#   kv_int8      — int8 KV cache with per-token-head scales (§Perf C)
+PERF_OPT = {"int8_dispatch": False, "kv_int8": False}
+
+
+def set_perf_options(**kw):
+    for k, v in kw.items():
+        assert k in PERF_OPT, k
+        PERF_OPT[k] = v
+
+
+# ----------------------------------------------------------- patterns ----
+
+def block_pattern(cfg: ArchConfig) -> Tuple[str, ...]:
+    if cfg.rwkv_heads:
+        return ("rwkv",)
+    if cfg.pattern_attn_every:
+        return ("rec",) * (cfg.pattern_attn_every - 1) + ("attn",)
+    if cfg.n_experts:
+        if cfg.moe_every == 1:
+            return ("moe",)
+        return ("dense",) * (cfg.moe_every - 1) + ("moe",)
+    return ("dense",)
+
+
+def group_layout(cfg: ArchConfig) -> Tuple[Tuple[str, ...], int, int]:
+    pattern = block_pattern(cfg)
+    n_groups, tail = divmod(cfg.n_layers, len(pattern))
+    return pattern, n_groups, tail
+
+
+# ------------------------------------------------------------- blocks ----
+
+def block_init(key, cfg: ArchConfig, kind: str) -> Params:
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    if kind in ("dense", "attn"):
+        p = {
+            "ln1": rmsnorm_init(d, pd),
+            "attn": attention_init(ks[0], d, cfg.n_heads, cfg.n_kv, cfg.d_head,
+                                   qk_norm=cfg.qk_norm, param_dtype=pd),
+            "ln2": rmsnorm_init(d, pd),
+            "ffn": ffn_init(ks[1], d, cfg.d_ff, cfg.gated_ffn, pd),
+        }
+        return p
+    if kind == "moe":
+        p = {
+            "ln1": rmsnorm_init(d, pd),
+            "attn": attention_init(ks[0], d, cfg.n_heads, cfg.n_kv, cfg.d_head,
+                                   qk_norm=cfg.qk_norm, param_dtype=pd),
+            "ln2": rmsnorm_init(d, pd),
+            "moe": moe_init(ks[1], d, cfg.d_ff_expert or cfg.d_ff,
+                            cfg.n_experts, gated=cfg.gated_ffn, param_dtype=pd),
+        }
+        if cfg.shared_expert:
+            p["shared"] = ffn_init(ks[2], d, cfg.d_ff, cfg.gated_ffn, pd)
+        return p
+    if kind == "rwkv":
+        return {
+            "ln1": rmsnorm_init(d, pd),
+            "tmix": rwkv6_init(ks[0], d, cfg.rwkv_heads, cfg.lora_rank, pd),
+            "ln2": rmsnorm_init(d, pd),
+            "cmix": rwkv_channel_mix_init(ks[1], d, cfg.d_ff, pd),
+        }
+    if kind == "rec":
+        return {
+            "ln1": rmsnorm_init(d, pd),
+            "griffin": griffin_recurrent_init(ks[0], d, cfg.lru_width, pd),
+            "ln2": rmsnorm_init(d, pd),
+            "ffn": ffn_init(ks[1], d, cfg.d_ff, cfg.gated_ffn, pd),
+        }
+    raise ValueError(kind)
+
+
+def _attn_kwargs(cfg: ArchConfig, kind: str) -> Dict:
+    window = cfg.local_window if (kind == "attn" and cfg.pattern_attn_every) \
+        else cfg.window
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.d_head,
+                rope_theta=cfg.rope_theta, window=window,
+                qk_norm=cfg.qk_norm, use_rope=(cfg.pos == "rope"))
+
+
+def block_apply(p: Params, cfg: ArchConfig, kind: str, h: jnp.ndarray,
+                aux: Dict[str, jnp.ndarray]):
+    """Full-sequence (train / prefill) block application."""
+    if kind in ("dense", "attn", "moe"):
+        h = h + mha(p["attn"], rmsnorm(p["ln1"], h), **_attn_kwargs(cfg, kind))
+        xn = rmsnorm(p["ln2"], h)
+        if kind == "moe":
+            # sort-based dispatch: the einsum dispatch is O(T^2) (capacity
+            # grows with T) — see nn/moe.py::moe_apply_sorted
+            out = moe_apply_sorted(
+                p["moe"], xn, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, act=cfg.act,
+                int8_dispatch=PERF_OPT["int8_dispatch"])
+            y = out.y
+            if "shared" in p:
+                y = y + ffn_apply(p["shared"], xn, act=cfg.act)
+            aux = {
+                "moe_aux": aux["moe_aux"] + out.aux_loss,
+                "moe_z": aux["moe_z"] + out.router_z_loss,
+                "moe_dropped": jnp.maximum(aux["moe_dropped"],
+                                           out.fraction_dropped),
+            }
+            h = h + y
+        else:
+            h = h + ffn_apply(p["ffn"], xn, act=cfg.act)
+        return h, aux
+    if kind == "rwkv":
+        tm, _ = rwkv6_time_mix(p["tmix"], rmsnorm(p["ln1"], h), cfg.rwkv_heads)
+        h = h + tm
+        xn = rmsnorm(p["ln2"], h)
+        x_prev = jnp.concatenate(
+            [jnp.zeros_like(xn[:, :1]), xn[:, :-1]], axis=1)
+        h = h + rwkv_channel_mix(p["cmix"], xn, x_prev)
+        return h, aux
+    if kind == "rec":
+        y, _ = griffin_recurrent_apply(p["griffin"], rmsnorm(p["ln1"], h))
+        h = h + y
+        h = h + ffn_apply(p["ffn"], rmsnorm(p["ln2"], h), act=cfg.act)
+        return h, aux
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------ caches ----
+
+def block_cache_init(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                     dtype) -> Params:
+    d = cfg.d_model
+    if kind in ("dense", "attn", "moe"):
+        window = cfg.local_window if (kind == "attn" and cfg.pattern_attn_every) \
+            else cfg.window
+        buf = min(max_len, window) if window else max_len
+        from repro.nn.attention import init_cache
+        return init_cache(batch, buf, cfg.n_kv, cfg.d_head, dtype,
+                          kv_int8=(PERF_OPT["kv_int8"] and window is None))
+    if kind == "rwkv":
+        hd = d // cfg.rwkv_heads
+        return {
+            "x_tmix": jnp.zeros((batch, d), dtype),
+            "S": jnp.zeros((batch, cfg.rwkv_heads, hd, hd), jnp.float32),
+            "x_cmix": jnp.zeros((batch, d), dtype),
+        }
+    if kind == "rec":
+        return {
+            "conv": jnp.zeros((batch, 3, cfg.lru_width), dtype),
+            "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def _rotating_decode_attn(p, cfg: ArchConfig, kind: str, h, cache, cur_index):
+    """Decode attention with a rotating buffer when windowed (O(window) for
+    long_500k); plain indexed cache otherwise. RoPE is applied at write time
+    with absolute positions (rotation-safe: scores depend on pos deltas)."""
+    kwargs = _attn_kwargs(cfg, kind)
+    window = kwargs["window"]
+    buf = cache["k"].shape[1]
+    if window is None:
+        out, new_cache = mha_decode(p["attn"], h, cache, cur_index, **kwargs)
+        return out, new_cache
+    # rotating window cache
+    from repro.nn.attention import _proj, NEG_INF
+    B = h.shape[0]
+    q = _proj(p["attn"]["wq"], h, cfg.n_heads, cfg.d_head)
+    k_new = _proj(p["attn"]["wk"], h, cfg.n_kv, cfg.d_head)
+    v_new = _proj(p["attn"]["wv"], h, cfg.n_kv, cfg.d_head)
+    if cfg.qk_norm:
+        q = rmsnorm(p["attn"]["q_norm"], q)
+        k_new = rmsnorm(p["attn"]["k_norm"], k_new)
+    pos = jnp.asarray(cur_index)[None]
+    if kwargs["use_rope"]:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    slot = jnp.mod(cur_index, buf)
+    k_all = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    # slot i holds absolute position: valid iff abs_pos > cur - window
+    idx = jnp.arange(buf)
+    # absolute position of each slot given we just wrote cur at slot
+    abs_pos = cur_index - jnp.mod(slot - idx, buf)
+    valid = (abs_pos >= 0) & (cur_index - abs_pos < window)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    group = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(B, 1, cfg.n_kv, group, cfg.d_head)
+    scores = jnp.einsum("bsngh,btnh->bngst", qg, k_all.astype(q.dtype),
+                        preferred_element_type=jnp.float32)
+    scores = scores * (cfg.d_head ** -0.5) + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+    ctx = jnp.einsum("bngst,btnh->bsngh", probs, v_all.astype(h.dtype),
+                     preferred_element_type=jnp.float32).astype(h.dtype)
+    ctx = ctx.reshape(B, 1, cfg.n_heads * cfg.d_head)
+    out = jnp.matmul(ctx, p["attn"]["wo"]["kernel"].astype(h.dtype),
+                     preferred_element_type=jnp.float32).astype(h.dtype)
+    return out, {"k": k_all, "v": v_all}
+
+
+def block_decode(p: Params, cfg: ArchConfig, kind: str, h: jnp.ndarray,
+                 cache: Params, cur_index):
+    """Single-token decode. h: (B, 1, d). Returns (h, new_cache)."""
+    if kind in ("dense", "attn", "moe"):
+        a, new_cache = _rotating_decode_attn(p, cfg, kind,
+                                             rmsnorm(p["ln1"], h), cache,
+                                             cur_index)
+        h = h + a
+        xn = rmsnorm(p["ln2"], h)
+        if kind == "moe":
+            out = moe_apply(p["moe"], xn, n_experts=cfg.n_experts,
+                            top_k=cfg.top_k,
+                            capacity_factor=max(cfg.capacity_factor, 2.0),
+                            act=cfg.act)
+            y = out.y
+            if "shared" in p:
+                y = y + ffn_apply(p["shared"], xn, act=cfg.act)
+            h = h + y
+        else:
+            h = h + ffn_apply(p["ffn"], xn, act=cfg.act)
+        return h, new_cache
+    if kind == "rwkv":
+        from repro.nn.rwkv6 import rwkv6_decode_step
+        xn = rmsnorm(p["ln1"], h)[:, 0]
+        tm, (x_tmix, S) = rwkv6_decode_step(
+            p["tmix"], xn, (cache["x_tmix"].astype(xn.dtype), cache["S"]),
+            cfg.rwkv_heads)
+        h = h + tm[:, None]
+        xn2 = rmsnorm(p["ln2"], h)[:, 0]
+        cm = rwkv_channel_mix(p["cmix"], xn2[:, None],
+                              cache["x_cmix"][:, None].astype(xn2.dtype))
+        h = h + cm
+        return h, {"x_tmix": x_tmix.astype(cache["x_tmix"].dtype), "S": S,
+                   "x_cmix": xn2.astype(cache["x_cmix"].dtype)}
+    if kind == "rec":
+        from repro.nn.module import dense
+        xn = rmsnorm(p["ln1"], h)
+        gp = p["griffin"]
+        u = dense(gp["in_rec"], xn)
+        g = jax.nn.gelu(dense(gp["in_gate"], xn), approximate=True)
+        u, conv_carry = causal_conv1d(gp["conv"], u,
+                                      cache["conv"].astype(u.dtype))
+        y_t, h_state = rglru_decode_step(gp["rglru"], u[:, 0], cache["h"])
+        y = dense(gp["out"], (y_t[:, None] * g))
+        h = h + y
+        h = h + ffn_apply(p["ffn"], rmsnorm(p["ln2"], h), act=cfg.act)
+        return h, {"conv": conv_carry.astype(cache["conv"].dtype),
+                   "h": h_state}
+    raise ValueError(kind)
+
+
+# -------------------------------------------------------------- model ----
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    pd = dtype_of(cfg.param_dtype)
+    pattern, n_groups, tail = group_layout(cfg)
+    k_embed, k_groups, k_tail, k_head, k_pos = jax.random.split(key, 5)
+
+    def init_group(k):
+        ks = jax.random.split(k, len(pattern))
+        return {f"b{i}": block_init(ks[i], cfg, kind)
+                for i, kind in enumerate(pattern)}
+
+    group_keys = jax.random.split(k_groups, n_groups)
+    groups = jax.vmap(init_group)(group_keys)
+
+    params = {
+        "embed": embedding_init(k_embed, cfg.vocab, cfg.d_model, pd),
+        "groups": groups,
+        "ln_f": rmsnorm_init(cfg.d_model, pd),
+    }
+    tail_keys = jax.random.split(k_tail, max(tail, 1))
+    params["tail"] = {f"t{i}": block_init(tail_keys[i], cfg, pattern[i])
+                      for i in range(tail)}
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab, pd)
+    if cfg.pos == "learned":
+        params["pos_embed"] = truncated_normal_init(
+            k_pos, (8192, cfg.d_model), 0.02, pd)
+    if cfg.frontend == "patches":
+        params["patch_proj"] = dense_init(k_pos, cfg.d_model, cfg.d_model, pd)
+    return params
+
+
+def _embed(params, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    dt = dtype_of(cfg.dtype)
+    h = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dt)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return h
+
+
+def _readout(params, cfg: ArchConfig, h: jnp.ndarray) -> jnp.ndarray:
+    h = rmsnorm(params["ln_f"], h)
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(h.dtype)
+        return jnp.matmul(h, w.T, preferred_element_type=jnp.float32)
+    return jnp.matmul(h, params["head"]["kernel"].astype(h.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+ZERO_AUX = lambda: {"moe_aux": jnp.zeros((), jnp.float32),
+                    "moe_z": jnp.zeros((), jnp.float32),
+                    "moe_dropped": jnp.zeros((), jnp.float32)}
+
+
+def lm_forward(params, cfg: ArchConfig, tokens: jnp.ndarray,
+               frontend: Optional[jnp.ndarray] = None,
+               remat: str = "none"):
+    """tokens: (B, S) int32. ``frontend``: precomputed modality embeddings
+    (B, N, d) prepended to the text sequence (paligemma patches).
+    Returns (logits fp32 (B, S_total, V), aux dict)."""
+    pattern, n_groups, tail = group_layout(cfg)
+    h = _embed(params, cfg, tokens)
+    if frontend is not None:
+        from repro.nn.module import dense
+        fe = dense(params["patch_proj"], frontend.astype(h.dtype))
+        h = jnp.concatenate([fe, h], axis=1)
+    if cfg.pos == "learned":
+        S = h.shape[1]
+        h = h + params["pos_embed"][:S].astype(h.dtype)
+
+    h = constrain(h, "residual")
+
+    def group_fn(h, gp):
+        gp = shd_constrain_group(gp)  # FSDP: per-group all-gather in-loop
+        aux = ZERO_AUX()
+        for i, kind in enumerate(pattern):
+            h, aux = block_apply(gp[f"b{i}"], cfg, kind, h, aux)
+        return constrain(h, "residual"), aux
+
+    if remat == "full":
+        group_fn = jax.checkpoint(group_fn)
+    elif remat == "dots":
+        group_fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    h, auxs = jax.lax.scan(group_fn, h, params["groups"])
+    aux = jax.tree_util.tree_map(lambda a: jnp.sum(a, 0), auxs)
+    for i in range(tail):
+        h, aux = block_apply(params["tail"][f"t{i}"], cfg, pattern[i], h, aux)
+    logits = constrain(_readout(params, cfg, h), "logits")
+    return logits, aux
+
+
+def lm_loss(params, cfg: ArchConfig, tokens: jnp.ndarray,
+            targets: jnp.ndarray, frontend: Optional[jnp.ndarray] = None,
+            remat: str = "none", moe_aux_weight: float = 0.01,
+            moe_z_weight: float = 1e-3):
+    logits, aux = lm_forward(params, cfg, tokens, frontend, remat)
+    if frontend is not None:
+        logits = logits[:, -tokens.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    loss = ce
+    if cfg.n_experts:
+        loss = loss + moe_aux_weight * aux["moe_aux"] + \
+            moe_z_weight * aux["moe_z"]
+    metrics = {"ce": ce, **aux}
+    return loss, metrics
+
+
+def init_lm_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=None) -> Params:
+    """Stacked decode caches: leading axis = group index."""
+    dtype = dtype or dtype_of(cfg.dtype)
+    pattern, n_groups, tail = group_layout(cfg)
+
+    def one_group():
+        return {f"b{i}": block_cache_init(cfg, kind, batch, max_len, dtype)
+                for i, kind in enumerate(pattern)}
+
+    g = one_group()
+    stacked = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (n_groups,) + l.shape).copy(), g)
+    tail_caches = {f"t{i}": block_cache_init(cfg, pattern[i], batch, max_len,
+                                             dtype)
+                   for i in range(tail)}
+    return {"groups": stacked, "tail": tail_caches}
+
+
+def lm_decode_step(params, cfg: ArchConfig, token: jnp.ndarray, caches,
+                   cur_index):
+    """One decode step. token: (B,) int32; cur_index: scalar int32 position.
+    Returns (logits (B, V) fp32, new_caches)."""
+    pattern, n_groups, tail = group_layout(cfg)
+    h = _embed(params, cfg, token[:, None])
+    if cfg.pos == "learned":
+        h = h + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], cur_index, 1, axis=0).astype(h.dtype)[None]
+
+    def group_fn(h, gp_cache):
+        gp, gc = gp_cache
+        new_gc = {}
+        for i, kind in enumerate(pattern):
+            h, new_gc[f"b{i}"] = block_decode(gp[f"b{i}"], cfg, kind, h,
+                                              gc[f"b{i}"], cur_index)
+        return h, new_gc
+
+    h, new_group_caches = jax.lax.scan(
+        group_fn, h, (params["groups"], caches["groups"]))
+    new_tail = {}
+    for i in range(tail):
+        h, new_tail[f"t{i}"] = block_decode(
+            params["tail"][f"t{i}"], cfg, pattern[i], h, caches["tail"][f"t{i}"],
+            cur_index)
+    logits = _readout(params, cfg, h)[:, 0]
+    return logits, {"groups": new_group_caches, "tail": new_tail}
+
+
+def count_params(params) -> int:
+    return sum(int(l.size) for l in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,10 @@
+"""Pure-JAX neural-network substrate (no flax/optax dependency).
+
+Every layer is a pair of functions: ``init_*(key, ...) -> params`` (nested
+dicts of arrays) and a pure ``apply``. Sharding is attached by name-path
+rules in ``repro.distributed.sharding`` so this package stays mesh-agnostic.
+"""
+from repro.nn.module import (  # noqa: F401
+    dense_init, dense, rmsnorm_init, rmsnorm, layernorm_init, layernorm,
+    embedding_init, embedding_lookup, mlp_init, mlp_apply, truncated_normal_init,
+)

@@ -1,0 +1,65 @@
+"""Convolutional building blocks for the paper's image-classification
+Neural ODEs (App. C.2): DepthCat conv vector fields, conv HyperEuler nets,
+channel Augmenter, PReLU, GroupNorm."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import truncated_normal_init
+
+
+def conv2d_init(key, in_ch: int, out_ch: int, ksize: int,
+                param_dtype=jnp.float32):
+    fan_in = in_ch * ksize * ksize
+    return {
+        "w": truncated_normal_init(key, (ksize, ksize, in_ch, out_ch),
+                                   fan_in ** -0.5, param_dtype),
+        "b": jnp.zeros((out_ch,), param_dtype),
+    }
+
+
+def conv2d(p, x: jnp.ndarray) -> jnp.ndarray:
+    """NHWC 'SAME' conv."""
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
+    return (y + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def prelu_init(ch: int, param_dtype=jnp.float32):
+    return {"alpha": jnp.full((ch,), 0.25, param_dtype)}
+
+
+def prelu(p, x: jnp.ndarray) -> jnp.ndarray:
+    a = p["alpha"].astype(x.dtype)
+    return jnp.where(x >= 0, x, a * x)
+
+
+def groupnorm_init(ch: int, param_dtype=jnp.float32):
+    return {"scale": jnp.ones((ch,), param_dtype),
+            "bias": jnp.zeros((ch,), param_dtype)}
+
+
+def groupnorm(p, x: jnp.ndarray, groups: int = 8, eps: float = 1e-5):
+    """NHWC group norm (BatchNorm stand-in inside ODE fields; a running-stat
+    BN is ill-defined along continuous depth — documented in DESIGN.md)."""
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    y = ((xg - mean) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def depth_cat(x: jnp.ndarray, s) -> jnp.ndarray:
+    """Concatenate the depth variable s as a constant channel (DepthCat)."""
+    s_chan = jnp.broadcast_to(jnp.asarray(s, x.dtype), x[..., :1].shape)
+    return jnp.concatenate([x, s_chan], axis=-1)

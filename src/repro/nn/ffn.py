@@ -1,0 +1,60 @@
+"""Feed-forward variants: SwiGLU / GeGLU (gated), squared-ReLU (Nemotron-4),
+GELU (Whisper), and RWKV channel-mix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import dense, dense_init
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def ffn_init(key, d_model: int, d_ff: int, gated: bool, param_dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], d_model, d_ff, param_dtype),
+        "wd": dense_init(ks[1], d_ff, d_model, param_dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[2], d_model, d_ff, param_dtype)
+    return p
+
+
+def ffn_apply(params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    """Gated if a 'wg' kernel is present: wd(act(wg x) * (wi x)); else
+    wd(act(wi x))."""
+    h = dense(params["wi"], x)
+    if "wg" in params:
+        h = ACTS[act](dense(params["wg"], x)) * h
+    else:
+        h = ACTS[act](h)
+    return dense(params["wd"], h)
+
+
+def rwkv_channel_mix_init(key, d_model: int, d_ff: int, param_dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wk": dense_init(ks[0], d_model, d_ff, param_dtype),
+        "wv": dense_init(ks[1], d_ff, d_model, param_dtype),
+        "wr": dense_init(ks[2], d_model, d_model, param_dtype),
+        "mix_k": jnp.full((d_model,), 0.5, param_dtype),
+        "mix_r": jnp.full((d_model,), 0.5, param_dtype),
+    }
+
+
+def rwkv_channel_mix(params, x: jnp.ndarray, x_prev: jnp.ndarray) -> jnp.ndarray:
+    """RWKV channel mix: token-shift interpolation + squared-ReLU key net,
+    sigmoid receptance gate (Peng et al., arXiv:2404.05892)."""
+    mk = params["mix_k"].astype(x.dtype)
+    mr = params["mix_r"].astype(x.dtype)
+    xk = x * mk + x_prev * (1 - mk)
+    xr = x * mr + x_prev * (1 - mr)
+    k = jnp.square(jax.nn.relu(dense(params["wk"], xk)))
+    return jax.nn.sigmoid(dense(params["wr"], xr)) * dense(params["wv"], k)

@@ -1,0 +1,100 @@
+"""Primitive layers: dense, norms, embeddings, small MLPs.
+
+Conventions:
+  * params are nested dicts of jnp arrays; keys are stable names that the
+    sharding rules in ``repro.distributed.sharding`` pattern-match on.
+  * ``param_dtype`` controls storage; matmuls upcast accumulation via
+    ``preferred_element_type=float32`` when inputs are low-precision.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    """He/fan-in style truncated normal initializer."""
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (x * scale).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, param_dtype=jnp.float32,
+               scale: float | None = None):
+    scale = (in_dim ** -0.5) if scale is None else scale
+    return {"kernel": truncated_normal_init(key, (in_dim, out_dim), scale,
+                                            param_dtype)}
+
+
+def dense(params, x: jnp.ndarray) -> jnp.ndarray:
+    k = params["kernel"]
+    return jnp.matmul(x, k.astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm_init(dim: int, param_dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), param_dtype)}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, param_dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), param_dtype),
+            "bias": jnp.zeros((dim,), param_dtype)}
+
+
+def layernorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, dim: int, param_dtype=jnp.float32):
+    return {"table": truncated_normal_init(key, (vocab, dim), 1.0, param_dtype)}
+
+
+def embedding_lookup(params, ids: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.take(params["table"], ids, axis=0).astype(dtype)
+
+
+def embedding_logits(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied-embedding readout: x @ table^T (fp32 accumulation)."""
+    t = params["table"]
+    return jnp.matmul(x, t.astype(x.dtype).T,
+                      preferred_element_type=jnp.float32)
+
+
+def mlp_init(key, dims: Sequence[int], param_dtype=jnp.float32,
+             final_zero: bool = False):
+    """Simple MLP used for hypersolver g_omega nets. ``final_zero`` zeroes
+    the last layer so the correction starts at exactly g == 0."""
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, k in enumerate(keys):
+        p = dense_init(k, dims[i], dims[i + 1], param_dtype)
+        if final_zero and i == len(keys) - 1:
+            p = {"kernel": jnp.zeros_like(p["kernel"])}
+        layers.append(p)
+    return {"layers": layers}
+
+
+def mlp_apply(params, x: jnp.ndarray,
+              act: Callable = jax.nn.tanh) -> jnp.ndarray:
+    layers = params["layers"]
+    h = x
+    for i, lp in enumerate(layers):
+        h = dense(lp, h)
+        if i < len(layers) - 1:
+            h = act(h)
+    return h

@@ -1,0 +1,251 @@
+"""Mixture-of-Experts with GShard/Switch-style capacity dispatch.
+
+TPU-idiomatic dense dispatch: tokens are routed to (expert, capacity-slot)
+one-hot tensors and moved with einsums — XLA lowers the expert axis to
+all-to-all when experts are sharded over the 'model' mesh axis (EP). No
+CSR/MegaBlocks grouped GEMM (GPU mechanism); capacity einsum is the TPU
+equivalent (see DESIGN.md §3).
+
+Supports top-1 (Switch; llama4-maverick) through top-8 (OLMoE) routing,
+optional shared expert (llama4), aux load-balancing loss, and router z-loss.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import dense_init, truncated_normal_init
+
+
+class MoEOutput(NamedTuple):
+    y: jnp.ndarray
+    aux_loss: jnp.ndarray
+    router_z_loss: jnp.ndarray
+    fraction_dropped: jnp.ndarray
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, gated: bool = True,
+             param_dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    scale = d_model ** -0.5
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, param_dtype),
+        # stacked expert weights: leading E axis shards over 'model' (EP)
+        "wi": truncated_normal_init(ks[1], (n_experts, d_model, d_ff), scale,
+                                    param_dtype),
+        "wd": truncated_normal_init(ks[2], (n_experts, d_ff, d_model),
+                                    d_ff ** -0.5, param_dtype),
+    }
+    if gated:
+        p["wg"] = truncated_normal_init(ks[3], (n_experts, d_model, d_ff),
+                                        scale, param_dtype)
+    return p
+
+
+def moe_apply(
+    params,
+    x: jnp.ndarray,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+    renorm_gates: bool = True,
+) -> MoEOutput:
+    """x: (B, S, d) -> MoEOutput with y: (B, S, d).
+
+    Routing: softmax over experts, take top-k, per-expert capacity
+    C = ceil(top_k * T * capacity_factor / E); overflow tokens are dropped
+    (their contribution is zero for that expert slot).
+    """
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E = n_experts
+
+    logits = jnp.matmul(xt, params["router"]["kernel"].astype(xt.dtype),
+                        preferred_element_type=jnp.float32)  # (T, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    if renorm_gates:
+        gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    capacity = int(max(1, -(-top_k * T * capacity_factor // E)))
+
+    # one-hot over experts per routing slot: (T, k, E)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    # position of each (token, slot) within its expert queue
+    # cumulative count over flattened (slot-major) order for fairness
+    flat = onehot.transpose(1, 0, 2).reshape(top_k * T, E)  # slot-major
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat)  # (kT, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1)  # (kT,)
+    keep = pos < capacity
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+    flat_keep = flat * keep[:, None]
+
+    # dispatch tensor (kT, E, C)
+    cap_onehot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)
+    dispatch = flat_keep[:, :, None] * cap_onehot[:, None, :]
+    gates_flat = gate_vals.T.reshape(top_k * T)  # slot-major to match
+    combine = dispatch * gates_flat[:, None, None]
+
+    # fold slot axis back onto tokens: (T, E, C)
+    dispatch_t = dispatch.reshape(top_k, T, E, capacity).sum(0)
+    combine_t = combine.reshape(top_k, T, E, capacity).sum(0)
+
+    # expert ingest: (E, C, d)
+    xin = jnp.einsum("tec,td->ecd", dispatch_t.astype(xt.dtype), xt,
+                     preferred_element_type=jnp.float32).astype(xt.dtype)
+    h = jnp.einsum("ecd,edf->ecf", xin, params["wi"].astype(xt.dtype),
+                   preferred_element_type=jnp.float32).astype(xt.dtype)
+    if "wg" in params:
+        from repro.nn.ffn import ACTS
+        g = jnp.einsum("ecd,edf->ecf", xin, params["wg"].astype(xt.dtype),
+                       preferred_element_type=jnp.float32).astype(xt.dtype)
+        h = ACTS[act](g) * h
+    else:
+        from repro.nn.ffn import ACTS
+        h = ACTS[act](h)
+    yout = jnp.einsum("ecf,efd->ecd", h, params["wd"].astype(xt.dtype),
+                      preferred_element_type=jnp.float32).astype(xt.dtype)
+    y = jnp.einsum("tec,ecd->td", combine_t.astype(xt.dtype), yout,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # Switch aux load-balance loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)                      # mean router prob per e
+    ce = jnp.mean(onehot.sum(1), axis=0)              # fraction routed per e
+    aux = E * jnp.sum(me * ce) / top_k
+    zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.sum(dispatch_t) / (T * top_k)
+    return MoEOutput(y=y.reshape(B, S, d), aux_loss=aux, router_z_loss=zl,
+                     fraction_dropped=dropped)
+
+
+def moe_apply_sorted(
+    params,
+    x: jnp.ndarray,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+    renorm_gates: bool = True,
+    int8_dispatch: bool = False,
+) -> MoEOutput:
+    """Sort-based dispatch: argsort tokens by expert, gather into (E, C, d)
+    buffers, grouped GEMM, scatter-add back.
+
+    The einsum dispatch above is O(T * E * C * d) = O(T^2) since capacity
+    C grows with T — fine for the small-T decode path, ruinous for 1M-token
+    training steps. Sorting replaces the one-hot matmuls with O(kT log kT)
+    sort + O(kT d) gathers, leaving only the real expert FLOPs
+    2 E C d f (= 2 k cf T d f). This is the default for train/prefill.
+    """
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E, k = n_experts, top_k
+
+    logits = jnp.matmul(xt, params["router"]["kernel"].astype(xt.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)        # (T, k)
+    if renorm_gates:
+        gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    capacity = int(max(1, -(-k * T * capacity_factor // E)))
+
+    flat_e = expert_idx.reshape(-1)                        # (kT,) slot-major? token-major
+    flat_g = gate_vals.reshape(-1)
+    token_of_slot = jnp.repeat(jnp.arange(T), k)
+
+    order = jnp.argsort(flat_e, stable=True)               # group by expert
+    e_sorted = flat_e[order]
+    t_sorted = token_of_slot[order]
+    g_sorted = flat_g[order]
+
+    # position within expert group = rank - first_rank_of_expert
+    counts = jnp.bincount(flat_e, length=E)                # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(k * T) - starts[e_sorted]
+    keep = pos < capacity
+    dest = jnp.where(keep, e_sorted * capacity + pos, E * capacity)
+
+    # ingest buffer (E*C + 1 overflow row; all dropped slots write there,
+    # the row is never read)
+    if int8_dispatch:
+        # §Perf optimization: the dispatch buffer is what crosses the EP
+        # all-to-all — quantize it to int8 with per-token scales (2x less
+        # interconnect traffic than bf16; error-feedback unnecessary since
+        # quantization precedes the expert GEMM, not the gradient path).
+        scale = jnp.max(jnp.abs(xt.astype(jnp.float32)), axis=-1,
+                        keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        xq = jnp.clip(jnp.round(xt.astype(jnp.float32) / scale),
+                      -127, 127).astype(jnp.int8)
+        buf = jnp.zeros((E * capacity + 1, d), jnp.int8)
+        buf = buf.at[dest].set(xq[t_sorted])
+        sbuf = jnp.zeros((E * capacity + 1, 1), jnp.float32)
+        sbuf = sbuf.at[dest].set(scale[t_sorted])
+        xin = (buf[:-1].astype(jnp.float32) * sbuf[:-1]).astype(
+            xt.dtype).reshape(E, capacity, d)
+    else:
+        buf = jnp.zeros((E * capacity + 1, d), xt.dtype)
+        buf = buf.at[dest].set(xt[t_sorted])
+        xin = buf[:-1].reshape(E, capacity, d)
+
+    h = jnp.einsum("ecd,edf->ecf", xin, params["wi"].astype(xt.dtype),
+                   preferred_element_type=jnp.float32).astype(xt.dtype)
+    from repro.nn.ffn import ACTS
+    if "wg" in params:
+        g = jnp.einsum("ecd,edf->ecf", xin, params["wg"].astype(xt.dtype),
+                       preferred_element_type=jnp.float32).astype(xt.dtype)
+        h = ACTS[act](g) * h
+    else:
+        h = ACTS[act](h)
+    yout = jnp.einsum("ecf,efd->ecd", h, params["wd"].astype(xt.dtype),
+                      preferred_element_type=jnp.float32).astype(xt.dtype)
+
+    # combine: gather each kept slot's expert output, weight, scatter-add
+    flat_out = yout.reshape(E * capacity, d)
+    slot_y = jnp.where(keep[:, None], flat_out[jnp.minimum(dest,
+                                                           E * capacity - 1)],
+                       0.0)
+    y = jnp.zeros((T, d), jnp.float32).at[t_sorted].add(
+        slot_y.astype(jnp.float32) * g_sorted[:, None])
+
+    me = jnp.mean(probs, axis=0)
+    # Switch aux loss: E * sum_e (tokens routed fraction) * (mean prob)
+    frac = counts.astype(jnp.float32) / (T * k)
+    aux = E * jnp.sum(frac * me)
+    zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.sum(keep.astype(jnp.float32)) / (T * k)
+    return MoEOutput(y=y.astype(x.dtype).reshape(B, S, d), aux_loss=aux,
+                     router_z_loss=zl, fraction_dropped=dropped)
+
+
+def moe_apply_reference(params, x, *, n_experts: int, top_k: int,
+                        act: str = "silu", renorm_gates: bool = True):
+    """Loop-over-experts oracle with infinite capacity (for tests)."""
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.matmul(xt, params["router"]["kernel"].astype(xt.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+    if renorm_gates:
+        gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+    from repro.nn.ffn import ACTS
+    y = jnp.zeros_like(xt, dtype=jnp.float32)
+    for e in range(n_experts):
+        h = xt @ params["wi"][e].astype(xt.dtype)
+        if "wg" in params:
+            h = ACTS[act](xt @ params["wg"][e].astype(xt.dtype)) * h
+        else:
+            h = ACTS[act](h)
+        he = (h @ params["wd"][e].astype(xt.dtype)).astype(jnp.float32)
+        w_e = jnp.sum(jnp.where(expert_idx == e, gate_vals, 0.0), axis=-1)
+        y = y + w_e[:, None] * he
+    return y.astype(x.dtype).reshape(B, S, d)

@@ -1,0 +1,148 @@
+"""Real-Gated Linear Recurrent Unit + Griffin recurrent block
+(De, Smith et al., arXiv:2402.19427 — RecurrentGemma backbone).
+
+    r_t = sigmoid(x_t W_a + b_a)                 (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)                 (input gate)
+    log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training path uses ``jax.lax.associative_scan`` (parallel prefix over the
+elementwise linear recurrence — the TPU-native schedule); decode is a
+single-step update. The Pallas kernel in kernels/rglru_scan implements the
+chunked sequential sweep for long sequences.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import dense, dense_init, truncated_normal_init
+
+_C = 8.0
+
+
+def rglru_init(key, width: int, param_dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Lambda init so a ~ U[0.9, 0.999] at r = 1 (paper App. A)
+    u = jax.random.uniform(k3, (width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "wa": dense_init(k1, width, width, param_dtype),
+        "ba": jnp.zeros((width,), param_dtype),
+        "wx": dense_init(k2, width, width, param_dtype),
+        "bx": jnp.zeros((width,), param_dtype),
+        "lam": lam.astype(param_dtype),
+    }
+
+
+def _gates(p, x: jnp.ndarray):
+    r = jax.nn.sigmoid(dense(p["wa"], x).astype(jnp.float32)
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["wx"], x).astype(jnp.float32)
+                       + p["bx"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # multiplier sqrt(1 - a^2) in stable form
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_apply(p, x: jnp.ndarray, h0: Optional[jnp.ndarray] = None):
+    """x: (B, T, width) -> (y, h_T). Parallel associative scan over T."""
+    a, b = _gates(p, x)
+    if h0 is not None:
+        # fold the carry into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_scan_ref(p, x: jnp.ndarray, h0: Optional[jnp.ndarray] = None):
+    """Sequential oracle (lax.scan) for tests and decode parity."""
+    a, b = _gates(p, x)
+    B, T, W = x.shape
+    h_init = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h_new = a_t * h + b_t
+        return h_new, h_new
+
+    hT, hs = jax.lax.scan(step, h_init,
+                          (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), hT
+
+
+def rglru_decode_step(p, x_t: jnp.ndarray, h: jnp.ndarray):
+    """x_t: (B, width); h: (B, width) fp32 carry."""
+    a, b = _gates(p, x_t[:, None, :])
+    h_new = a[:, 0, :] * h + b[:, 0, :]
+    return h_new.astype(x_t.dtype), h_new
+
+
+# ---------------------------------------------------------------- conv1d ----
+
+def causal_conv1d_init(key, width: int, kernel_size: int = 4,
+                       param_dtype=jnp.float32):
+    return {
+        "w": truncated_normal_init(key, (kernel_size, width),
+                                   kernel_size ** -0.5, param_dtype),
+        "b": jnp.zeros((width,), param_dtype),
+    }
+
+
+def causal_conv1d(p, x: jnp.ndarray, carry: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: (B, T, W); carry: (B, k-1, W) history.
+    Returns (y, new_carry)."""
+    k = p["w"].shape[0]
+    B, T, W = x.shape
+    if carry is None:
+        carry = jnp.zeros((B, k - 1, W), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)  # (B, T+k-1, W)
+    y = jnp.zeros((B, T, W), jnp.float32)
+    for i in range(k):
+        y = y + xp[:, i:i + T, :].astype(jnp.float32) * p["w"][i].astype(jnp.float32)
+    y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype), xp[:, -(k - 1):, :]
+
+
+# ------------------------------------------------------- recurrent block ----
+
+def griffin_recurrent_init(key, d_model: int, width: int,
+                           param_dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    return {
+        "in_rec": dense_init(ks[0], d_model, width, param_dtype),
+        "in_gate": dense_init(ks[1], d_model, width, param_dtype),
+        "conv": causal_conv1d_init(ks[2], width, 4, param_dtype),
+        "rglru": rglru_init(ks[3], width, param_dtype),
+        "out": dense_init(ks[4], width, d_model, param_dtype),
+    }
+
+
+def griffin_recurrent_apply(p, x: jnp.ndarray, state: Any = None,
+                            use_assoc_scan: bool = True):
+    """Griffin recurrent branch: [linear->conv->RG-LRU] * gelu(linear).
+    state = (conv_carry, h) or None. Returns (y, new_state)."""
+    if state is None:
+        conv_carry, h0 = None, None
+    else:
+        conv_carry, h0 = state
+    u = dense(p["in_rec"], x)
+    g = jax.nn.gelu(dense(p["in_gate"], x), approximate=True)
+    u, conv_carry = causal_conv1d(p["conv"], u, conv_carry)
+    if use_assoc_scan:
+        h, hT = rglru_apply(p["rglru"], u, h0)
+    else:
+        h, hT = rglru_scan_ref(p["rglru"], u, h0)
+    y = dense(p["out"], h * g)
+    return y, (conv_carry, hT)

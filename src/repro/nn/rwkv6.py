@@ -1,0 +1,165 @@
+"""RWKV-6 "Finch" time-mix (Peng et al., arXiv:2404.05892).
+
+Data-dependent token-shift (low-rank) + data-dependent per-channel decay
+w_t, with the per-head WKV recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t           (state: (hd_k, hd_v) per head)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Reference path: exact ``lax.scan`` over time (used for decode and as the
+oracle for the chunked Pallas kernel in kernels/rwkv6_scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import dense, dense_init, truncated_normal_init
+
+MIXES = ("w", "k", "v", "r", "g")
+
+
+def rwkv6_init(key, d_model: int, n_heads: int, lora_rank: int = 32,
+               param_dtype=jnp.float32):
+    d_head = d_model // n_heads
+    ks = jax.random.split(key, 12)
+    p = {
+        "wr": dense_init(ks[0], d_model, d_model, param_dtype),
+        "wk": dense_init(ks[1], d_model, d_model, param_dtype),
+        "wv": dense_init(ks[2], d_model, d_model, param_dtype),
+        "wg": dense_init(ks[3], d_model, d_model, param_dtype),
+        "wo": dense_init(ks[4], d_model, d_model, param_dtype),
+        # static token-shift interpolants
+        "mu_x": jnp.full((d_model,), 0.5, param_dtype),
+        "mu": truncated_normal_init(ks[5], (len(MIXES), d_model), 0.02,
+                                    param_dtype),
+        # low-rank data-dependent shift:  tanh(xx A1) A2 -> 5 mixes
+        "lora_a1": truncated_normal_init(ks[6], (d_model, len(MIXES) * lora_rank),
+                                         0.02, param_dtype),
+        "lora_a2": truncated_normal_init(
+            ks[7], (len(MIXES), lora_rank, d_model), 0.02, param_dtype),
+        # decay: w = exp(-exp(w0 + tanh(xw W1) W2))
+        "w0": jnp.linspace(-6.0, -1.0, d_model).astype(param_dtype),
+        "w_lora1": truncated_normal_init(ks[8], (d_model, lora_rank), 0.02,
+                                         param_dtype),
+        "w_lora2": truncated_normal_init(ks[9], (lora_rank, d_model), 0.02,
+                                         param_dtype),
+        # per-channel bonus u (reshaped to heads)
+        "u": truncated_normal_init(ks[10], (d_model,), 0.3, param_dtype),
+        # per-head output group-norm
+        "gn_scale": jnp.ones((n_heads, d_head), param_dtype),
+        "gn_bias": jnp.zeros((n_heads, d_head), param_dtype),
+    }
+    return p
+
+
+def _token_shift(x: jnp.ndarray, x_prev_last: jnp.ndarray) -> jnp.ndarray:
+    """Shift sequence right by one; first position uses carry (B, d)."""
+    return jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix_inputs(p, x: jnp.ndarray, x_shift: jnp.ndarray):
+    xx = x_shift - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    m = jnp.tanh(xxx @ p["lora_a1"].astype(x.dtype))  # (B,S,5r)
+    B, S, _ = m.shape
+    r = p["lora_a2"].shape[1]
+    m = m.reshape(B, S, len(MIXES), r)
+    delta = jnp.einsum("bsnr,nrd->nbsd", m, p["lora_a2"].astype(x.dtype))
+    out = {}
+    for i, name in enumerate(MIXES):
+        mu = p["mu"][i].astype(x.dtype) + delta[i]
+        out[name] = x + xx * mu
+    return out
+
+
+def _decay(p, xw: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel decay w_t in (0, 1): exp(-exp(w0 + lora(xw)))."""
+    lo = jnp.tanh(xw @ p["w_lora1"].astype(xw.dtype)) @ p["w_lora2"].astype(xw.dtype)
+    logw = p["w0"].astype(jnp.float32) + lo.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))
+
+
+def wkv6_scan_ref(r, k, v, w, u):
+    """Exact recurrence. r,k,v,w: (B, T, H, hd); u: (H, hd).
+
+    Returns o: (B, T, H, hd) and final state (B, H, hd, hd), fp32.
+    """
+    B, T, H, D = r.shape
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,D)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,D,D)
+        o = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S + kv
+        return S_new, o
+
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S_fin, o = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(o, 0, 1), S_fin
+
+
+def _group_norm(p, o: jnp.ndarray, eps: float = 64e-5) -> jnp.ndarray:
+    """Per-head layer norm over head dim (RWKV's GroupNorm(H))."""
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    y = (o - mean) * jax.lax.rsqrt(var + eps)
+    return y * p["gn_scale"].astype(o.dtype) + p["gn_bias"].astype(o.dtype)
+
+
+def rwkv6_time_mix(p, x: jnp.ndarray, n_heads: int,
+                   state: Any = None, wkv_fn=None):
+    """Full-sequence time-mix. x: (B, S, d). state carries (x_last, S_wkv)
+    for streaming; None = zeros. Returns (out, new_state)."""
+    B, S, d = x.shape
+    D = d // n_heads
+    if state is None:
+        x_last = jnp.zeros((B, d), x.dtype)
+        S_wkv = jnp.zeros((B, n_heads, D, D), jnp.float32)
+    else:
+        x_last, S_wkv = state
+    x_shift = _token_shift(x, x_last)
+    mixed = _mix_inputs(p, x, x_shift)
+    r = dense(p["wr"], mixed["r"]).reshape(B, S, n_heads, D)
+    k = dense(p["wk"], mixed["k"]).reshape(B, S, n_heads, D)
+    v = dense(p["wv"], mixed["v"]).reshape(B, S, n_heads, D)
+    g = jax.nn.silu(dense(p["wg"], mixed["g"]))
+    w = _decay(p, mixed["w"]).reshape(B, S, n_heads, D)
+    u = p["u"].reshape(n_heads, D)
+
+    if wkv_fn is None:
+        o, S_new = _wkv_with_initial_state(r, k, v, w, u, S_wkv)
+    else:
+        o, S_new = wkv_fn(r, k, v, w, u, S_wkv)
+    o = _group_norm(p, o.astype(x.dtype))
+    o = (o.reshape(B, S, d) * g)
+    out = dense(p["wo"], o)
+    return out, (x[:, -1, :], S_new)
+
+
+def _wkv_with_initial_state(r, k, v, w, u, S0):
+    B, T, H, D = r.shape
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        o = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S + kv
+        return S_new, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S_fin, o = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    return jnp.moveaxis(o, 0, 1), S_fin
+
+
+def rwkv6_decode_step(p, x_t: jnp.ndarray, state, n_heads: int):
+    """Single-token step. x_t: (B, d); state = (x_last, S_wkv)."""
+    out, new_state = rwkv6_time_mix(p, x_t[:, None, :], n_heads, state=state)
+    return out[:, 0, :], new_state

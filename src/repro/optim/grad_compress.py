@@ -1,0 +1,64 @@
+"""int8 gradient compression with error feedback (1-bit-Adam lineage).
+
+Two pieces:
+  * ``compress_with_feedback`` — blockwise int8 quantization of gradients
+    with an error-feedback accumulator, applied before the optimizer. The
+    residual re-enters the next step, so the scheme is unbiased in the
+    long run (convergence tests in tests/test_optim.py).
+  * ``compressed_allreduce_mean`` — a shard_map collective that
+    quantizes -> all_gathers int8 payloads + fp32 scales -> dequantizes and
+    means locally: 4x less DP gradient traffic than an fp32 all-reduce
+    (exercised on a forced-multi-device CPU subprocess in tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.quantized_state import dequantize_blockwise, quantize_blockwise
+
+
+def compress_with_feedback(grads: Any, error_fb: Any) -> Tuple[Any, Any]:
+    """Quantize (g + e) to int8 blocks; carry the quantization residual."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        qt = quantize_blockwise(g32)
+        g_hat = dequantize_blockwise(qt, g.shape)
+        return g_hat.astype(g.dtype), g32 - g_hat
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(error_fb)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    g_hats = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    return g_hats, new_e
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_allreduce_mean(x: jnp.ndarray, mesh, axis: str = "data"):
+    """Mean over `axis` with int8 payloads (shard_map manual collective)."""
+    n = mesh.shape[axis]
+
+    def body(xl):
+        qt = quantize_blockwise(xl)
+        qs = jax.lax.all_gather(qt.q, axis)          # (n, blocks, BLOCK) int8
+        ss = jax.lax.all_gather(qt.scale, axis)      # (n, blocks, 1) fp32
+        deq = qs.astype(jnp.float32) * ss            # (n, blocks, BLOCK)
+        total = jnp.sum(deq, axis=0).reshape(-1)
+        m = 1
+        for s in xl.shape:
+            m *= s
+        return (total[:m] / n).reshape(xl.shape).astype(xl.dtype)
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                       check_vma=False)
+    return fn(x)

@@ -1,0 +1,127 @@
+"""Optimizers as (init, update) pairs over parameter pytrees.
+
+AdamW (decoupled weight decay, Loshchilov & Hutter 2017) is the paper's
+hypersolver-training optimizer; Adam (wd=0) its model-training optimizer.
+State dtype is configurable: fp32 moments by default, int8 block-quantized
+moments for very large models (see optim/quantized_state.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[..., Any]  # (grads, state, params, step) -> (updates, state)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(l.astype(jnp.float32) ** 2)
+              for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda l: l * scale, tree), norm
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates
+    )
+
+
+class AdamState(NamedTuple):
+    mu: Params
+    nu: Params
+
+
+def adamw(
+    lr: Schedule | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moment_dtype: jnp.dtype = jnp.float32,
+) -> Optimizer:
+    sched = lr if callable(lr) else (lambda _s: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return AdamState(
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state: AdamState, params, step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = sched(step)
+
+        def upd_mu(g, m):
+            return (b1 * m.astype(jnp.float32)
+                    + (1 - b1) * g.astype(jnp.float32)).astype(moment_dtype)
+
+        def upd_nu(g, v):
+            g32 = g.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32)
+                    + (1 - b2) * g32 * g32).astype(moment_dtype)
+
+        mu = jax.tree_util.tree_map(upd_mu, grads, state.mu)
+        nu = jax.tree_util.tree_map(upd_nu, grads, state.nu)
+        bc1 = 1.0 - b1 ** step
+        bc2 = 1.0 - b2 ** step
+
+        def upd(p, m, v):
+            m_hat = m.astype(jnp.float32) / bc1
+            v_hat = v.astype(jnp.float32) / bc2
+            step_dir = m_hat / (jnp.sqrt(v_hat) + eps)
+            if weight_decay:
+                step_dir = step_dir + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * step_dir).astype(jnp.float32)
+
+        updates = jax.tree_util.tree_map(upd, params, mu, nu)
+        return updates, AdamState(mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+class SgdState(NamedTuple):
+    momentum: Optional[Params]
+
+
+def sgd(lr: Schedule | float, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else (lambda _s: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        if momentum == 0.0:
+            return SgdState(momentum=None)
+        return SgdState(
+            momentum=jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+        )
+
+    def update(grads, state: SgdState, params, step):
+        lr_t = sched(jnp.asarray(step, jnp.float32))
+        if momentum == 0.0:
+            upd = jax.tree_util.tree_map(
+                lambda g: -lr_t * g.astype(jnp.float32), grads
+            )
+            return upd, state
+        buf = jax.tree_util.tree_map(
+            lambda b, g: momentum * b + g.astype(jnp.float32),
+            state.momentum, grads,
+        )
+        upd = jax.tree_util.tree_map(lambda b: -lr_t * b, buf)
+        return upd, SgdState(momentum=buf)
+
+    return Optimizer(init=init, update=update)

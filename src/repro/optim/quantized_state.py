@@ -1,0 +1,91 @@
+"""8-bit block-quantized Adam moments (Dettmers-style blockwise absmax).
+
+For very large configs (nemotron-4-340b) fp32 m+v is ~2.7 TB; int8 moments
+with per-256-block fp32 scales cut optimizer-state memory 4x at negligible
+update error (tested against fp32 AdamW).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+
+BLOCK = 256
+
+
+class QTensor(NamedTuple):
+    q: jnp.ndarray       # int8 payload, padded flat
+    scale: jnp.ndarray   # fp32 per-block absmax
+    # static metadata lives in the pytree structure via aux dict
+
+
+def quantize_blockwise(x: jnp.ndarray):
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale)
+
+
+def dequantize_blockwise(qt: QTensor, shape, dtype=jnp.float32):
+    flat = (qt.q.astype(jnp.float32) * qt.scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+class Adam8bitState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adamw8bit(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+              weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else (lambda _s: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        z = lambda p: quantize_blockwise(jnp.zeros(p.shape, jnp.float32))
+        return Adam8bitState(
+            mu=jax.tree_util.tree_map(z, params),
+            nu=jax.tree_util.tree_map(z, params),
+        )
+
+    def update(grads, state: Adam8bitState, params, step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** step
+        bc2 = 1.0 - b2 ** step
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_p = jax.tree_util.tree_leaves(params)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+
+        upds, new_m, new_v = [], [], []
+        for g, p, mq, vq in zip(flat_g, flat_p, flat_m, flat_v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * dequantize_blockwise(mq, g.shape) + (1 - b1) * g32
+            v = b2 * dequantize_blockwise(vq, g.shape) + (1 - b2) * g32 * g32
+            m_hat = m / bc1
+            v_hat = v / bc2
+            d = m_hat / (jnp.sqrt(v_hat) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            upds.append(-lr_t * d)
+            new_m.append(quantize_blockwise(m))
+            new_v.append(quantize_blockwise(v))
+
+        updates = jax.tree_util.tree_unflatten(treedef, upds)
+        return updates, Adam8bitState(
+            mu=jax.tree_util.tree_unflatten(treedef, new_m),
+            nu=jax.tree_util.tree_unflatten(treedef, new_v),
+        )
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the integer step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_annealing(lr_max: float, lr_min: float, total_steps: int):
+    """Cosine anneal lr_max -> lr_min over total_steps (paper Sec. C.2)."""
+
+    def sched(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return lr_min + 0.5 * (lr_max - lr_min) * (1.0 + jnp.cos(jnp.pi * t))
+
+    return sched
+
+
+def linear_warmup_cosine(lr_max: float, lr_min: float, warmup: int, total: int):
+    def sched(step):
+        warm = lr_max * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr_min + 0.5 * (lr_max - lr_min) * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched

@@ -1,0 +1,200 @@
+"""§Perf hillclimb log generator: hypothesis -> change -> before/after ->
+verdict, for the three selected cells. Each change is IMPLEMENTED in the
+framework (not just modeled): int8 MoE dispatch (nn/moe.py), EP-over-data
+sharding (distributed/sharding.py), int8 KV cache (nn/attention.py),
+sequence-parallel residuals, and hypersolved continuous-depth decode
+(models/cdepth.py). Terms come from the analytic roofline model
+(roofline/costmodel.py); compile-proof artifacts for the winning variants
+are produced by launch/dryrun.py with the matching flags.
+
+    PYTHONPATH=src python -m repro.roofline.hillclimb
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.configs import SHAPES, get
+from repro.roofline.costmodel import SINGLE_POD, cell_cost
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+
+def _fmt(t):
+    return {"t_compute_s": round(t.t_compute, 4),
+            "t_memory_s": round(t.t_memory, 4),
+            "t_collective_s": round(t.t_collective, 4),
+            "dominant": t.dominant,
+            "roofline_fraction": round(t.roofline_fraction, 3)}
+
+
+def _iterate(cell_name, cfg, shape, base_kw, steps):
+    """Run the hypothesis loop; each step: (name, hypothesis, kw-updates,
+    expected-delta-description)."""
+    log = []
+    kw = dict(base_kw)
+    cur = cell_cost(cfg, shape, SINGLE_POD, **kw)
+    log.append({"cell": cell_name, "iter": 0, "change": "baseline",
+                **_fmt(cur)})
+    for i, (name, hypothesis, updates, cfg_updates) in enumerate(steps, 1):
+        dom_before = {"compute": cur.t_compute, "memory": cur.t_memory,
+                      "collective": cur.t_collective}[cur.dominant]
+        new_kw = dict(kw)
+        new_kw.update(updates)
+        new_cfg = dataclasses.replace(cfg, **cfg_updates) if cfg_updates \
+            else cfg
+        nxt = cell_cost(new_cfg, shape, SINGLE_POD, **new_kw)
+        dom_after = {"compute": nxt.t_compute, "memory": nxt.t_memory,
+                     "collective": nxt.t_collective}[cur.dominant]
+        gain = 1.0 - dom_after / dom_before
+        confirmed = gain > 0.02
+        log.append({
+            "cell": cell_name, "iter": i, "change": name,
+            "hypothesis": hypothesis,
+            "dominant_term_before_s": round(dom_before, 4),
+            "dominant_term_after_s": round(dom_after, 4),
+            "gain_on_dominant": f"{gain * 100:.1f}%",
+            "verdict": "CONFIRMED" if confirmed else "REFUTED (<2%)",
+            **_fmt(nxt),
+        })
+        if confirmed:
+            kw, cfg, cur = new_kw, new_cfg, nxt
+    return log
+
+
+def hillclimb_olmoe():
+    """Cell A - olmoe_1b_7b x train_4k: worst train roofline fraction
+    (0.071), collective-bound by the top-8 EP all-to-all."""
+    cfg = get("olmoe_1b_7b")
+    shape = SHAPES["train_4k"]
+    base = dict(remat="full", microbatches=4)
+    steps = [
+        ("seq_shard (SP)",
+         "TP activation all-reduces (2x payload) become AG+RS pairs (1x): "
+         "napkin: tp = 16L*4*act; halving it cuts t_coll by "
+         "~16*4*act/50GBps ~ 0.7s of 3.5s (-20%)",
+         dict(seq_shard=True), None),
+        ("int8 a2a dispatch",
+         "a2a payload = top_k(8) x tokens x d dominates (137GB/dev); int8 "
+         "payload halves it: expect ~-1.4s (-45% of remaining)",
+         dict(int8_dispatch=True), None),
+        ("capacity_factor 1.25->1.0",
+         "expert FLOPs & a2a scale with cf; -20% on both; a2a already "
+         "int8 so expect ~-10% on t_coll, -20% t_compute",
+         dict(), dict(capacity_factor=1.0)),
+        ("microbatches 4->2",
+         "grad RS per microbatch: 4->2 halves grad traffic; grads are "
+         "~4GB of ~100GB -> expect <5% (likely refuted)",
+         dict(microbatches=2), None),
+    ]
+    return _iterate("olmoe_1b_7b x train_4k", cfg, shape, base, steps)
+
+
+def hillclimb_llama4():
+    """Cell B - llama4 x train_4k: most collective-bound (t_coll/t_comp
+    ~ 11.6): FSDP all-gathers 50GB/dev of expert weights per microbatch."""
+    cfg = get("llama4_maverick_400b_a17b")
+    shape = SHAPES["train_4k"]
+    base = dict(remat="full", microbatches=8, seq_shard=True, fsdp=True,
+                moment_bytes=2)
+    steps = [
+        ("EP over data axis (DeepSpeed-MoE placement)",
+         "96% of params are expert weights; placing E on the DP axis makes "
+         "them DP-local: FSDP gather shrinks from 50GB to ~2GB/dev/mb. "
+         "napkin: grads term 8mb*2*47GB/50GBps ~ 15s removed of 28.7s",
+         dict(ep_over_data=True), None),
+        ("int8 a2a dispatch",
+         "with weights fixed, a2a (top-1, 4*act*moe_layers ~ 21GB) is "
+         "next: int8 halves -> expect ~-2s",
+         dict(int8_dispatch=True), None),
+        ("microbatches 8->4",
+         "remaining FSDP gather of non-expert weights + grad RS scale "
+         "with m: expect ~-30% of the grad share; memory roughly doubles "
+         "per-mb activations (remat=full keeps it in budget: 33->40GiB?)",
+         dict(microbatches=4), None),
+        ("capacity_factor 1.25->1.0",
+         "top-1 capacity waste: -20% expert flops; collective unchanged "
+         "(<2% on dominant -> refuted for the collective term)",
+         dict(), dict(capacity_factor=1.0)),
+    ]
+    return _iterate("llama4_maverick_400b_a17b x train_4k", cfg, shape,
+                    base, steps)
+
+
+def hillclimb_qwen_decode():
+    """Cell C - qwen3_8b x decode_32k: memory-bound (t_mem/t_comp ~ 500) —
+    the paper-technique cell: hypersolved continuous-depth decode plus
+    quantized serving attack the dominant HBM term directly."""
+    cfg = get("qwen3_8b")
+    shape = SHAPES["decode_32k"]
+    base = dict()
+    steps = [
+        ("int8 KV cache",
+         "KV bytes/dev/token = 36L*2*8kv*128hd*32k*2B/16 ~ 0.3GB of "
+         "~1.3GB total; halving KV -> ~-12% t_mem",
+         dict(kv_int8=True), None),
+        ("int8 weights (quantized serving)",
+         "active weights 8.2B*2B/16 = 1.0GB/dev/token dominate; int8 "
+         "halves -> expect ~-40% t_mem",
+         dict(weights_int8=True), None),
+        ("hypersolved depth K = n_groups/2 (HyperEuler)",
+         "the paper's technique: 18 of 36 depth steps + g_omega "
+         "correction; weights AND caches of skipped groups never load: "
+         "t_mem ~ -45%; quality cost measured in bench_cdepth_lm "
+         "(argmax agreement at K/2)",
+         dict(depth_fraction=0.5), None),
+        ("batch 128->256 (server-side batching)",
+         "amortize weight reads over 2x tokens: t_mem/token ~ -35%; "
+         "modeled via per-step terms at B=256 (compute doubles but stays "
+         "300x under the roof)",
+         dict(), None),  # handled via shape variant below
+    ]
+    log = _iterate("qwen3_8b x decode_32k", cfg, shape, base, steps[:3])
+    # batch variant (shape change, not kw change)
+    import dataclasses as _dc
+    kw = dict(kv_int8=True, weights_int8=True, depth_fraction=0.5)
+    cur = cell_cost(cfg, shape, SINGLE_POD, **kw)
+    big = _dc.replace(shape, global_batch=256)
+    nxt = cell_cost(cfg, big, SINGLE_POD, **kw)
+    per_tok_before = cur.t_memory / shape.global_batch
+    per_tok_after = nxt.t_memory / big.global_batch
+    gain = 1.0 - per_tok_after / per_tok_before
+    log.append({
+        "cell": "qwen3_8b x decode_32k", "iter": 4,
+        "change": "batch 128->256",
+        "hypothesis": steps[3][1],
+        "dominant_term_before_s": round(per_tok_before, 6),
+        "dominant_term_after_s": round(per_tok_after, 6),
+        "gain_on_dominant": f"{gain * 100:.1f}% (per-token)",
+        "verdict": "CONFIRMED" if gain > 0.02 else "REFUTED",
+        **_fmt(nxt),
+    })
+    return log
+
+
+def main():
+    logs = hillclimb_olmoe() + hillclimb_llama4() + hillclimb_qwen_decode()
+    out = os.path.join(ART, "hillclimb_log.json")
+    os.makedirs(ART, exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(logs, f, indent=1)
+    for row in logs:
+        if row.get("change") == "baseline":
+            print(f"\n== {row['cell']} ==")
+            print(f"  baseline: comp={row['t_compute_s']}s "
+                  f"mem={row['t_memory_s']}s coll={row['t_collective_s']}s "
+                  f"dominant={row['dominant']} "
+                  f"frac={row['roofline_fraction']}")
+        else:
+            print(f"  [{row['iter']}] {row['change']}: "
+                  f"{row['dominant_term_before_s']} -> "
+                  f"{row['dominant_term_after_s']} "
+                  f"({row['gain_on_dominant']}) {row['verdict']} "
+                  f"| frac={row['roofline_fraction']}")
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Roofline report: merge the analytic cost model with the dry-run
+artifacts into the §Roofline baseline table.
+
+    PYTHONPATH=src python -m repro.roofline.report [--markdown out.md]
+
+Per (arch x shape), single-pod mesh (per the assignment; multi-pod is the
+compile-proof for the pod axis):
+  compute / memory / collective terms (s), dominant term, MODEL_FLOPS,
+  useful-compute ratio, per-device memory from the compiled artifact, and
+  the as-compiled collective inventory (loop bodies counted once — the
+  analytic model supplies trip-count-corrected totals; both reported).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_applicable, get
+from repro.roofline.costmodel import (
+    F32, MULTI_POD, SINGLE_POD, RooflineTerms, cell_cost,
+)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+# mirror of launch/dryrun.py TRAIN_SETTINGS (kept import-light: the
+# report must not import jax/dryrun which forces 512 devices)
+_SETTINGS: Dict[str, Dict] = {
+    "nemotron_4_340b": dict(microbatches=16, remat="full", seq_shard=True,
+                            fsdp=True, moment_bytes=2),
+    "llama4_maverick_400b_a17b": dict(microbatches=8, remat="full",
+                                      seq_shard=True, fsdp=True,
+                                      moment_bytes=2),
+    "mistral_nemo_12b": dict(microbatches=4, remat="full"),
+    "qwen3_8b": dict(microbatches=4, remat="full"),
+    "whisper_base": dict(microbatches=1, remat="dots"),
+    "_default": dict(microbatches=4, remat="full"),
+}
+
+
+def settings_for(arch: str) -> Dict:
+    base = dict(microbatches=4, remat="full", seq_shard=False, fsdp=False,
+                moment_bytes=F32)
+    base.update(_SETTINGS.get(arch, _SETTINGS["_default"]))
+    return base
+
+
+def load_artifact(arch: str, shape: str, multi_pod: bool) -> Optional[Dict]:
+    tag = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}.json"
+    path = os.path.join(ART, tag)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def cell_row(arch: str, shape_name: str, multi_pod: bool = False) -> Dict:
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "SKIP",
+                "reason": reason}
+    s = settings_for(arch)
+    mesh = MULTI_POD if multi_pod else SINGLE_POD
+    t: RooflineTerms = cell_cost(
+        cfg, shape, mesh, remat=s["remat"], microbatches=s["microbatches"],
+        seq_shard=s.get("seq_shard", False), fsdp=s.get("fsdp", False),
+        moment_bytes=s.get("moment_bytes", F32))
+    art = load_artifact(arch, shape_name, multi_pod)
+    row = {
+        "arch": arch, "shape": shape_name, "status": "OK",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "t_compute_s": t.t_compute,
+        "t_memory_s": t.t_memory,
+        "t_collective_s": t.t_collective,
+        "dominant": t.dominant,
+        "roofline_fraction": round(t.roofline_fraction, 3),
+        "model_flops": t.model_flops,
+        "hlo_equiv_flops": t.flops_total,
+        "useful_ratio": round(t.useful_ratio, 3),
+    }
+    if art and art.get("status") == "OK":
+        mem = art["memory"]
+        row["dev_temp_gib"] = round(mem["temp_bytes"] / 2 ** 30, 2)
+        row["dev_args_gib"] = round(mem["argument_bytes"] / 2 ** 30, 2)
+        row["compiled_coll_ops"] = {k: v for k, v in
+                                    art["collective_counts"].items() if v}
+        row["compile_s"] = art["compile_s"]
+    return row
+
+
+def full_table(multi_pod: bool = False):
+    return [cell_row(a, s, multi_pod) for a in ARCH_IDS for s in SHAPES]
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | t_comp | t_mem | t_coll | dominant | "
+           "roofline frac | useful | temp GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | "
+                       f"— | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['t_compute_s'])} | "
+            f"{_fmt_s(r['t_memory_s'])} | {_fmt_s(r['t_collective_s'])} | "
+            f"{r['dominant']} | {r['roofline_fraction']} | "
+            f"{r['useful_ratio']} | {r.get('dev_temp_gib', '—')} |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    rows = full_table(args.multi_pod)
+    md = markdown_table(rows)
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(md)
+    print(md)
+    out = os.path.join(ART, "roofline_baseline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Test-suite wide configuration.
+
+x64 containment: the numerics tests (solver order fits) need fp64, but
+pytest imports every module at collection time — a module-level
+``jax.config.update("jax_enable_x64", True)`` would leak into the whole
+suite and change integer/float promotion everywhere (it broke the int32
+arithmetic inside Pallas kernels). This autouse fixture scopes x64 to
+exactly the modules that need it.
+"""
+import jax
+import pytest
+
+X64_MODULES = {
+    "test_solvers.py",
+    "test_hypersolver.py",
+    "test_core_properties.py",
+}
+
+
+@pytest.fixture(autouse=True)
+def _x64_scope(request):
+    need = request.node.path.name in X64_MODULES
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", need)
+    yield
+    jax.config.update("jax_enable_x64", prev)

@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward +
+one train-grad step + one decode step on CPU; asserts shapes and finiteness.
+
+The FULL configs are exercised only via the dry-run (AOT, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get
+from repro.models.encdec import (
+    encdec_decode_step, encdec_loss, encode, init_dec_cache, init_encdec,
+)
+from repro.models.lm import (
+    count_params, init_lm, init_lm_cache, lm_decode_step, lm_forward, lm_loss,
+)
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "whisper_base"]
+
+
+def _data(cfg, B=2, S=16, key=0):
+    k = jax.random.PRNGKey(key)
+    toks = jax.random.randint(k, (B, S), 0, cfg.vocab)
+    tgts = jnp.roll(toks, -1, axis=1)
+    fe = None
+    if cfg.frontend == "patches":
+        fe = jax.random.normal(jax.random.PRNGKey(7),
+                               (B, cfg.n_frontend_tokens, cfg.d_model))
+    return toks, tgts, fe
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_reduced_forward_and_grad(arch):
+    cfg = get(arch).reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    toks, tgts, fe = _data(cfg)
+    logits, aux = lm_forward(params, cfg, toks, frontend=fe)
+    S_total = toks.shape[1] + (cfg.n_frontend_tokens if fe is not None else 0)
+    assert logits.shape == (2, S_total, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm_loss(p, cfg, toks, tgts, frontend=fe), has_aux=True
+    )(params)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g)))
+                for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_reduced_decode_step(arch):
+    cfg = get(arch).reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    B, S_max = 2, 16
+    caches = init_lm_cache(cfg, B, S_max)
+    tok = jnp.zeros((B,), jnp.int32)
+    logits, caches = lm_decode_step(params, cfg, tok, caches, jnp.asarray(0))
+    assert logits.shape == (B, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    logits2, caches = lm_decode_step(
+        params, cfg, jnp.argmax(logits, -1).astype(jnp.int32), caches,
+        jnp.asarray(1))
+    assert np.all(np.isfinite(np.asarray(logits2)))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_decode_matches_forward(arch):
+    """Token-by-token decode logits == teacher-forced forward logits."""
+    cfg = get(arch).reduced()
+    params = init_lm(jax.random.PRNGKey(1), cfg)
+    B, S = 1, 6
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    full_logits, _ = lm_forward(params, cfg, toks)
+    caches = init_lm_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, caches = lm_decode_step(params, cfg, toks[:, t], caches,
+                                    jnp.asarray(t))
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+    if cfg.n_experts:
+        # capacity-based drops can differ between batched prefill and
+        # token-level decode; compare argmax agreement instead
+        agree = np.mean(np.asarray(jnp.argmax(full_logits, -1)
+                                   == jnp.argmax(dec_logits, -1)))
+        assert agree > 0.65, agree
+    else:
+        np.testing.assert_allclose(np.asarray(full_logits),
+                                   np.asarray(dec_logits), rtol=5e-3,
+                                   atol=5e-4)
+
+
+def test_whisper_smoke():
+    cfg = get("whisper_base").reduced()
+    params = init_encdec(jax.random.PRNGKey(0), cfg)
+    B, T, L = 2, 12, 8
+    frames = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, L), 0, cfg.vocab)
+    tgts = jnp.roll(toks, -1, 1)
+    (loss, m), grads = jax.value_and_grad(
+        lambda p: encdec_loss(p, cfg, frames, toks, tgts), has_aux=True
+    )(params)
+    assert np.isfinite(float(loss))
+
+    enc = encode(params, cfg, frames)
+    caches = init_dec_cache(params, cfg, enc, B, L)
+    lg, caches = encdec_decode_step(params, cfg, toks[:, 0], caches,
+                                    jnp.asarray(0))
+    assert lg.shape == (B, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(lg)))
+
+
+def test_whisper_decode_matches_teacher_forced():
+    cfg = get("whisper_base").reduced()
+    params = init_encdec(jax.random.PRNGKey(4), cfg)
+    B, T, L = 1, 10, 5
+    frames = jax.random.normal(jax.random.PRNGKey(5), (B, T, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, L), 0, cfg.vocab)
+    enc = encode(params, cfg, frames)
+    from repro.models.encdec import decode_train
+    full = decode_train(params, cfg, enc, toks)
+    caches = init_dec_cache(params, cfg, enc, B, L)
+    outs = []
+    for t in range(L):
+        lg, caches = encdec_decode_step(params, cfg, toks[:, t], caches,
+                                        jnp.asarray(t))
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)), rtol=5e-3,
+                               atol=5e-4)
+
+
+def test_param_counts_full_configs_match_public_sizes():
+    """Analytic parameter counts of the FULL configs are in the right
+    ballpark (no allocation — pure arithmetic from config)."""
+    from repro.roofline.params import analytic_param_count
+    expected = {
+        "llama4_maverick_400b_a17b": (350e9, 460e9),
+        "olmoe_1b_7b": (6.0e9, 8.0e9),
+        "nemotron_4_340b": (320e9, 360e9),
+        "qwen3_4b": (3.2e9, 4.8e9),
+        "qwen3_8b": (7.0e9, 9.0e9),
+        "mistral_nemo_12b": (11.0e9, 13.5e9),
+        "paligemma_3b": (2.2e9, 3.5e9),
+        "rwkv6_1p6b": (1.3e9, 2.2e9),
+        "recurrentgemma_2b": (2.0e9, 3.3e9),
+        "whisper_base": (6e7, 1.1e8),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = analytic_param_count(get(arch))
+        assert lo <= n <= hi, (arch, f"{n:.3e}", lo, hi)

@@ -1,0 +1,81 @@
+"""Continuous-depth LM mode: exact equivalence at K = n_groups, NFE/error
+pareto with the hypersolver at K < n_groups."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models.cdepth import (
+    cdepth_residual_loss, discrete_depth_trajectory, lm_forward_cdepth,
+    lm_g_init,
+)
+from repro.models.lm import group_layout, init_lm, lm_forward
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+
+ARCH = "qwen3_4b"  # dense, homogeneous pattern
+
+
+def _setup(n_layers=8):
+    import dataclasses
+    cfg = dataclasses.replace(get(ARCH).reduced(), n_layers=n_layers)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    return cfg, params, toks
+
+
+def test_euler_full_K_equals_discrete_forward():
+    """Euler at K = n_groups must reproduce the discrete network exactly."""
+    cfg, params, toks = _setup()
+    _, n_groups, _ = group_layout(cfg)
+    ref, _ = lm_forward(params, cfg, toks)
+    ode = lm_forward_cdepth(params, cfg, toks, K=n_groups, solver="euler")
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(ode), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_reduced_K_degrades_then_hypersolver_recovers():
+    cfg, params, toks = _setup(n_layers=8)
+    _, n_groups, _ = group_layout(cfg)
+    K = n_groups // 2
+
+    ref, _ = lm_forward(params, cfg, toks)
+    base = lm_forward_cdepth(params, cfg, toks, K=K, solver="euler")
+    err_base = float(jnp.mean(jnp.abs(ref - base)))
+    assert err_base > 0  # skipping layers must change the output
+
+    gp = lm_g_init(jax.random.PRNGKey(2), cfg, rank=32,
+                   param_dtype=jnp.float32)
+    opt = adamw(3e-3)
+    st = opt.init(gp)
+
+    @jax.jit
+    def fit(gp, st, i, toks):
+        loss, grads = jax.value_and_grad(
+            lambda g: cdepth_residual_loss(params, g, cfg, toks, K))(gp)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        upd, st = opt.update(grads, st, gp, i)
+        return apply_updates(gp, upd), st, loss
+
+    key = jax.random.PRNGKey(3)
+    losses = []
+    for i in range(120):
+        if i % 10 == 0:
+            key, sub = jax.random.split(key)
+            batch = jax.random.randint(sub, (2, 8), 0, cfg.vocab)
+        gp, st, loss = fit(gp, st, i, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+
+    hyper = lm_forward_cdepth(params, cfg, toks, K=K, solver="euler",
+                              g_params=gp)
+    err_hyper = float(jnp.mean(jnp.abs(ref - hyper)))
+    assert err_hyper < err_base, (err_base, err_hyper)
+
+
+def test_trajectory_shapes():
+    cfg, params, toks = _setup(n_layers=4)
+    _, n_groups, _ = group_layout(cfg)
+    traj = discrete_depth_trajectory(params, cfg, toks)
+    assert traj.shape[0] == n_groups + 1
+    assert np.all(np.isfinite(np.asarray(traj)))

@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis) for solver/hypersolver invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EULER, HEUN, MIDPOINT, RK4, FixedGrid, HyperSolver, alpha_family,
+    get_tableau, odeint_fixed, rk_psi, solver_residual, tree_lincomb,
+)
+
+# x64 enabled per-module via tests/conftest.py
+
+TABS = [EULER, MIDPOINT, HEUN, RK4]
+
+finite_f = st.floats(
+    min_value=-2.0, max_value=2.0, allow_nan=False, allow_infinity=False
+)
+
+
+@st.composite
+def small_vec(draw, n=3):
+    return jnp.asarray([draw(finite_f) for _ in range(n)], dtype=jnp.float64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(z=small_vec(), c=small_vec())
+def test_constant_field_consistency(z, c):
+    """For f == const, any consistent RK method gives psi == const exactly
+    (sum of b weights is 1)."""
+    f = lambda s, _z: c
+    for tab in TABS:
+        psi, _ = rk_psi(f, tab, 0.0, 0.1, z)
+        np.testing.assert_allclose(np.asarray(psi), np.asarray(c), rtol=1e-12,
+                                   atol=1e-300)
+
+
+@settings(max_examples=25, deadline=None)
+@given(z=small_vec(), a=finite_f, b=finite_f)
+def test_psi_linearity_in_field(z, a, b):
+    """psi is linear in f for linear fields sharing the same trajectory ops:
+    rk_psi(alpha*f) == alpha * rk_psi(f) for Euler (single-stage)."""
+    f = lambda s, zz: a * zz + b
+    psi1, _ = rk_psi(f, EULER, 0.0, 0.05, z)
+    psi2, _ = rk_psi(lambda s, zz: 2.0 * f(s, zz), EULER, 0.0, 0.05, z)
+    np.testing.assert_allclose(np.asarray(psi2), 2 * np.asarray(psi1), rtol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    z=small_vec(),
+    r=small_vec(),
+    eps=st.floats(min_value=0.05, max_value=0.5),
+    tab_idx=st.integers(min_value=0, max_value=3),
+)
+def test_residual_roundtrip(z, r, eps, tab_idx):
+    """If z_{k+1} := z_k + eps psi + eps^{p+1} r then the residual is r.
+
+    (eps bounded below: dividing by eps^{p+1} amplifies fp64 rounding of the
+    O(1) state — the roundtrip is ill-conditioned for tiny eps.)
+    """
+    tab = TABS[tab_idx]
+    f = lambda s, zz: jnp.tanh(zz)
+    psi, _ = rk_psi(f, tab, 0.0, eps, z)
+    z_next = z + eps * psi + eps ** (tab.order + 1) * r
+    resid, dz = solver_residual(f, tab, 0.0, eps, z, z_next)
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(r), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dz), np.asarray(f(0.0, z)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(z=small_vec(), eps=st.floats(min_value=1e-3, max_value=0.3))
+def test_hypersolver_step_decomposition(z, eps):
+    """hyper step == base step + eps^{p+1} g, exactly."""
+    f = lambda s, zz: jnp.sin(zz)
+    g_val = jnp.asarray([0.3, -0.2, 0.1], jnp.float64)
+    for tab in TABS:
+        hs0 = HyperSolver(tableau=tab, g=None)
+        hs1 = HyperSolver(tableau=tab, g=lambda e, s, zz, dz: g_val)
+        base, _, _ = hs0.step(f, 0.0, eps, z)
+        hyper, _, _ = hs1.step(f, 0.0, eps, z)
+        np.testing.assert_allclose(
+            np.asarray(hyper - base),
+            eps ** (tab.order + 1) * np.asarray(g_val),
+            rtol=1e-10, atol=1e-12,
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(min_value=1, max_value=12))
+def test_scan_matches_python_loop(K):
+    f = lambda s, z: -0.7 * z + jnp.sin(s)
+    z0 = jnp.asarray([1.0, -2.0], jnp.float64)
+    grid = FixedGrid.over(0.0, 1.0, K)
+    traj = odeint_fixed(f, z0, grid, HEUN, return_traj=True)
+    z = z0
+    for k in range(K):
+        s = grid.s0 + k * grid.eps
+        psi, _ = rk_psi(f, HEUN, s, grid.eps, z)
+        z = z + grid.eps * psi
+    np.testing.assert_allclose(np.asarray(traj[-1]), np.asarray(z), rtol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(min_value=0.05, max_value=2.0))
+def test_alpha_family_consistency(alpha):
+    tab = alpha_family(alpha)
+    tab.validate()
+    assert abs(sum(tab.b) - 1.0) < 1e-12
+
+
+def test_lincomb_skips_zeros():
+    trees = [jnp.ones(3), jnp.full(3, 2.0)]
+    out = tree_lincomb((0.0, 0.5), trees)
+    np.testing.assert_allclose(np.asarray(out), 1.0)
+    out0 = tree_lincomb((0.0, 0.0), trees)
+    np.testing.assert_allclose(np.asarray(out0), 0.0)

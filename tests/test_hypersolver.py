@@ -1,0 +1,160 @@
+"""Hypersolver correctness: Theorem 1 scaling, pareto vs base solver,
+alpha-family base-solver swap, training harness round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    EULER, HEUN, FixedGrid, HyperSolver, NeuralODE, alpha_family,
+    get_tableau, odeint_fixed, solver_residual,
+)
+from repro.core.train import (
+    HypersolverTrainConfig, bind_g, make_hypersolver, train_hypersolver,
+)
+
+# x64 enabled per-module via tests/conftest.py
+
+# numpy constant: module import happens with x64 OFF (conftest.py)
+A = np.array([[-0.4, -1.6], [1.6, -0.4]], dtype=np.float64)
+
+
+def f_apply(params, s, x, z):
+    del params, x
+    return z @ A.T
+
+
+NODE = NeuralODE(
+    f_apply=f_apply,
+    hx_apply=lambda p, x: x,
+    hy_apply=lambda p, z: z,
+    s_span=(0.0, 1.0),
+)
+
+
+def g_apply(gp, eps, s, x, z, dz):
+    """Linear correction g = z W1 + dz W2 (exact residual for a linear field
+    is representable: R ~ A^2 z / 2 = A dz / 2)."""
+    return z @ gp["w1"].T + dz @ gp["w2"].T
+
+
+def batches(seed=0, n=64):
+    key = jax.random.PRNGKey(seed)
+    while True:
+        key, sub = jax.random.split(key)
+        yield jax.random.normal(sub, (n, 2), dtype=jnp.float64)
+
+
+def _train(base="euler", iters=250, K=10):
+    gp = {
+        "w1": jnp.zeros((2, 2), jnp.float64),
+        "w2": jnp.zeros((2, 2), jnp.float64),
+    }
+    cfg = HypersolverTrainConfig(
+        base_solver=base, K=K, iters=iters, pretrain_iters=10, swap_every=10,
+        lr=5e-2, lr_min=1e-3, atol=1e-9, rtol=1e-9,
+    )
+    gp, losses = train_hypersolver(NODE, None, g_apply, gp, batches(), cfg)
+    return gp, losses
+
+
+def test_zero_correction_reduces_to_base_solver():
+    z0 = jnp.array([[1.0, -0.5]])
+    grid = FixedGrid.over(0.0, 1.0, 5)
+    base = odeint_fixed(lambda s, z: z @ A.T, z0, grid, EULER, return_traj=False)
+    hs = HyperSolver(tableau=EULER, g=None)
+    hyper = hs.odeint(lambda s, z: z @ A.T, z0, grid, return_traj=False)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(hyper))
+
+
+def test_residual_fit_learns_true_residual():
+    """For a linear field, R -> A/2 * dz as eps -> 0; trained W2 ~ A/2."""
+    gp, losses = _train(iters=300)
+    assert losses[-1] < losses[0] * 0.05, (losses[0], losses[-1])
+    # The learned combination should act like A^2/2 on z (up to O(eps) terms).
+    eff = np.asarray(gp["w1"] + gp["w2"] @ A)
+    target = np.asarray(A @ A) / 2.0
+    assert np.linalg.norm(eff - target) / np.linalg.norm(target) < 0.15, eff
+
+
+def _expm(M):
+    # eigendecomposition exponential for the 2x2 normal-ish test matrix
+    w, V = np.linalg.eig(np.asarray(M))
+    return (V @ np.diag(np.exp(w)) @ np.linalg.inv(V)).real
+
+
+def test_theorem1_local_error_scaling():
+    """Hypersolver local error should be << base local error at the training
+    eps, and keep scaling ~ eps^{p+1} (Theorem 1: e_k = O(delta eps^{p+1}))."""
+    gp, _ = _train(iters=300, K=10)
+    z = jnp.array([[0.7, -0.3]], dtype=jnp.float64)
+    f = lambda s, zz: zz @ A.T
+    hs = make_hypersolver("euler", g_apply, gp, None)
+    base_errs, hyper_errs, epss = [], [], [0.1, 0.05, 0.025]
+    for eps in epss:
+        z_next_true = jnp.asarray(np.asarray(z) @ _expm(np.asarray(A) * eps).T)
+        # base Euler local error
+        base_pred = z + eps * f(0.0, z)
+        base_errs.append(float(jnp.linalg.norm(z_next_true - base_pred)))
+        hyper_pred, _, _ = hs.step(f, 0.0, eps, z)
+        hyper_errs.append(float(jnp.linalg.norm(z_next_true - hyper_pred)))
+    # delta << 1 at the training step size (trained at eps = 0.1)
+    assert hyper_errs[0] < 0.1 * base_errs[0], (base_errs, hyper_errs)
+    # Theorem 1: e_k <= delta * eps^{p+1} with delta << base residual constant
+    # (for Euler p=1 the base constant is e_base/eps^2 ~ ||A^2 z||/2).
+    for eps, be, he in zip(epss, base_errs, hyper_errs):
+        delta = he / eps ** 2
+        base_const = be / eps ** 2
+        assert delta < 0.12 * base_const, (eps, delta, base_const)
+
+
+def test_hypersolver_beats_base_at_equal_nfe():
+    """Terminal solution error at K=10 steps: hyper-Euler << Euler (Fig. 3)."""
+    gp, _ = _train(iters=300, K=10)
+    z0 = jnp.array([[1.0, 0.5], [-0.2, 0.9]])
+    grid = FixedGrid.over(0.0, 1.0, 10)
+    f = lambda s, z: z @ A.T
+    ref, _ = NODE.reference_trajectory(None, z0, 10, atol=1e-10, rtol=1e-10)[:2]
+    exact = ref[-1]
+    base = odeint_fixed(f, z0, grid, EULER, return_traj=False)
+    hs = make_hypersolver("euler", g_apply, gp, None)
+    hyper = hs.odeint(f, z0, grid, return_traj=False)
+    err_base = float(jnp.linalg.norm(base - exact))
+    err_hyper = float(jnp.linalg.norm(hyper - exact))
+    assert err_hyper < err_base * 0.2, (err_base, err_hyper)
+
+
+def test_step_size_generalization():
+    """Paper Sec. 4.1: trained at K=10, evaluated at unseen K (8, 20)."""
+    gp, _ = _train(iters=300, K=10)
+    f = lambda s, z: z @ A.T
+    z0 = jnp.array([[0.3, -1.1]])
+    for K in [8, 20]:
+        grid = FixedGrid.over(0.0, 1.0, K)
+        ref, _ = NODE.reference_trajectory(None, z0, K, atol=1e-10, rtol=1e-10)[:2]
+        exact = ref[-1]
+        base = odeint_fixed(f, z0, grid, EULER, return_traj=False)
+        hs = make_hypersolver("euler", g_apply, gp, None)
+        hyper = hs.odeint(f, z0, grid, return_traj=False)
+        assert float(jnp.linalg.norm(hyper - exact)) < float(
+            jnp.linalg.norm(base - exact)
+        ), K
+
+
+def test_alpha_family_base_swap():
+    """HyperMidpoint evaluated under other alpha-family members without
+    finetuning stays ahead of the plain member (paper Fig. 6)."""
+    gp, _ = _train(base="midpoint", iters=300, K=10)
+    z0 = jnp.array([[1.0, 0.5]])
+    f = lambda s, z: z @ A.T
+    grid = FixedGrid.over(0.0, 1.0, 10)
+    ref, _ = NODE.reference_trajectory(None, z0, 10, atol=1e-10, rtol=1e-10)[:2]
+    exact = ref[-1]
+    hs_mid = make_hypersolver("midpoint", g_apply, gp, None)
+    for alpha in [0.4, 0.5, 2.0 / 3.0, 1.0]:
+        tab = alpha_family(alpha)
+        plain = odeint_fixed(f, z0, grid, tab, return_traj=False)
+        swapped = hs_mid.with_tableau(tab)
+        hyper = swapped.odeint(f, z0, grid, return_traj=False)
+        err_plain = float(jnp.linalg.norm(plain - exact))
+        err_hyper = float(jnp.linalg.norm(hyper - exact))
+        assert err_hyper < err_plain, (alpha, err_plain, err_hyper)

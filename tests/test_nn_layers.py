@@ -1,0 +1,344 @@
+"""Unit tests for the NN substrate: attention (incl. cache parity), MoE
+dispatch vs loop oracle, RWKV6 recurrence, RG-LRU scans, FFN variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.attention import (
+    attention_init, init_cache, mha, mha_decode, precompute_cross_kv,
+)
+from repro.nn.ffn import ffn_apply, ffn_init, rwkv_channel_mix, rwkv_channel_mix_init
+from repro.nn.moe import moe_apply, moe_apply_reference, moe_init
+from repro.nn.module import rmsnorm, rmsnorm_init
+from repro.nn.rglru import (
+    griffin_recurrent_apply, griffin_recurrent_init, rglru_apply, rglru_init,
+    rglru_decode_step, rglru_scan_ref, causal_conv1d, causal_conv1d_init,
+)
+from repro.nn.rwkv6 import rwkv6_decode_step, rwkv6_init, rwkv6_time_mix, wkv6_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------------------------------------- attention ----
+
+def test_gqa_matches_mha_when_kv_equals_heads():
+    d, H, hd = 32, 4, 8
+    p = attention_init(KEY, d, H, H, hd)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, d))
+    out = mha(p, x, n_heads=H, n_kv=H, d_head=hd)
+    assert out.shape == (2, 6, d)
+    assert not np.any(np.isnan(np.asarray(out)))
+
+
+def test_causal_mask_blocks_future():
+    """Changing a future token must not change past outputs."""
+    d, H, KV, hd = 16, 4, 2, 4
+    p = attention_init(KEY, d, H, KV, hd)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, d))
+    out1 = mha(p, x, n_heads=H, n_kv=KV, d_head=hd)
+    x2 = x.at[0, 7].set(99.0)
+    out2 = mha(p, x2, n_heads=H, n_kv=KV, d_head=hd)
+    np.testing.assert_allclose(np.asarray(out1[0, :7]), np.asarray(out2[0, :7]),
+                               rtol=1e-5)
+    assert not np.allclose(np.asarray(out1[0, 7]), np.asarray(out2[0, 7]))
+
+
+def test_sliding_window_limits_receptive_field():
+    d, H, KV, hd = 16, 2, 2, 8
+    p = attention_init(KEY, d, H, KV, hd)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 10, d))
+    out1 = mha(p, x, n_heads=H, n_kv=KV, d_head=hd, window=3)
+    x2 = x.at[0, 0].set(50.0)  # token 0 outside window of token 9
+    out2 = mha(p, x2, n_heads=H, n_kv=KV, d_head=hd, window=3)
+    np.testing.assert_allclose(np.asarray(out1[0, 9]), np.asarray(out2[0, 9]),
+                               rtol=1e-5)
+
+
+def test_decode_matches_prefill():
+    """Token-by-token decode must reproduce the full-sequence forward."""
+    d, H, KV, hd, S = 24, 6, 2, 4, 7
+    p = attention_init(KEY, d, H, KV, hd, qk_norm=True)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, S, d))
+    full = mha(p, x, n_heads=H, n_kv=KV, d_head=hd, qk_norm=True)
+    cache = init_cache(2, S, KV, hd, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = mha_decode(p, x[:, t:t + 1], cache, jnp.asarray(t),
+                              n_heads=H, n_kv=KV, d_head=hd, qk_norm=True)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_cross_attention_decode():
+    d, H, KV, hd = 16, 4, 4, 4
+    p = attention_init(KEY, d, H, KV, hd)
+    enc = jax.random.normal(jax.random.PRNGKey(4), (2, 5, d))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 3, d))
+    full = mha(p, x, n_heads=H, n_kv=KV, d_head=hd, kv_x=enc, causal=False,
+               use_rope=False)
+    ckv = precompute_cross_kv(p, enc, n_kv=KV, d_head=hd)
+    o0, _ = mha_decode(p, x[:, 1:2], {}, jnp.asarray(1), n_heads=H, n_kv=KV,
+                       d_head=hd, cross_kv=ckv, use_rope=False)
+    np.testing.assert_allclose(np.asarray(full[:, 1:2]), np.asarray(o0),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------------- MoE ----
+
+@pytest.mark.parametrize("top_k,E", [(1, 4), (2, 8), (4, 8)])
+def test_moe_matches_loop_oracle_with_big_capacity(top_k, E):
+    d, d_ff = 16, 32
+    p = moe_init(KEY, d, d_ff, E)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 10, d))
+    out = moe_apply(p, x, n_experts=E, top_k=top_k, capacity_factor=float(E))
+    ref = moe_apply_reference(p, x, n_experts=E, top_k=top_k)
+    assert float(out.fraction_dropped) == 0.0
+    np.testing.assert_allclose(np.asarray(out.y), np.asarray(ref), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    d, d_ff, E = 8, 16, 2
+    p = moe_init(KEY, d, d_ff, E)
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 16, d))
+    out = moe_apply(p, x, n_experts=E, top_k=1, capacity_factor=0.25)
+    assert float(out.fraction_dropped) > 0.0
+    assert not np.any(np.isnan(np.asarray(out.y)))
+    assert float(out.aux_loss) > 0.0
+
+
+# --------------------------------------------------------------- RWKV6 ----
+
+def test_wkv6_scan_reference_properties():
+    B, T, H, D = 2, 5, 2, 4
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    r = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, H, D))
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, D)))  # in (0,1)
+    u = jnp.full((H, D), 0.5)
+    o, S = wkv6_scan_ref(r, k, v, w, u)
+    assert o.shape == (B, T, H, D)
+    assert S.shape == (B, H, D, D)
+    # first output only sees first token: o_0 = r_0 (u * k_0) v_0
+    expected0 = jnp.einsum("bhi,bhi,bhj->bhj", r[:, 0], u[None] * k[:, 0],
+                           v[:, 0])
+    np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(expected0),
+                               rtol=1e-5)
+
+
+def test_rwkv6_time_mix_streaming_parity():
+    """Processing a sequence in two halves with carried state == full pass."""
+    d, H = 32, 4
+    p = rwkv6_init(KEY, d, H, lora_rank=8)
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 8, d))
+    full, _ = rwkv6_time_mix(p, x, H)
+    h1, st = rwkv6_time_mix(p, x[:, :4], H)
+    h2, _ = rwkv6_time_mix(p, x[:, 4:], H, state=st)
+    merged = jnp.concatenate([h1, h2], axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(merged), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_rwkv6_decode_step_matches_full():
+    d, H = 16, 2
+    p = rwkv6_init(KEY, d, H, lora_rank=4)
+    x = jax.random.normal(jax.random.PRNGKey(11), (1, 6, d))
+    full, _ = rwkv6_time_mix(p, x, H)
+    state = None
+    outs = []
+    for t in range(6):
+        o, state = rwkv6_decode_step(p, x[:, t], state, H)
+        outs.append(o)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), rtol=2e-4,
+                               atol=2e-5)
+
+
+# -------------------------------------------------------------- RG-LRU ----
+
+def test_rglru_assoc_scan_matches_sequential():
+    W = 24
+    p = rglru_init(KEY, W)
+    x = jax.random.normal(jax.random.PRNGKey(12), (3, 16, W))
+    y1, h1 = rglru_apply(p, x)
+    y2, h2 = rglru_scan_ref(p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4,
+                               atol=1e-5)
+
+
+def test_rglru_decode_matches_scan():
+    W = 8
+    p = rglru_init(KEY, W)
+    x = jax.random.normal(jax.random.PRNGKey(13), (2, 5, W))
+    y_full, _ = rglru_scan_ref(p, x)
+    h = jnp.zeros((2, W), jnp.float32)
+    outs = []
+    for t in range(5):
+        y_t, h = rglru_decode_step(p, x[:, t], h)
+        outs.append(y_t)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.stack(outs, 1)), rtol=2e-4,
+                               atol=1e-5)
+
+
+def test_rglru_stability_long_sequence():
+    """|h| stays bounded over long sequences (a < 1)."""
+    W = 8
+    p = rglru_init(KEY, W)
+    x = jax.random.normal(jax.random.PRNGKey(14), (1, 512, W))
+    y, hT = rglru_apply(p, x)
+    assert float(jnp.max(jnp.abs(y))) < 50.0
+    assert not np.any(np.isnan(np.asarray(y)))
+
+
+def test_griffin_block_streaming_parity():
+    d, W = 16, 24
+    p = griffin_recurrent_init(KEY, d, W)
+    x = jax.random.normal(jax.random.PRNGKey(15), (2, 10, d))
+    full, _ = griffin_recurrent_apply(p, x)
+    y1, st = griffin_recurrent_apply(p, x[:, :5])
+    y2, _ = griffin_recurrent_apply(p, x[:, 5:], state=st)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.concatenate([y1, y2], 1)),
+                               rtol=3e-4, atol=2e-5)
+
+
+def test_causal_conv1d_shift_invariance():
+    W = 6
+    p = causal_conv1d_init(KEY, W, 4)
+    x = jax.random.normal(jax.random.PRNGKey(16), (1, 12, W))
+    y_full, _ = causal_conv1d(p, x)
+    y1, carry = causal_conv1d(p, x[:, :7])
+    y2, _ = causal_conv1d(p, x[:, 7:], carry)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate([y1, y2], 1)),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------------- FFN ----
+
+def test_ffn_variants():
+    d, f = 8, 16
+    x = jax.random.normal(jax.random.PRNGKey(17), (2, 3, d))
+    for gated, act in [(True, "silu"), (True, "gelu"), (False, "relu2"),
+                       (False, "gelu")]:
+        p = ffn_init(KEY, d, f, gated=gated)
+        y = ffn_apply(p, x, act=act)
+        assert y.shape == x.shape
+        assert not np.any(np.isnan(np.asarray(y)))
+
+
+def test_rwkv_channel_mix_runs():
+    d, f = 8, 16
+    p = rwkv_channel_mix_init(KEY, d, f)
+    x = jax.random.normal(jax.random.PRNGKey(18), (2, 4, d))
+    x_prev = jnp.roll(x, 1, axis=1).at[:, 0].set(0.0)
+    y = rwkv_channel_mix(p, x, x_prev)
+    assert y.shape == x.shape
+
+
+def test_rmsnorm_scale_invariance_direction():
+    p = rmsnorm_init(8)
+    x = jax.random.normal(jax.random.PRNGKey(19), (3, 8))
+    y1 = rmsnorm(p, x)
+    y2 = rmsnorm(p, 10.0 * x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4)
+
+
+@pytest.mark.parametrize("top_k,E", [(1, 4), (2, 8), (8, 8)])
+def test_moe_sorted_matches_loop_oracle(top_k, E):
+    from repro.nn.moe import moe_apply_sorted
+    d, d_ff = 16, 32
+    p = moe_init(KEY, d, d_ff, E)
+    x = jax.random.normal(jax.random.PRNGKey(21), (2, 12, d))
+    out = moe_apply_sorted(p, x, n_experts=E, top_k=top_k,
+                           capacity_factor=float(E))
+    ref = moe_apply_reference(p, x, n_experts=E, top_k=top_k)
+    assert float(out.fraction_dropped) == 0.0
+    np.testing.assert_allclose(np.asarray(out.y), np.asarray(ref), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_moe_sorted_matches_einsum_dispatch_incl_drops():
+    """Same capacity => same kept-token semantics as the einsum dispatch
+    (slot-major priority order)."""
+    from repro.nn.moe import moe_apply_sorted
+    d, d_ff, E = 8, 16, 4
+    p = moe_init(KEY, d, d_ff, E)
+    x = jax.random.normal(jax.random.PRNGKey(22), (1, 32, d))
+    o1 = moe_apply(p, x, n_experts=E, top_k=1, capacity_factor=0.5)
+    o2 = moe_apply_sorted(p, x, n_experts=E, top_k=1, capacity_factor=0.5)
+    np.testing.assert_allclose(float(o1.fraction_dropped),
+                               float(o2.fraction_dropped), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(o1.y), np.asarray(o2.y), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_moe_sorted_grads_flow():
+    from repro.nn.moe import moe_apply_sorted
+    d, d_ff, E = 8, 16, 4
+    p = moe_init(KEY, d, d_ff, E)
+    x = jax.random.normal(jax.random.PRNGKey(23), (1, 16, d))
+
+    def loss(pp):
+        return jnp.sum(moe_apply_sorted(pp, x, n_experts=E, top_k=2).y ** 2)
+
+    g = jax.grad(loss)(p)
+    total = sum(float(jnp.sum(jnp.abs(l)))
+                for l in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(total) and total > 0
+
+
+def test_chunked_attention_matches_dense():
+    from repro.nn.attention import set_attention_chunking
+    d, H, KV, hd, S = 16, 4, 2, 4, 32
+    p = attention_init(KEY, d, H, KV, hd)
+    x = jax.random.normal(jax.random.PRNGKey(30), (2, S, d))
+    for causal, window in [(True, None), (True, 5), (False, None)]:
+        ref = mha(p, x, n_heads=H, n_kv=KV, d_head=hd, causal=causal,
+                  window=window)
+        set_attention_chunking(8)
+        try:
+            out = mha(p, x, n_heads=H, n_kv=KV, d_head=hd, causal=causal,
+                      window=window)
+        finally:
+            set_attention_chunking(None)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5,
+                                   err_msg=f"{causal},{window}")
+
+
+def test_moe_int8_dispatch_close_to_fp():
+    from repro.nn.moe import moe_apply_sorted
+    d, d_ff, E = 16, 32, 4
+    p = moe_init(KEY, d, d_ff, E)
+    x = jax.random.normal(jax.random.PRNGKey(41), (2, 16, d))
+    fp = moe_apply_sorted(p, x, n_experts=E, top_k=2, capacity_factor=4.0)
+    q = moe_apply_sorted(p, x, n_experts=E, top_k=2, capacity_factor=4.0,
+                         int8_dispatch=True)
+    err = float(jnp.mean(jnp.abs(fp.y - q.y)))
+    ref = float(jnp.mean(jnp.abs(fp.y))) + 1e-9
+    assert err / ref < 0.05, (err, ref)
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    d, H, KV, hd, S = 32, 4, 2, 8, 12
+    p = attention_init(KEY, d, H, KV, hd)
+    x = jax.random.normal(jax.random.PRNGKey(42), (2, S, d))
+    full = mha(p, x, n_heads=H, n_kv=KV, d_head=hd)
+    cache = init_cache(2, S, KV, hd, kv_int8=True)
+    outs = []
+    for t in range(S):
+        o, cache = mha_decode(p, x[:, t:t + 1], cache, jnp.asarray(t),
+                              n_heads=H, n_kv=KV, d_head=hd)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    err = float(jnp.mean(jnp.abs(full - dec)))
+    mag = float(jnp.mean(jnp.abs(full))) + 1e-9
+    assert err / mag < 0.02, (err, mag)

@@ -1,0 +1,79 @@
+"""Unit tests for the sharding rule engine (pure spec logic — no mesh
+devices needed; divisibility checks use a mock mesh shape)."""
+from types import SimpleNamespace
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    param_pspec, sanitize_spec, set_ep_axis, zero_pspec,
+)
+
+MESH = SimpleNamespace(shape={"data": 16, "model": 16})
+
+
+def test_attention_projections():
+    assert param_pspec("groups/b0/attn/wq/kernel", 3) == P(None, None, "model")
+    assert param_pspec("groups/b0/attn/wo/kernel", 3) == P(None, "model", None)
+    assert param_pspec("tail/t0/attn/wk/kernel", 2) == P(None, "model")
+
+
+def test_embed_vocab_sharding_and_sanitize():
+    assert param_pspec("embed/table", 2) == P("model", None)
+    # whisper vocab 51865 not divisible by 16 -> replicate dim 0
+    assert sanitize_spec(MESH, P("model", None), (51865, 512)) == P(None, None)
+    assert sanitize_spec(MESH, P("model", None), (256000, 512)) == \
+        P("model", None)
+
+
+def test_moe_expert_parallel_axis_flip():
+    assert param_pspec("groups/b1/moe/wi", 4) == P(None, "model", None, None)
+    set_ep_axis("data")
+    try:
+        assert param_pspec("groups/b1/moe/wi", 4) == \
+            P(None, "data", None, "model")
+        assert param_pspec("groups/b1/moe/wd", 4) == \
+            P(None, "data", "model", None)
+    finally:
+        set_ep_axis("model")
+    assert param_pspec("groups/b1/moe/wd", 4) == P(None, "model", None, None)
+
+
+def test_zero_pspec_skips_scanned_stack_axis():
+    # stacked ffn weight (96, 18432, 73728): data goes on dim1, NOT the
+    # scanned dim0 (which would force a pre-loop all-gather)
+    spec = zero_pspec("groups/b0/ffn/wi/kernel", (96, 18432, 73728), 16)
+    assert spec == P(None, "data", "model")
+    # unstacked weight: data may take dim 0
+    spec2 = zero_pspec("head/kernel", (4096, 151936), 16)
+    assert spec2 == P("data", "model")
+
+
+def test_zero_pspec_no_duplicate_data_axis():
+    set_ep_axis("data")
+    try:
+        spec = zero_pspec("groups/b1/moe/wi", (24, 128, 5120, 8192), 16)
+        flat = [a for ax in spec for a in
+                ([ax] if isinstance(ax, str) else list(ax or ()))]
+        assert flat.count("data") <= 1, spec
+    finally:
+        set_ep_axis("model")
+
+
+def test_unknown_params_replicate():
+    assert param_pspec("something/new/weird", 3) == P(None, None, None)
+
+
+def test_norms_replicated():
+    assert param_pspec("groups/b0/ln1/scale", 2) == P(None, None)
+    assert param_pspec("ln_f/scale", 1) == P(None)
+
+
+def test_rwkv_and_griffin_rules():
+    assert param_pspec("groups/b0/tmix/wr/kernel", 3) == \
+        P(None, None, "model")
+    assert param_pspec("groups/b0/tmix/wo/kernel", 3) == \
+        P(None, "model", None)
+    assert param_pspec("groups/b0/griffin/rglru/lam", 2) == P(None, "model")
+    assert param_pspec("groups/b0/griffin/conv/w", 3) == \
+        P(None, None, "model")

@@ -1,0 +1,144 @@
+"""Numerical-order and correctness tests for the solver substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DOPRI5, EULER, HEUN, MIDPOINT, RK4, RK38, RK3_KUTTA,
+    FixedGrid, alpha_family, get_tableau, odeint_dopri5, odeint_fixed,
+    local_error,
+)
+
+# x64 enabled per-module via tests/conftest.py
+
+
+# z' = A z with known matrix exponential solution.
+# (numpy constant: module import happens with x64 OFF — see conftest.py)
+A = np.array([[-0.5, -2.0], [2.0, -0.5]], dtype=np.float64)
+
+
+def linear_field(s, z):
+    return z @ A.T
+
+
+def exact_linear(z0, t):
+    import scipy.linalg as sla  # noqa: F401 — not available; use eig decomposition
+    raise NotImplementedError
+
+
+def expm(M):
+    """Matrix exponential via scaling-and-squaring on Pade(6) — small fixed impl."""
+    n = M.shape[0]
+    norm = np.linalg.norm(M, 1)
+    j = max(0, int(np.ceil(np.log2(max(norm, 1e-30)))) + 1)
+    Ms = np.asarray(M) / (2 ** j)
+    X = Ms
+    c = 0.5
+    N = np.eye(n) + c * Ms
+    D = np.eye(n) - c * Ms
+    q = 6
+    p = True
+    for k in range(2, q + 1):
+        c = c * (q - k + 1) / (k * (2 * q - k + 1))
+        X = Ms @ X
+        N = N + c * X
+        D = D + (c if p else -c) * X
+        p = not p
+    F = np.linalg.solve(D, N)
+    for _ in range(j):
+        F = F @ F
+    return F
+
+
+@pytest.mark.parametrize(
+    "tab,expected_order",
+    [(EULER, 1), (MIDPOINT, 2), (HEUN, 2), (RK3_KUTTA, 3), (RK4, 4), (RK38, 4)],
+)
+def test_global_order_of_convergence(tab, expected_order):
+    """Global error should scale ~ eps^p: fitted log-log slope close to p."""
+    z0 = jnp.array([[1.0, 0.5]], dtype=jnp.float64)
+    T = 1.0
+    exact = jnp.asarray(z0 @ expm(np.asarray(A * T)).T)
+    Ks = [8, 16, 32, 64]
+    errs = []
+    for K in Ks:
+        grid = FixedGrid.over(0.0, T, K)
+        zT = odeint_fixed(linear_field, z0, grid, tab, return_traj=False)
+        errs.append(float(jnp.linalg.norm(zT - exact)))
+    slopes = np.diff(np.log(errs)) / np.diff(np.log([1.0 / k for k in Ks]))
+    assert np.mean(slopes) > expected_order - 0.35, (errs, slopes)
+
+
+@pytest.mark.parametrize("alpha", [0.3, 0.5, 2.0 / 3.0, 1.0])
+def test_alpha_family_is_second_order(alpha):
+    tab = alpha_family(alpha)
+    tab.validate()
+    z0 = jnp.array([[1.0, 0.5]], dtype=jnp.float64)
+    exact = jnp.asarray(z0 @ expm(np.asarray(A)).T)
+    errs = []
+    for K in [16, 32, 64]:
+        zT = odeint_fixed(linear_field, z0, FixedGrid.over(0, 1, K), tab,
+                          return_traj=False)
+        errs.append(float(jnp.linalg.norm(zT - exact)))
+    slopes = np.diff(np.log(errs)) / np.diff(np.log([1 / 16, 1 / 32, 1 / 64]))
+    assert np.mean(slopes) > 1.7, (errs, slopes)
+
+
+def test_alpha_family_recovers_midpoint_and_heun():
+    assert np.allclose(alpha_family(0.5).b, MIDPOINT.b)
+    assert np.allclose(alpha_family(1.0).b, HEUN.b)
+    assert np.allclose(alpha_family(0.5).a[1], MIDPOINT.a[1])
+
+
+def test_local_error_order():
+    """Local truncation error e_k = O(eps^{p+1}) (paper Sec. 2)."""
+    z0 = jnp.array([[1.0, 0.5]], dtype=jnp.float64)
+    for tab, p in [(EULER, 1), (HEUN, 2), (RK4, 4)]:
+        errs = []
+        epss = [0.2, 0.1, 0.05]
+        for eps in epss:
+            z_next = jnp.asarray(z0 @ expm(np.asarray(A * eps)).T)
+            errs.append(float(local_error(linear_field, tab, 0.0, eps, z0, z_next)))
+        slopes = np.diff(np.log(errs)) / np.diff(np.log(epss))
+        assert np.mean(slopes) > p + 1 - 0.3, (tab.name, errs, slopes)
+
+
+def test_dopri5_matches_exact_solution():
+    z0 = jnp.array([[1.0, 0.5], [-2.0, 0.25]], dtype=jnp.float64)
+    grid = FixedGrid.over(0.0, 1.0, 4)
+    traj, nfe = odeint_dopri5(linear_field, z0, grid, atol=1e-9, rtol=1e-9)
+    for k, s in enumerate(np.asarray(grid.s_span)):
+        exact = np.asarray(z0) @ expm(np.asarray(A) * s).T
+        np.testing.assert_allclose(np.asarray(traj[k]), exact, rtol=1e-6, atol=1e-8)
+    assert int(nfe) > 0
+
+
+def test_dopri5_pytree_state():
+    """Adaptive solver must handle tuple states (e.g. CNF (z, logp))."""
+    z0 = (jnp.ones((3, 2)), jnp.zeros((3,)))
+
+    def f(s, state):
+        z, logp = state
+        return (-z, -jnp.sum(z, axis=-1))
+
+    grid = FixedGrid.over(0.0, 1.0, 2)
+    traj, _ = odeint_dopri5(f, z0, grid, atol=1e-8, rtol=1e-8)
+    np.testing.assert_allclose(
+        np.asarray(traj[0][-1]), np.exp(-1.0) * np.ones((3, 2)), rtol=1e-5
+    )
+
+
+def test_fixed_solver_trajectory_shape():
+    z0 = jnp.ones((4, 3))
+    grid = FixedGrid.over(0.0, 1.0, 7)
+    traj = odeint_fixed(lambda s, z: -z, z0, grid, RK4, return_traj=True)
+    assert traj.shape == (8, 4, 3)
+    np.testing.assert_allclose(np.asarray(traj[0]), np.asarray(z0))
+
+
+def test_tableau_registry_lookup():
+    assert get_tableau("euler") is EULER
+    assert get_tableau("alpha_0.75").order == 2
+    with pytest.raises(KeyError):
+        get_tableau("nope")

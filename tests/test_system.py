@@ -1,0 +1,136 @@
+"""End-to-end behaviour tests for the hypersolver system.
+
+A miniature version of the paper's full pipeline: train a Neural ODE on a
+task, generate dopri5 ground truth, fit a hypersolver by residual fitting,
+and verify the hypersolved model preserves task accuracy at a fraction of
+the NFE (paper Figs. 3-4 in microcosm).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    EULER, FixedGrid, NeuralODE, get_tableau, odeint_fixed,
+)
+from repro.core.train import (
+    HypersolverTrainConfig, make_hypersolver, train_hypersolver,
+)
+from repro.optim import adamw, apply_updates
+
+
+def _make_node(key, nz=8):
+    """Tiny MLP Neural ODE f(s, z) = W2 tanh(W1 [z, s])."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "w1": jax.random.normal(k1, (nz + 1, 32)) * 0.4,
+        "w2": jax.random.normal(k2, (32, nz)) * 0.4,
+        "hx": jax.random.normal(k3, (2, nz)) * 0.7,
+        "hy": jax.random.normal(k4, (nz, 2)) * 0.7,
+    }
+
+    def f_apply(p, s, x, z):
+        s_col = jnp.broadcast_to(jnp.asarray(s, z.dtype), z[..., :1].shape)
+        h = jnp.concatenate([z, s_col], axis=-1)
+        return jnp.tanh(h @ p["w1"]) @ p["w2"]
+
+    node = NeuralODE(
+        f_apply=f_apply,
+        hx_apply=lambda p, x: x @ p["hx"],
+        hy_apply=lambda p, z: z @ p["hy"],
+    )
+    return node, params
+
+
+def _two_moons(key, n):
+    k1, k2, k3 = jax.random.split(key, 3)
+    t = jax.random.uniform(k1, (n,)) * jnp.pi
+    lab = jax.random.bernoulli(k2, 0.5, (n,)).astype(jnp.int32)
+    x = jnp.stack(
+        [jnp.cos(t) * (1 - 2 * lab) + lab * 1.0,
+         jnp.sin(t) * (1 - 2 * lab) + lab * 0.3],
+        axis=-1,
+    )
+    x = x + 0.05 * jax.random.normal(k3, x.shape)
+    return x, lab
+
+
+def test_full_pipeline_hypersolver_preserves_accuracy():
+    key = jax.random.PRNGKey(0)
+    node, params = _make_node(key)
+
+    # --- phase 0: train the Neural ODE on the task (dopri5-quality fwd: RK4 K=32)
+    opt = adamw(3e-3)
+    opt_state = opt.init(params)
+    xs, ys = _two_moons(jax.random.PRNGKey(1), 256)
+
+    def loss_fn(p):
+        logits = node.forward_fixed(p, xs, get_tableau("rk4"), 32)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(xs.shape[0]), ys])
+
+    @jax.jit
+    def train_step(p, st, i):
+        l, g = jax.value_and_grad(loss_fn)(p)
+        upd, st = opt.update(g, st, p, i)
+        return apply_updates(p, upd), st, l
+
+    for i in range(150):
+        params, opt_state, _ = train_step(params, opt_state, i)
+
+    def acc(logits):
+        return float(jnp.mean(jnp.argmax(logits, -1) == ys))
+
+    ref_logits = node.forward_fixed(params, xs, get_tableau("rk4"), 32)
+    acc_ref = acc(ref_logits)
+    assert acc_ref > 0.9, acc_ref
+
+    # --- phase 1: fit HyperEuler by residual fitting on dopri5 trajectories
+    nz = 8
+    kg = jax.random.PRNGKey(2)
+    gp = {
+        "w1": jax.random.normal(kg, (2 * nz + 1, 32)) * 0.05,
+        "w2": jnp.zeros((32, nz)),
+    }
+
+    def g_apply(g, eps, s, x, z, dz):
+        s_col = jnp.broadcast_to(jnp.asarray(s, z.dtype), z[..., :1].shape)
+        h = jnp.concatenate([z, dz, s_col], axis=-1)
+        return jnp.tanh(h @ g["w1"]) @ g["w2"]
+
+    def batches():
+        k = jax.random.PRNGKey(3)
+        while True:
+            k, sub = jax.random.split(k)
+            yield _two_moons(sub, 128)[0]
+
+    cfg = HypersolverTrainConfig(
+        base_solver="euler", K=4, iters=220, pretrain_iters=10, swap_every=10,
+        lr=1e-2, lr_min=5e-4, atol=1e-6, rtol=1e-6,
+    )
+    gp, losses = train_hypersolver(node, params, g_apply, gp, batches(), cfg)
+    assert losses[-1] < losses[0], (losses[0], losses[-1])
+
+    # --- phase 2: K=4 HyperEuler vs K=4 Euler on held-out data
+    xt, yt = _two_moons(jax.random.PRNGKey(9), 512)
+    ref, _, _ = node.reference_trajectory(params, xt, 4, atol=1e-8, rtol=1e-8)
+    zT_true = ref[-1]
+    grid = FixedGrid.over(0.0, 1.0, 4)
+    f = node.field(params, xt)
+    z0 = node.hx_apply(params, xt)
+    zT_euler = odeint_fixed(f, z0, grid, EULER, return_traj=False)
+    hs = make_hypersolver("euler", g_apply, gp, xt)
+    zT_hyper = hs.odeint(f, z0, grid, return_traj=False)
+
+    err_euler = float(jnp.mean(jnp.abs(zT_euler - zT_true)))
+    err_hyper = float(jnp.mean(jnp.abs(zT_hyper - zT_true)))
+    assert err_hyper < err_euler, (err_euler, err_hyper)
+
+    # task metric: hypersolver accuracy drop vs dopri5-quality reference <= Euler's
+    logits_true = node.hy_apply(params, zT_true)
+    logits_e = node.hy_apply(params, zT_euler)
+    logits_h = node.hy_apply(params, zT_hyper)
+    yt_ref = jnp.argmax(logits_true, -1)
+    agree_e = float(jnp.mean(jnp.argmax(logits_e, -1) == yt_ref))
+    agree_h = float(jnp.mean(jnp.argmax(logits_h, -1) == yt_ref))
+    assert agree_h >= agree_e, (agree_e, agree_h)
+    assert not np.any(np.isnan(np.asarray(zT_hyper)))
