@@ -18,15 +18,11 @@ import numpy as np
 
 from benchmarks.common import CACHE
 from repro.checkpoint import CheckpointManager
-from repro.core import (
-    FixedGrid, HyperSolver, get_tableau, odeint_dopri5, odeint_fixed,
-)
-from repro.core.neural_ode import NeuralODE
+from repro.core import FixedGrid, Integrator, get_tableau, odeint_dopri5
 from repro.core.residual import residual_fitting_loss
 from repro.data import density_sampler
 from repro.nn.cnf import (
-    base_log_prob, cnf_field, cnf_mlp_init, exact_trace_dynamics,
-    reversed_field,
+    cnf_log_prob, cnf_mlp_init, cnf_sample, exact_trace_dynamics,
 )
 from repro.nn.module import mlp_apply, mlp_init
 from repro.optim import adamw, apply_updates, clip_by_global_norm
@@ -41,16 +37,9 @@ def train_cnf(density: str, iters: int = 400, batch: int = 128, seed=0):
     opt = adamw(1e-3)          # paper C.3: Adam, lr 1e-3
     st = opt.init(params)
     sampler = density_sampler(density, batch, seed=seed + 1)
-    rk4 = get_tableau("rk4")
 
     def nll(p, x):
-        aug = exact_trace_dynamics(p)
-        rev = reversed_field(aug)
-        state0 = (x, jnp.zeros(x.shape[0]))
-        zT, dlogp = odeint_fixed(rev, state0, FixedGrid.over(0, 1, 8), rk4,
-                                 return_traj=False)
-        logp = base_log_prob(zT) - dlogp
-        return -jnp.mean(logp)
+        return -jnp.mean(cnf_log_prob(p, x, K=8, solver="rk4"))
 
     @jax.jit
     def step(p, st, i, x):
@@ -100,9 +89,9 @@ def fit_hyperheun(cnf_params, density: str, iters: int = 500, K: int = 1,
         return traj
 
     def loss_fn(g, traj):
-        hs = HyperSolver(tableau=heun,
-                         g=lambda e, s, z, dz: _g_apply(g, e, s, None, z, dz))
-        return residual_fitting_loss(hs, aug, traj, grid)
+        integ = Integrator(tableau=heun,
+                           g=lambda e, s, z, dz: _g_apply(g, e, s, None, z, dz))
+        return residual_fitting_loss(integ, aug, traj, grid)
 
     @jax.jit
     def fit(g, st, i, traj):
@@ -149,20 +138,15 @@ def main(budget: str = "small"):
         x_ref = np.asarray(ref[0][-1])
         data = np.asarray(next(density_sampler(density, 1024, seed=77)))
 
-        grid1 = FixedGrid.over(0.0, 1.0, 1)
         candidates = {
-            "hyper_heun@2nfe": HyperSolver(
+            "hyper_heun@2nfe": (Integrator(
                 tableau=get_tableau("heun"),
-                g=lambda e, s, z, dz: _g_apply(gp, e, s, None, z, dz)),
-            "heun@2nfe": HyperSolver(tableau=get_tableau("heun"), g=None),
-            "euler@2nfe": None,  # handled as K=2 euler below
+                g=lambda e, s, z, dz: _g_apply(gp, e, s, None, z, dz)), 1),
+            "heun@2nfe": (Integrator(tableau=get_tableau("heun")), 1),
+            "euler@2nfe": (Integrator(tableau=get_tableau("euler")), 2),
         }
-        for name, hs in candidates.items():
-            if name == "euler@2nfe":
-                zT = odeint_fixed(aug, state0, FixedGrid.over(0, 1, 2),
-                                  get_tableau("euler"), return_traj=False)
-            else:
-                zT = hs.odeint(aug, state0, grid1, return_traj=False)
+        for name, (integ, K) in candidates.items():
+            zT = cnf_sample(p, z0, K=K, solver=integ)
             x = np.asarray(zT[0])
             rows.append({
                 "bench": "cnf", "density": density, "method": name,

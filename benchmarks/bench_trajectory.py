@@ -13,10 +13,10 @@ import numpy as np
 
 from benchmarks.common import CACHE
 from repro.checkpoint import CheckpointManager
-from repro.core import FixedGrid, get_tableau, odeint_fixed
+from repro.core import FixedGrid
 from repro.core.neural_ode import NeuralODE
 from repro.core.train import (
-    HypersolverTrainConfig, make_hypersolver, train_hypersolver,
+    HypersolverTrainConfig, make_integrator, train_hypersolver,
 )
 from repro.nn.module import mlp_apply, mlp_init
 from repro.optim import adamw, apply_updates, clip_by_global_norm
@@ -50,8 +50,8 @@ def train_tracker(iters: int = 400, seed=0):
     s_knots = FixedGrid.over(0, 1, K).s_span
 
     def loss_fn(p, z0):
-        traj = odeint_fixed(node.field(p, None), z0,
-                            FixedGrid.over(0, 1, K), get_tableau("rk4"))
+        traj = make_integrator("rk4").solve(node.field(p, None), z0,
+                                            FixedGrid.over(0, 1, K))
         target = _beta(s_knots)[:, None, :]
         return jnp.mean((traj - target) ** 2)
 
@@ -116,13 +116,11 @@ def main(budget: str = "small"):
             grid = FixedGrid.over(0.0, 1.0, K)
             f = node.field(params, z0)
             if name == "hyper_euler":
-                hs = make_hypersolver("euler", _g_apply, gp, z0)
-                zT = hs.odeint(f, z0, grid, return_traj=False)
-                nfe = K
+                integ = make_integrator("euler", _g_apply, gp, z0)
             else:
-                tab = get_tableau(name)
-                zT = odeint_fixed(f, z0, grid, tab, return_traj=False)
-                nfe = tab.stages * K
+                integ = make_integrator(name)
+            zT = integ.solve(f, z0, grid, return_traj=False)
+            nfe = integ.nfe(K)
             err = float(jnp.mean(jnp.linalg.norm(zT - ref[-1], axis=-1)))
             rows.append({"bench": "trajectory_tracking", "solver": name,
                          "K": K, "nfe": nfe,

@@ -12,10 +12,9 @@ from benchmarks.common import (
     accuracy_drop, eval_solver, fit_image_hypersolver, timed,
     train_image_node,
 )
-from repro.core import FixedGrid, get_tableau, odeint_fixed
-from repro.core.train import make_hypersolver
+from repro.core import FixedGrid, get_tableau
 from repro.data import synthetic_images
-from repro.models.conv_node import mnist_g_apply
+from repro.models.conv_node import mnist_integrator
 
 
 def _min_K_for_accuracy(node, params, name, xt, gp, threshold=0.1,
@@ -49,12 +48,11 @@ def main(budget: str = "small"):
         K, nfe = _min_K_for_accuracy(node, params, name, xt, gp)
         grid = FixedGrid.over(0.0, 1.0, K)
         if name.startswith("hyper"):
-            hs = make_hypersolver("euler", mnist_g_apply, gp, xt)
-            fn = jax.jit(lambda z: hs.odeint(f, z, grid, return_traj=False))
+            integ = mnist_integrator(gp, xt, base="euler")
         else:
-            tab = get_tableau(name)
-            fn = jax.jit(lambda z: odeint_fixed(f, z, grid, tab,
-                                                return_traj=False))
+            integ = mnist_integrator(base=get_tableau(name))
+        fn = jax.jit(lambda z, it=integ, gr=grid: it.solve(
+            f, z, gr, return_traj=False))
         t, _ = timed(fn, z0)
         rows.append({"bench": "wallclock_mnist", "solver": name, "K": K,
                      "nfe": nfe, "ms": round(t * 1e3, 2),

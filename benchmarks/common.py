@@ -18,10 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import FixedGrid, get_tableau, odeint_fixed
-from repro.core.train import (
-    HypersolverTrainConfig, make_hypersolver, train_hypersolver,
-)
+from repro.core import FixedGrid, get_tableau
+from repro.core.train import HypersolverTrainConfig, train_hypersolver
 from repro.data import synthetic_images
 from repro.models.conv_node import (
     init_mnist_hyper, mnist_g_apply, mnist_node,
@@ -116,15 +114,14 @@ def eval_solver(node, params, solver_name: str, K: int, x, gp=None,
     grid = FixedGrid.over(0.0, 1.0, K)
     f = node.field(params, x)
     z0 = node.hx_apply(params, x)
+    from repro.models.conv_node import mnist_integrator
     if solver_name.startswith("hyper_"):
         base = solver_name.split("_", 1)[1]
-        hs = make_hypersolver(alpha_tab or base, mnist_g_apply, gp, x)
-        zT = hs.odeint(f, z0, grid, return_traj=False)
-        nfe = hs.tableau.stages * K
+        integ = mnist_integrator(gp, x, base=alpha_tab or base)
     else:
-        tab = alpha_tab or get_tableau(solver_name)
-        zT = odeint_fixed(f, z0, grid, tab, return_traj=False)
-        nfe = tab.stages * K
+        integ = mnist_integrator(base=alpha_tab or get_tableau(solver_name))
+    zT = integ.solve(f, z0, grid, return_traj=False)
+    nfe = integ.nfe(K)
     mape = float(jnp.mean(jnp.abs(zT - z_ref)
                           / (jnp.abs(z_ref) + 1e-3))) * 100
     return {"mape": mape, "nfe": nfe, "zT": zT, "z_ref": z_ref}

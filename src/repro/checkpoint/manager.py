@@ -10,25 +10,58 @@ Restore takes a target sharding tree (or None for host arrays): each leaf
 is ``jax.device_put`` with its NamedSharding, so a run checkpointed on a
 512-chip mesh restores onto 256 chips (or a CPU) unchanged — this is the
 elastic-scaling path.
+
+The wire format is codec-tagged: the manifest records which compressor
+wrote the leaves ("zstd" when the optional ``zstandard`` package is
+available, "zlib" otherwise), and restore dispatches on that tag — a
+checkpoint written with zstd on a training cluster restores on a zlib-only
+host only if zstandard is importable there, with a clear error otherwise.
+Pre-tag checkpoints (no "codec" field) default to "zstd".
 """
 from __future__ import annotations
 
-import io
 import json
 import os
 import re
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
-import zstandard
 
-_CTX = zstandard.ZstdCompressor(level=3)
-_DCTX = zstandard.ZstdDecompressor()
+try:  # optional dependency: fall back to stdlib zlib when absent
+    import zstandard
+    _CTX = zstandard.ZstdCompressor(level=3)
+    _DCTX = zstandard.ZstdDecompressor()
+except ImportError:
+    zstandard = None
+    _CTX = _DCTX = None
+
+DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
+
+_COMPRESS = {
+    "zstd": (lambda raw: _CTX.compress(raw)),
+    "zlib": (lambda raw: zlib.compress(raw, 3)),
+    "raw": (lambda raw: raw),
+}
+
+
+def _decompress(codec: str, buf: bytes) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with codec='zstd' but the zstandard "
+                "package is not installed; pip install zstandard to restore")
+        return _DCTX.decompress(buf)
+    if codec == "zlib":
+        return zlib.decompress(buf)
+    if codec == "raw":
+        return buf
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -39,25 +72,31 @@ def _np_dtype(name: str) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, name))
 
 
-def _save_leaf(path: str, arr) -> None:
+def _save_leaf(path: str, arr, codec: str) -> None:
     # raw little-endian bytes; dtype/shape live in the manifest (numpy's
     # npy writer mangles extended dtypes like bfloat16 into void types)
     raw = np.ascontiguousarray(np.asarray(arr)).tobytes()
     with open(path, "wb") as f:
-        f.write(_CTX.compress(raw))
+        f.write(_COMPRESS[codec](raw))
 
 
-def _load_leaf(path: str, dtype: str, shape) -> np.ndarray:
+def _load_leaf(path: str, dtype: str, shape, codec: str) -> np.ndarray:
     with open(path, "rb") as f:
-        raw = _DCTX.decompress(f.read())
+        raw = _decompress(codec, f.read())
     return np.frombuffer(raw, dtype=_np_dtype(dtype)).reshape(shape)
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False,
+                 codec: str = DEFAULT_CODEC):
+        if codec not in _COMPRESS:
+            raise ValueError(f"unknown codec {codec!r}; have {sorted(_COMPRESS)}")
+        if codec == "zstd" and zstandard is None:
+            raise RuntimeError("codec='zstd' requires the zstandard package")
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
+        self.codec = codec
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
 
@@ -77,9 +116,11 @@ class CheckpointManager:
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
             for i, arr in enumerate(host):
-                _save_leaf(os.path.join(tmp, f"{i}.npy.zst"), arr)
+                _save_leaf(os.path.join(tmp, f"{i}.npy.zst"), arr,
+                           self.codec)
             manifest = {
                 "step": step,
+                "codec": self.codec,
                 "n_leaves": len(host),
                 "treedef": str(structure),
                 "dtypes": [str(a.dtype) for a in host],
@@ -127,10 +168,12 @@ class CheckpointManager:
             (manifest["n_leaves"], len(flat_like))
         flat_sh = (treedef.flatten_up_to(shardings)
                    if shardings is not None else [None] * len(flat_like))
+        codec = manifest.get("codec", "zstd")  # pre-tag checkpoints: zstd
         out = []
         for i, (l, sh) in enumerate(zip(flat_like, flat_sh)):
             arr = _load_leaf(os.path.join(d, f"{i}.npy.zst"),
-                             manifest["dtypes"][i], manifest["shapes"][i])
+                             manifest["dtypes"][i], manifest["shapes"][i],
+                             codec)
             assert list(arr.shape) == list(l.shape), (i, arr.shape, l.shape)
             if sh is not None:
                 out.append(jax.device_put(arr, sh))

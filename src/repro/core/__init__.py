@@ -3,6 +3,9 @@ from repro.core.tableaus import (  # noqa: F401
     Tableau, EULER, MIDPOINT, HEUN, RALSTON, RK4, RK38, RK3_KUTTA, DOPRI5,
     alpha_family, get as get_tableau,
 )
+from repro.core.integrate import (  # noqa: F401
+    Integrator, as_integrator, depth_like, rk_stages, with_initial,
+)
 from repro.core.solvers import (  # noqa: F401
     FixedGrid, odeint_fixed, rk_psi, local_error, tree_axpy, tree_lincomb,
 )
@@ -13,5 +16,6 @@ from repro.core.residual import (  # noqa: F401
 )
 from repro.core.neural_ode import NeuralODE  # noqa: F401
 from repro.core.train import (  # noqa: F401
-    HypersolverTrainConfig, train_hypersolver, make_hypersolver, bind_g,
+    HypersolverTrainConfig, train_hypersolver, make_hypersolver,
+    make_integrator, bind_g,
 )

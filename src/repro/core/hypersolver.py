@@ -4,99 +4,38 @@ General p-th order Hypersolved update (paper Eq. 5):
 
     z_{k+1} = z_k + eps * psi(s_k, x, z_k) + eps^{p+1} * g_omega(eps, s_k, x, z_k)
 
-``g_omega`` here is any callable ``g(eps, s, z, dz) -> pytree like z`` where
-``dz = f(s, z)`` is the first RK stage — passed in for free reuse, matching
-the paper's reference implementation which feeds ``g`` the concatenation
-``[z, dx, ds]``. Conditioning inputs ``x`` are closed over inside both ``f``
-and ``g`` (as in paper Eq. 1).
+``HyperSolver`` is a thin alias over the unified ``Integrator`` engine
+(core/integrate.py) kept for paper-facing call sites: ``g_omega`` is any
+callable ``g(eps, s, z, dz) -> pytree like z`` where ``dz = f(s, z)`` is
+the first RK stage — passed in for free reuse, matching the paper's
+reference implementation which feeds ``g`` the concatenation
+``[z, dx, ds]``. Conditioning inputs ``x`` are closed over inside both
+``f`` and ``g`` (as in paper Eq. 1).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.solvers import (
-    FixedGrid,
-    Pytree,
-    VectorField,
-    rk_psi,
-    tree_axpy,
-)
-from repro.core.tableaus import Tableau, get as get_tableau
-
-Correction = Callable[[jnp.ndarray, jnp.ndarray, Pytree, Pytree], Pytree]
+from repro.core.integrate import Correction, Integrator, Pytree, VectorField
+from repro.core.solvers import FixedGrid
+from repro.core.tableaus import get as get_tableau
 
 
 @dataclasses.dataclass(frozen=True)
-class HyperSolver:
+class HyperSolver(Integrator):
     """A base tableau paired with a correction network of matching order.
 
-    ``fused=True`` routes the update z + eps*psi + eps^{p+1}*g through the
-    Pallas hyper_step kernel (kernels/hyper_step): one read/write of the
-    state instead of three — the update itself is memory-bound, so the
-    fusion is the whole win on TPU (interpret-mode on CPU)."""
-
-    tableau: Tableau
-    g: Optional[Correction]  # None => plain base solver (g == 0)
-    fused: bool = False
-
-    @property
-    def order(self) -> int:
-        return self.tableau.order
-
-    @property
-    def name(self) -> str:
-        base = self.tableau.name
-        return f"hyper_{base}" if self.g is not None else base
-
-    def with_tableau(self, tab: Tableau) -> "HyperSolver":
-        """Swap the base solver, keeping g (paper Sec. 4.1 alpha-family
-        generalization: a HyperMidpoint evaluated under other 2nd-order
-        tableaus without finetuning)."""
-        return dataclasses.replace(self, tableau=tab)
-
-    def step(self, f: VectorField, s, eps, z: Pytree):
-        """One hypersolved step; returns (z_next, psi, dz)."""
-        psi, stages = rk_psi(f, self.tableau, s, eps, z)
-        dz = stages[0]
-        if self.g is not None:
-            corr = self.g(eps, s, z, dz)
-            if self.fused:
-                from repro.kernels.hyper_step.ops import hyper_step
-                z_next = jax.tree_util.tree_map(
-                    lambda zz, pp, gg: hyper_step(zz, pp, gg, float(eps),
-                                                  self.order),
-                    z, psi, corr)
-            else:
-                z_next = tree_axpy(eps, psi, z)
-                z_next = tree_axpy(eps ** (self.order + 1), corr, z_next)
-        else:
-            z_next = tree_axpy(eps, psi, z)
-        return z_next, psi, dz
+    ``fused=True`` routes the whole update — b-weighted stage combination
+    plus correction — through the Pallas fused_rk_update kernel
+    (kernels/hyper_step): one read/write of the state per step instead of
+    ``stages + 2`` — the update itself is memory-bound, so the fusion is
+    the whole win on TPU (interpret-mode on CPU)."""
 
     def odeint(self, f: VectorField, z0: Pytree, grid: FixedGrid,
                return_traj: bool = True):
-        """Integrate with lax.scan over the fixed mesh."""
-
-        def body(z, s):
-            z_next, _, _ = self.step(f, s, grid.eps, z)
-            return z_next, (z_next if return_traj else None)
-
-        s_knots = grid.s0 + grid.eps * jnp.arange(grid.K)
-        zT, ys = jax.lax.scan(body, z0, s_knots)
-        if not return_traj:
-            return zT
-        return jax.tree_util.tree_map(
-            lambda a, b: jnp.concatenate([a[None], b], axis=0), z0, ys
-        )
-
-    def nfe(self, K: int) -> int:
-        """Vector-field evaluations for K steps — O(pK), the g_omega
-        evaluation is counted separately as overhead (paper Sec. 6)."""
-        return self.tableau.stages * K
+        """Integrate with the unified engine over the fixed mesh."""
+        return self.solve(f, z0, grid, return_traj=return_traj)
 
 
 def make(base: str, g: Optional[Correction] = None) -> HyperSolver:

@@ -1,0 +1,251 @@
+"""Unified batched integration engine — every solve in the repo goes here.
+
+``Integrator`` subsumes the three integration paths the codebase grew
+(``solvers.odeint_fixed``, ``HyperSolver.odeint`` and the per-model scan
+loops): one scan-native engine that
+
+  * works on arbitrary pytree states (a CNF's ``(z, logp)`` tuple, the LM
+    residual stream, image feature maps) — all linear algebra is leaf-wise;
+  * composes with ``jax.jit`` / ``jax.vmap`` / ``jax.grad`` — the mesh walk
+    is a single ``lax.scan`` whose unrolled HLO is O(1) in K;
+  * supports *batched step sizes*: ``grid.eps`` may be an array with a
+    leading batch axis (per-sample eps for multi-rate serving — each row of
+    the batch integrates its own mesh), broadcast leaf-wise against the
+    state;
+  * emits the dense trajectory (leading axis K+1, including z0) or the
+    terminal state only;
+  * optionally rematerializes each step under reverse-mode AD
+    (``checkpoint=True``) so trajectories of long meshes backprop in O(K)
+    memory instead of O(K * stages);
+  * routes the update through the fused Pallas ``hyper_step`` kernel
+    (``fused=True``): the b-weighted stage combination AND the eps^{p+1}
+    correction term collapse into one memory pass per leaf, for every base
+    tableau — the update is memory-bound, so this is the serving hot path.
+
+The hypersolver update implemented for tableau psi and correction g
+(paper Eq. 3 + Eq. 5, Poli et al. 2020):
+
+    z_{k+1} = z_k + eps * sum_j b_j r_j + eps^{p+1} * g(eps, s_k, z_k, r_0)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tableaus import Tableau, get as get_tableau
+
+Pytree = Any
+VectorField = Callable[[jnp.ndarray, Pytree], Pytree]
+# g(eps, s, z, dz) -> correction pytree shaped like z; dz = f(s, z) is the
+# first RK stage, passed for free reuse (paper feeds g the concat [z, dz, s]).
+Correction = Callable[[Any, Any, Pytree, Pytree], Pytree]
+
+
+# ------------------------------------------------------ leaf-wise algebra ----
+
+def _bcast(a, leaf: jnp.ndarray):
+    """Right-pad a batched scalar coefficient with singleton axes so it
+    broadcasts against ``leaf`` from the leading (batch) axis."""
+    if isinstance(a, (int, float)):
+        return a
+    nd = jnp.ndim(a)
+    if nd == 0:
+        return a
+    return jnp.reshape(a, jnp.shape(a) + (1,) * (leaf.ndim - nd))
+
+
+def tree_axpy(a, x: Pytree, y: Pytree) -> Pytree:
+    """y + a * x, leaf-wise; ``a`` may be scalar or batched (leading axis)."""
+    return jax.tree_util.tree_map(lambda xi, yi: yi + _bcast(a, yi) * xi, x, y)
+
+
+def tree_lincomb(coeffs: Sequence[float], trees: Sequence[Pytree]) -> Pytree:
+    """sum_j coeffs[j] * trees[j], leaf-wise (skips exact-zero coeffs)."""
+    terms = [(c, t) for c, t in zip(coeffs, trees) if c != 0.0]
+    if not terms:
+        return jax.tree_util.tree_map(jnp.zeros_like, trees[0])
+    out = jax.tree_util.tree_map(lambda l: terms[0][0] * l, terms[0][1])
+    for c, t in terms[1:]:
+        out = tree_axpy(c, t, out)
+    return out
+
+
+def depth_like(s, z: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a depth coordinate ``s`` — scalar, or per-sample (B,) when
+    integrating with batched step sizes — to ``z[..., :1]``'s shape, the
+    layout fields use to concatenate depth as an extra channel."""
+    s = jnp.asarray(s, z.dtype)
+    if s.ndim:
+        s = s.reshape(s.shape + (1,) * (z.ndim - s.ndim))
+    return jnp.broadcast_to(s, z[..., :1].shape)
+
+
+def with_initial(z0: Pytree, traj: Pytree) -> Pytree:
+    """Prepend the initial state to a scanned trajectory, leaf-wise."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a[None], b], axis=0), z0, traj
+    )
+
+
+def rk_stages(f: VectorField, tab: Tableau, s, eps, z: Pytree):
+    """All stage evaluations r_i of an explicit tableau (paper Eq. 3).
+
+    ``stages[0] == f(s, z)``, which hypersolvers reuse as a free input to
+    g_omega. ``eps`` may be batched (leading axis)."""
+    stages = []
+    for i in range(tab.stages):
+        if i == 0:
+            zi = z
+        else:
+            zi = tree_axpy(eps, tree_lincomb(tab.a[i], stages), z)
+        stages.append(f(s + tab.c[i] * eps, zi))
+    return stages
+
+
+def rk_psi(f: VectorField, tab: Tableau, s, eps, z: Pytree):
+    """(psi, stages) where psi = sum_j b_j r_j is the RK update map."""
+    stages = rk_stages(f, tab, s, eps, z)
+    return tree_lincomb(tab.b, stages), stages
+
+
+def _static_eps(eps) -> Optional[float]:
+    """eps as a Python float when it is concrete and scalar, else None
+    (batched or traced eps cannot be baked into a Pallas kernel)."""
+    if isinstance(eps, (int, float)):
+        return float(eps)
+    try:
+        if jnp.ndim(eps) == 0:
+            return float(eps)
+    except (TypeError, jax.errors.ConcretizationTypeError):
+        pass
+    return None
+
+
+# ------------------------------------------------------------- the engine ----
+
+@dataclasses.dataclass(frozen=True)
+class Integrator:
+    """A base explicit-RK tableau, optionally paired with a hypersolver
+    correction ``g`` of matching order (paper Sec. 3) and a fused Pallas
+    update path.
+
+    ``fused=True`` collapses the whole per-step state update — the
+    b-weighted stage combination plus the eps^{p+1} correction — into a
+    single Pallas kernel pass per leaf (kernels/hyper_step): one read of
+    each stage and one write of the state instead of ``stages + 2`` passes.
+    Falls back to the jnp path when eps is batched/traced (the kernel bakes
+    eps statically).
+    """
+
+    tableau: Tableau
+    g: Optional[Correction] = None
+    fused: bool = False
+
+    @property
+    def order(self) -> int:
+        return self.tableau.order
+
+    @property
+    def name(self) -> str:
+        base = self.tableau.name
+        return f"hyper_{base}" if self.g is not None else base
+
+    def with_tableau(self, tab: Union[str, Tableau]) -> "Integrator":
+        """Swap the base tableau, keeping g (paper Sec. 4.1: an alpha-family
+        hypersolver evaluated under sibling tableaus without finetuning)."""
+        tab = get_tableau(tab) if isinstance(tab, str) else tab
+        return dataclasses.replace(self, tableau=tab)
+
+    def nfe(self, K: int) -> int:
+        """Vector-field evaluations over K steps (g counted separately as
+        overhead, paper Sec. 6)."""
+        return self.tableau.stages * K
+
+    # ------------------------------------------------------------- step ----
+    def step(self, f: VectorField, s, eps, z: Pytree):
+        """One (hyper)solved step. Returns (z_next, psi, dz)."""
+        tab = self.tableau
+        stages = rk_stages(f, tab, s, eps, z)
+        dz = stages[0]
+        corr = self.g(eps, s, z, dz) if self.g is not None else None
+        eps_f = _static_eps(eps) if self.fused else None
+        if eps_f is not None:
+            from repro.kernels.hyper_step.ops import fused_rk_update
+            # zero-b stages never reach the kernel: each operand costs a
+            # full HBM read per step, the whole traffic the fusion saves
+            live = tuple((bj, r) for bj, r in zip(tab.b, stages)
+                         if bj != 0.0)
+            b_live = tuple(bj for bj, _ in live)
+            n_live = len(live)
+            z_next = jax.tree_util.tree_map(
+                lambda zl, *rest: fused_rk_update(
+                    zl, rest[:n_live],
+                    rest[n_live] if corr is not None else None,
+                    eps_f, b_live, tab.order),
+                z, *(r for _, r in live),
+                *((corr,) if corr is not None else ()))
+            psi = tree_lincomb(tab.b, stages)
+        else:
+            psi = tree_lincomb(tab.b, stages)
+            z_next = tree_axpy(eps, psi, z)
+            if corr is not None:
+                p1 = self.order + 1
+                ceps = eps ** p1 if isinstance(eps, (int, float)) \
+                    else jnp.asarray(eps) ** p1
+                z_next = tree_axpy(ceps, corr, z_next)
+        return z_next, psi, dz
+
+    # ------------------------------------------------------------ solve ----
+    def solve(
+        self,
+        f: VectorField,
+        z0: Pytree,
+        grid,
+        *,
+        return_traj: bool = True,
+        checkpoint: bool = False,
+    ):
+        """Integrate z' = f(s, z) over ``grid`` (a FixedGrid; ``grid.eps``
+        may carry a leading batch axis for per-sample step sizes, in which
+        case ``f`` receives a batched ``s`` — use ``depth_like`` to lift it
+        leaf-wise; ``jax.vmap`` over (z0, eps) is the fully general path).
+
+        Returns the dense trajectory stacked on a leading axis of length
+        K+1 (including z0) when ``return_traj``, else the terminal state.
+        ``checkpoint=True`` rematerializes each step under reverse-mode AD.
+        """
+        eps = grid.eps
+
+        def body(z, k):
+            s = grid.s0 + k * eps
+            z_next, _, _ = self.step(f, s, eps, z)
+            return z_next, (z_next if return_traj else None)
+
+        if checkpoint:
+            body = jax.checkpoint(body)
+        ks = jnp.arange(grid.K)
+        zT, ys = jax.lax.scan(body, z0, ks)
+        if not return_traj:
+            return zT
+        return with_initial(z0, ys)
+
+
+def as_integrator(
+    solver, g: Optional[Correction] = None, fused: bool = False
+) -> Integrator:
+    """Coerce a tableau name / Tableau / Integrator / HyperSolver-like
+    object (anything with .tableau/.g/.fused) into an Integrator."""
+    if isinstance(solver, Integrator):
+        return solver
+    if isinstance(solver, str):
+        return Integrator(tableau=get_tableau(solver), g=g, fused=fused)
+    if isinstance(solver, Tableau):
+        return Integrator(tableau=solver, g=g, fused=fused)
+    if hasattr(solver, "tableau"):
+        return Integrator(tableau=solver.tableau,
+                          g=getattr(solver, "g", g),
+                          fused=getattr(solver, "fused", fused))
+    raise TypeError(f"cannot build an Integrator from {solver!r}")

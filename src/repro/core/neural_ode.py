@@ -5,18 +5,20 @@
 ``h_x`` / ``h_y`` are kept linear maps (paper Sec. 2) to avoid collapsing the
 dynamics. This module is functional: parameters are explicit pytrees, and the
 three maps are ``apply(params, ...)`` callables, so it composes with pjit.
+All integration routes through the unified ``Integrator`` engine
+(core/integrate.py); ``solver`` arguments accept an Integrator, a
+HyperSolver, a Tableau, or a tableau name.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.adaptive import odeint_dopri5
-from repro.core.hypersolver import HyperSolver
-from repro.core.solvers import FixedGrid, odeint_fixed
+from repro.core.integrate import Integrator, as_integrator
+from repro.core.solvers import FixedGrid
 from repro.core.tableaus import Tableau
 
 Params = Any
@@ -40,21 +42,25 @@ class NeuralODE:
         """Close f over (params, x): the VectorField handed to solvers."""
         return lambda s, z: self.f_apply(params, s, x, z)
 
+    def grid(self, K: int) -> FixedGrid:
+        return FixedGrid.over(self.s_span[0], self.s_span[1], K)
+
     def solve(
         self,
         params: Params,
         x: Any,
-        solver: HyperSolver,
+        solver,
         K: int,
         return_traj: bool = False,
+        checkpoint: bool = False,
     ):
-        grid = FixedGrid.over(self.s_span[0], self.s_span[1], K)
+        integ = as_integrator(solver)
         f = self.field(params, x)
         z0 = self.hx_apply(params, x)
-        out = solver.odeint(f, z0, grid, return_traj=return_traj)
-        return out
+        return integ.solve(f, z0, self.grid(K), return_traj=return_traj,
+                           checkpoint=checkpoint)
 
-    def forward(self, params: Params, x: Any, solver: HyperSolver, K: int):
+    def forward(self, params: Params, x: Any, solver, K: int):
         """y_hat(S) = h_y(z(S)) (paper Sec. 2)."""
         zT = self.solve(params, x, solver, K, return_traj=False)
         return self.hy_apply(params, zT)
@@ -68,7 +74,7 @@ class NeuralODE:
         rtol: float = 1e-5,
     ):
         """Ground-truth mesh checkpoints {z(s_k)} via dopri5 (paper Sec. 3.2)."""
-        grid = FixedGrid.over(self.s_span[0], self.s_span[1], K)
+        grid = self.grid(K)
         f = self.field(params, x)
         z0 = self.hx_apply(params, x)
         traj, nfe = odeint_dopri5(f, z0, grid, atol=atol, rtol=rtol)
@@ -78,8 +84,4 @@ class NeuralODE:
         self, params: Params, x: Any, tab: Tableau, K: int
     ):
         """Plain fixed-step baseline forward (no hypersolver)."""
-        grid = FixedGrid.over(self.s_span[0], self.s_span[1], K)
-        f = self.field(params, x)
-        z0 = self.hx_apply(params, x)
-        zT = odeint_fixed(f, z0, grid, tab, return_traj=False)
-        return self.hy_apply(params, zT)
+        return self.forward(params, x, as_integrator(tab), K)

@@ -11,14 +11,14 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.hypersolver import Correction, HyperSolver
-from repro.core.solvers import (
-    FixedGrid,
+from repro.core.integrate import (
+    Integrator,
     Pytree,
     VectorField,
     rk_psi,
     tree_axpy,
 )
+from repro.core.solvers import FixedGrid
 from repro.core.tableaus import Tableau
 
 
@@ -52,7 +52,7 @@ def solver_residual(
 
 
 def residual_fitting_loss(
-    hs: HyperSolver, f: VectorField, traj: Pytree, grid: FixedGrid
+    hs: Integrator, f: VectorField, traj: Pytree, grid: FixedGrid
 ) -> jnp.ndarray:
     """ell = (1/K) sum_k || R_k - g(eps, s_k, z(s_k)) ||_2  (paper Sec. 3.2).
 
@@ -79,7 +79,7 @@ def residual_fitting_loss(
 
 
 def trajectory_fitting_loss(
-    hs: HyperSolver, f: VectorField, traj: Pytree, grid: FixedGrid
+    hs: Integrator, f: VectorField, traj: Pytree, grid: FixedGrid
 ) -> jnp.ndarray:
     """L = sum_k || z(s_k) - z_k ||_2 with z_k the unrolled hypersolve."""
     assert hs.g is not None
@@ -99,7 +99,7 @@ def trajectory_fitting_loss(
 
 
 def combined_loss(
-    hs: HyperSolver,
+    hs: Integrator,
     f: VectorField,
     traj: Pytree,
     grid: FixedGrid,

@@ -1,71 +1,60 @@
-"""Fixed-step explicit ODE solvers over pytree states (paper Eq. 2-3).
+"""Fixed-grid solver API over pytree states (paper Eq. 2-3).
 
-A vector field is any callable ``f(s, z) -> dz`` where ``z`` is an arbitrary
-pytree (conditioning inputs ``x`` are closed over, matching paper Eq. 1 where
-f depends on (s, x, z)). All linear algebra is done leaf-wise with
-``jax.tree_util`` so states like a CNF's ``(z, logp)`` tuple work unchanged.
+The actual integration engine lives in ``repro.core.integrate`` — this
+module keeps the mesh definition (``FixedGrid``) and thin, stable wrappers
+(``odeint_fixed``) so numerical code reads like the paper. A vector field
+is any callable ``f(s, z) -> dz`` where ``z`` is an arbitrary pytree
+(conditioning inputs ``x`` are closed over, matching paper Eq. 1 where f
+depends on (s, x, z)).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Sequence
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.integrate import (  # noqa: F401 — re-exported leaf algebra
+    Integrator,
+    Pytree,
+    VectorField,
+    rk_psi,
+    rk_stages,
+    tree_axpy,
+    tree_lincomb,
+    with_initial,
+)
 from repro.core.tableaus import Tableau
-
-Pytree = Any
-VectorField = Callable[[jnp.ndarray, Pytree], Pytree]
-
-
-def tree_axpy(a, x: Pytree, y: Pytree) -> Pytree:
-    """y + a * x, leaf-wise."""
-    return jax.tree_util.tree_map(lambda xi, yi: yi + a * xi, x, y)
-
-
-def tree_lincomb(coeffs: Sequence[float], trees: Sequence[Pytree]) -> Pytree:
-    """sum_j coeffs[j] * trees[j], leaf-wise (skips exact-zero coeffs)."""
-    terms = [(c, t) for c, t in zip(coeffs, trees) if c != 0.0]
-    if not terms:
-        return jax.tree_util.tree_map(jnp.zeros_like, trees[0])
-    out = jax.tree_util.tree_map(lambda l: terms[0][0] * l, terms[0][1])
-    for c, t in terms[1:]:
-        out = tree_axpy(c, t, out)
-    return out
-
-
-def rk_psi(f: VectorField, tab: Tableau, s, eps, z: Pytree):
-    """Compute the RK update map psi and all stage evaluations r_i (Eq. 3).
-
-    Returns (psi, stages). ``stages[0] == f(s, z)`` which hypersolvers reuse
-    as a free input to g_omega.
-    """
-    stages = []
-    for i in range(tab.stages):
-        if i == 0:
-            zi = z
-        else:
-            incr = tree_lincomb(tab.a[i], stages)
-            zi = tree_axpy(eps, incr, z)
-        stages.append(f(s + tab.c[i] * eps, zi))
-    psi = tree_lincomb(tab.b, stages)
-    return psi, stages
 
 
 class FixedGrid(NamedTuple):
-    """Uniform depth mesh s_k = s0 + k * eps, k = 0..K (paper Sec. 2)."""
+    """Uniform depth mesh s_k = s0 + k * eps, k = 0..K (paper Sec. 2).
+
+    ``eps`` may be a scalar or an array with a leading batch axis
+    (per-sample step sizes for multi-rate serving — the Integrator
+    broadcasts it leaf-wise against the state).
+    """
 
     s0: float
-    eps: float
+    eps: Any
     K: int
 
     @property
     def s_span(self) -> jnp.ndarray:
-        return self.s0 + self.eps * jnp.arange(self.K + 1)
+        ks = jnp.arange(self.K + 1)
+        if jnp.ndim(self.eps) == 0:
+            return self.s0 + self.eps * ks
+        # batched eps: (K+1, *eps.shape) mesh, one column per sample
+        return self.s0 + jnp.tensordot(ks, jnp.asarray(self.eps), axes=0)
 
     @classmethod
     def over(cls, s0: float, s1: float, K: int) -> "FixedGrid":
         return cls(s0=s0, eps=(s1 - s0) / K, K=K)
+
+    @classmethod
+    def over_batched(cls, s0: float, s1, K: int) -> "FixedGrid":
+        """Per-sample spans: ``s1`` an array -> eps with a batch axis."""
+        return cls(s0=s0, eps=(jnp.asarray(s1) - s0) / K, K=K)
 
 
 def odeint_fixed(
@@ -77,23 +66,12 @@ def odeint_fixed(
 ):
     """Integrate z' = f(s, z) on a fixed grid with an explicit RK method.
 
-    Returns the full trajectory stacked on a leading axis of length K+1
-    (including z0) if ``return_traj``, else just the terminal state. Uses
-    ``lax.scan`` so the unrolled HLO is O(1) in K.
+    Thin wrapper over ``Integrator(tab).solve`` — returns the trajectory
+    stacked on a leading axis of length K+1 (including z0) if
+    ``return_traj``, else just the terminal state.
     """
-
-    def step(z, s):
-        psi, _ = rk_psi(f, tab, s, grid.eps, z)
-        z_next = tree_axpy(grid.eps, psi, z)
-        return z_next, (z_next if return_traj else None)
-
-    s_knots = grid.s0 + grid.eps * jnp.arange(grid.K)
-    zT, ys = jax.lax.scan(step, z0, s_knots)
-    if not return_traj:
-        return zT
-    return jax.tree_util.tree_map(
-        lambda a, b: jnp.concatenate([a[None], b], axis=0), z0, ys
-    )
+    return Integrator(tableau=tab).solve(f, z0, grid,
+                                         return_traj=return_traj)
 
 
 def local_error(

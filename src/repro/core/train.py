@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hypersolver import HyperSolver
+from repro.core.integrate import Integrator
 from repro.core.neural_ode import NeuralODE
 from repro.core.residual import combined_loss
 from repro.core.solvers import FixedGrid
@@ -52,6 +53,15 @@ def bind_g(g_apply: GApply, g_params, x) -> Callable:
 def make_hypersolver(base: str | Tableau, g_apply: GApply, g_params, x) -> HyperSolver:
     tab = base if isinstance(base, Tableau) else get_tableau(base)
     return HyperSolver(tableau=tab, g=bind_g(g_apply, g_params, x))
+
+
+def make_integrator(base: str | Tableau, g_apply: GApply = None, g_params=None,
+                    x=None, fused: bool = False) -> Integrator:
+    """Unified-engine twin of ``make_hypersolver``: an Integrator over the
+    base tableau, with g bound over (params, x) when a correction is given."""
+    tab = base if isinstance(base, Tableau) else get_tableau(base)
+    g = bind_g(g_apply, g_params, x) if g_apply is not None else None
+    return Integrator(tableau=tab, g=g, fused=fused)
 
 
 def train_hypersolver(

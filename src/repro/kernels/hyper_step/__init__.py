@@ -1,1 +1,3 @@
-from repro.kernels.hyper_step.ops import hyper_step  # noqa: F401
+from repro.kernels.hyper_step.ops import (  # noqa: F401
+    fused_rk_update, hyper_step,
+)

@@ -1,14 +1,55 @@
-"""Public wrapper: arbitrary-shape pytree-leaf update with padding to the
-(ROWS, 128) tile grid; auto-interpret on CPU."""
+"""Public wrappers: arbitrary-shape pytree-leaf updates with padding to the
+(ROWS, 128) tile grid; auto-interpret on CPU.
+
+``fused_rk_update`` is the general entry point used by the core
+``Integrator`` engine: one kernel pass for the b-weighted stage combination
+of any explicit tableau plus the optional eps^{p+1} hypersolver correction.
+``hyper_step`` (psi precombined, single stage) is kept for callers of the
+original final-axpy fusion.
+"""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import on_cpu
-from repro.kernels.hyper_step.hyper_step import LANES, ROWS, hyper_step_2d
+from repro.kernels.hyper_step.hyper_step import (
+    LANES, ROWS, hyper_step_2d, rk_update_2d,
+)
+
+
+def _tile_shape(n: int) -> Tuple[int, int]:
+    cols = LANES
+    rows = -(-n // cols)
+    rows += (-rows) % ROWS
+    return rows, cols
+
+
+def _flat(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    x = x.reshape(-1)
+    return jnp.pad(x, (0, rows * cols - x.size)).reshape(rows, cols)
+
+
+@partial(jax.jit,
+         static_argnames=("eps", "b", "order", "interpret"))
+def fused_rk_update(z: jnp.ndarray, stages: Sequence[jnp.ndarray],
+                    g: Optional[jnp.ndarray], eps: float,
+                    b: Tuple[float, ...], order: int = 1,
+                    interpret: bool | None = None):
+    """Fused z + eps*sum_j b[j]*stages[j] + eps^{order+1}*g over any-shaped
+    arrays (g may be None for a plain base-solver step)."""
+    interpret = on_cpu() if interpret is None else interpret
+    shape, n = z.shape, z.size
+    rows, cols = _tile_shape(n)
+    out = rk_update_2d(
+        _flat(z, rows, cols),
+        tuple(_flat(r, rows, cols) for r in stages),
+        _flat(g, rows, cols) if g is not None else None,
+        eps, tuple(b), order, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)
 
 
 @partial(jax.jit, static_argnames=("eps", "order", "interpret"))
@@ -16,17 +57,9 @@ def hyper_step(z: jnp.ndarray, psi: jnp.ndarray, g: jnp.ndarray,
                eps: float, order: int = 1, interpret: bool | None = None):
     """Fused z + eps*psi + eps^{order+1}*g over any-shaped arrays."""
     interpret = on_cpu() if interpret is None else interpret
-    shape = z.shape
-    n = z.size
-    cols = LANES
-    rows = -(-n // cols)
-    pad_rows = (-rows) % ROWS
-    total = (rows + pad_rows) * cols
-
-    def flat(x):
-        x = x.reshape(-1)
-        return jnp.pad(x, (0, total - n)).reshape(rows + pad_rows, cols)
-
-    out = hyper_step_2d(flat(z), flat(psi), flat(g), eps, order,
+    shape, n = z.shape, z.size
+    rows, cols = _tile_shape(n)
+    out = hyper_step_2d(_flat(z, rows, cols), _flat(psi, rows, cols),
+                        _flat(g, rows, cols), eps, order,
                         interpret=interpret)
     return out.reshape(-1)[:n].reshape(shape)

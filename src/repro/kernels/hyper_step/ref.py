@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused hypersolver update."""
+"""Pure-jnp oracles for the fused hypersolver update kernels."""
 import jax.numpy as jnp
 
 
@@ -6,4 +6,14 @@ def hyper_step_ref(z, psi, g, eps: float, order: int):
     z32 = z.astype(jnp.float32)
     out = z32 + eps * psi.astype(jnp.float32) \
         + (eps ** (order + 1)) * g.astype(jnp.float32)
+    return out.astype(z.dtype)
+
+
+def fused_rk_update_ref(z, stages, g, eps: float, b, order: int):
+    out = z.astype(jnp.float32)
+    for bj, r in zip(b, stages):
+        if bj != 0.0:
+            out = out + (eps * bj) * r.astype(jnp.float32)
+    if g is not None:
+        out = out + (eps ** (order + 1)) * g.astype(jnp.float32)
     return out.astype(z.dtype)

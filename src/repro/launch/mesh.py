@@ -27,3 +27,10 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4):
 def batch_axes(mesh) -> tuple:
     """Mesh axes the global batch dimension shards over."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def mesh_context(mesh):
+    """Ambient-mesh context manager across jax versions: ``jax.set_mesh``
+    where it exists (jax >= 0.5), else the Mesh's own context manager."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh

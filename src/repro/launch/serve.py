@@ -23,19 +23,19 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get
 from repro.models.lm import (
     group_layout, init_lm, init_lm_cache, lm_decode_step, lm_forward,
+    lm_prefill,
 )
 
 def greedy_generate(params, cfg, prompt, gen_len: int, jit_step=None):
-    """Standard cached decode; prompt: (B, P) int32."""
+    """Standard cached decode; prompt: (B, P) int32. Prefill is a single
+    batched forward (one compiled scan over the prompt, models/lm.py),
+    then token-by-token greedy decode."""
     B, P = prompt.shape
     caches = init_lm_cache(cfg, B, P + gen_len)
     step = jit_step or jax.jit(
         lambda p, t, c, i: lm_decode_step(p, cfg, t, c, i))
-    # prefill token-by-token (container-scale; batched prefill on TPU)
-    tok = prompt[:, 0]
-    for t in range(P):
-        logits, caches = step(params, prompt[:, t], caches,
-                              jnp.asarray(t, jnp.int32))
+    prefill = jax.jit(lambda p, toks, c: lm_prefill(p, cfg, toks, c))
+    logits, caches = prefill(params, prompt, caches)
     out = [jnp.argmax(logits, -1).astype(jnp.int32)]
     for t in range(P, P + gen_len - 1):
         logits, caches = step(params, out[-1], caches,

@@ -29,6 +29,7 @@ from repro.data import ShardedLoader, token_batches
 from repro.distributed.fault import (
     FailureInjector, StepFailure, StepWatchdog, WatchdogConfig,
 )
+from repro.launch.mesh import mesh_context
 from repro.launch.steps import StepSettings, make_train_step
 from repro.models.lm import init_lm
 from repro.models import encdec as whisper
@@ -66,7 +67,7 @@ def train_loop(
             log.info("resumed from step %d", latest)
     if params is None:
         init = (whisper.init_encdec if cfg.is_encdec else init_lm)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             params = jax.jit(
                 lambda k: init(k, cfg), out_shardings=p_sh
             )(jax.random.PRNGKey(seed))

@@ -26,6 +26,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.integrate import Integrator
 from repro.core.neural_ode import NeuralODE
 from repro.nn.conv_blocks import (
     conv2d, conv2d_init, depth_cat, groupnorm, groupnorm_init, prelu,
@@ -98,6 +99,15 @@ def mnist_g_macs(hw: int = 28) -> int:
     return conv_macs(hw, hw, 25, 64, 3) + conv_macs(hw, hw, 64, 12, 3)
 
 
+def mnist_integrator(gp=None, x=None, base="euler",
+                     fused: bool = False) -> Integrator:
+    """Unified-engine solver for the MNIST-family Neural ODE: plain base
+    tableau when ``gp`` is None, HyperEuler-style correction otherwise."""
+    from repro.core.train import make_integrator
+    return make_integrator(base, mnist_g_apply if gp is not None else None,
+                           gp, x, fused=fused)
+
+
 # ------------------------------------------------------------- CIFAR ----
 
 def init_cifar_node(key):
@@ -156,3 +166,11 @@ def cifar_g_apply(gp, eps, s, x, z, dz):
     h = prelu(gp["a1"], conv2d(gp["c1"], h))
     h = prelu(gp["a2"], conv2d(gp["c2"], h))
     return conv2d(gp["c3"], h)
+
+
+def cifar_integrator(gp=None, x=None, base="euler",
+                     fused: bool = False) -> Integrator:
+    """Unified-engine solver for the CIFAR-family Neural ODE."""
+    from repro.core.train import make_integrator
+    return make_integrator(base, cifar_g_apply if gp is not None else None,
+                           gp, x, fused=fused)

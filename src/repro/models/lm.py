@@ -456,5 +456,26 @@ def lm_decode_step(params, cfg: ArchConfig, token: jnp.ndarray, caches,
     return logits, {"groups": new_group_caches, "tail": new_tail}
 
 
+def lm_prefill(params, cfg: ArchConfig, prompt: jnp.ndarray, caches,
+               start_index=0):
+    """Populate decode caches for a whole prompt in ONE compiled forward.
+
+    prompt: (B, P) int32. Scans ``lm_decode_step`` over the position axis
+    inside a single XLA computation — batched over B and O(1) dispatches in
+    P, versus the P Python-loop dispatches of token-by-token prefill.
+    Returns (logits of the last position (B, V) fp32, new_caches).
+    """
+    P = prompt.shape[1]
+
+    def body(caches, inp):
+        tok, idx = inp
+        logits, caches = lm_decode_step(params, cfg, tok, caches, idx)
+        return caches, logits
+
+    idxs = start_index + jnp.arange(P, dtype=jnp.int32)
+    caches, logits = jax.lax.scan(body, caches, (prompt.T, idxs))
+    return logits[-1], caches
+
+
 def count_params(params) -> int:
     return sum(int(l.size) for l in jax.tree_util.tree_leaves(params))

@@ -17,6 +17,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import FixedGrid, as_integrator
 from repro.nn.module import mlp_apply, mlp_init
 
 
@@ -82,3 +83,32 @@ def reversed_field(aug: Callable) -> Callable:
 
 def base_log_prob(z: jnp.ndarray) -> jnp.ndarray:
     return -0.5 * jnp.sum(z * z, -1) - 0.5 * z.shape[-1] * jnp.log(2 * jnp.pi)
+
+
+# ------------------------------------------- integration entry points ----
+# All CNF solves route through the unified Integrator engine; ``solver``
+# accepts an Integrator / HyperSolver / Tableau / name (hypersolver
+# corrections ride along inside the Integrator, paper Sec. 4.2).
+
+def cnf_sample(params, z0: jnp.ndarray, K: int = 1, solver="heun",
+               return_traj: bool = False):
+    """Map base draws ``z0 ~ N(0, I)`` to data space with K solver steps.
+
+    Returns the terminal ``(x, dlogp)`` state (or the dense trajectory).
+    With a trained 2nd-order hypersolver inside ``solver`` this is the
+    paper's 2-NFE sampling result."""
+    integ = as_integrator(solver)
+    aug = exact_trace_dynamics(params)
+    state0 = (z0, jnp.zeros(z0.shape[:-1], z0.dtype))
+    return integ.solve(aug, state0, FixedGrid.over(0.0, 1.0, K),
+                       return_traj=return_traj)
+
+
+def cnf_log_prob(params, x: jnp.ndarray, K: int = 8, solver="rk4"):
+    """log p(x) by integrating the reversed augmented field data -> base."""
+    integ = as_integrator(solver)
+    rev = reversed_field(exact_trace_dynamics(params))
+    state0 = (x, jnp.zeros(x.shape[:-1], x.dtype))
+    zT, dlogp = integ.solve(rev, state0, FixedGrid.over(0.0, 1.0, K),
+                            return_traj=False)
+    return base_log_prob(zT) - dlogp

@@ -14,6 +14,7 @@ X64_MODULES = {
     "test_solvers.py",
     "test_hypersolver.py",
     "test_core_properties.py",
+    "test_integrate.py",
 }
 
 

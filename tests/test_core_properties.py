@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev-dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     EULER, HEUN, MIDPOINT, RK4, FixedGrid, HyperSolver, alpha_family,

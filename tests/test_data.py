@@ -2,11 +2,13 @@
 density samplers, synthetic images."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.data import DENSITIES, ShardedLoader, density_sampler, \
     synthetic_images, token_batches
 
 
+@pytest.mark.slow  # Markov token stream generation is minutes-scale on CPU
 def test_token_stream_deterministic():
     a1, b1 = next(token_batches(1000, 4, 16, seed=7))
     a2, b2 = next(token_batches(1000, 4, 16, seed=7))
@@ -15,11 +17,13 @@ def test_token_stream_deterministic():
     assert not np.array_equal(np.asarray(a1), np.asarray(a3))
 
 
+@pytest.mark.slow  # Markov token stream generation is minutes-scale on CPU
 def test_token_targets_are_shifted_inputs():
     t, y = next(token_batches(500, 2, 10, seed=0))
     np.testing.assert_array_equal(np.asarray(t[:, 1:]), np.asarray(y[:, :-1]))
 
 
+@pytest.mark.slow  # Markov token stream generation is minutes-scale on CPU
 def test_token_stream_is_learnable():
     """Order-2 Markov stream: bigram statistics are far from uniform."""
     t, y = next(token_batches(50000, 64, 256, seed=1))

@@ -45,6 +45,7 @@ def setup():
     return cfg, settings
 
 
+@pytest.mark.slow  # three full train loops with restarts: long-JIT
 def test_recovers_from_injected_failures(tmp_path, setup):
     cfg, settings = setup
     mesh = _mesh()

@@ -1,0 +1,229 @@
+"""Unified Integrator engine: convergence orders, equivalence with the
+legacy odeint paths, batched per-sample step sizes, vmap/jit/checkpoint
+composition, and the fused Pallas update path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EULER, HEUN, MIDPOINT, RK4, FixedGrid, HyperSolver, Integrator,
+    as_integrator, depth_like, get_tableau, odeint_fixed,
+)
+
+# x64 enabled per-module via tests/conftest.py
+
+# numpy constant: module import happens with x64 OFF (conftest.py)
+A = np.array([[-0.5, -2.0], [2.0, -0.5]], dtype=np.float64)
+
+
+def _expm(M):
+    w, V = np.linalg.eig(np.asarray(M))
+    return (V @ np.diag(np.exp(w)) @ np.linalg.inv(V)).real
+
+
+def linear_field(s, z):
+    return z @ A.T
+
+
+# ------------------------------------------------------ convergence order ----
+
+@pytest.mark.parametrize(
+    "tab,expected_order",
+    [(EULER, 1), (MIDPOINT, 2), (HEUN, 2), (RK4, 4)],
+)
+def test_engine_global_order(tab, expected_order):
+    """Global error of Integrator.solve scales ~ eps^p on an analytic field:
+    Euler O(eps), Midpoint/Heun O(eps^2), RK4 O(eps^4)."""
+    z0 = jnp.array([[1.0, 0.5]], dtype=jnp.float64)
+    exact = jnp.asarray(z0 @ _expm(A).T)
+    integ = Integrator(tableau=tab)
+    Ks = [8, 16, 32, 64]
+    errs = []
+    for K in Ks:
+        zT = integ.solve(linear_field, z0, FixedGrid.over(0.0, 1.0, K),
+                         return_traj=False)
+        errs.append(float(jnp.linalg.norm(zT - exact)))
+    slopes = np.diff(np.log(errs)) / np.diff(np.log([1.0 / k for k in Ks]))
+    assert np.mean(slopes) > expected_order - 0.35, (errs, slopes)
+
+
+# ------------------------------------------------- legacy-path equivalence ----
+
+def test_matches_python_loop():
+    """The scan walk == an explicit python-loop RK walk, bitwise-ish."""
+    f = lambda s, z: -0.7 * z + jnp.sin(s)
+    z0 = jnp.asarray([1.0, -2.0], jnp.float64)
+    grid = FixedGrid.over(0.0, 1.0, 9)
+    integ = Integrator(tableau=HEUN)
+    traj = integ.solve(f, z0, grid, return_traj=True)
+    z = z0
+    for k in range(grid.K):
+        s = grid.s0 + k * grid.eps
+        z, _, _ = integ.step(f, s, grid.eps, z)
+    np.testing.assert_allclose(np.asarray(traj[-1]), np.asarray(z),
+                               rtol=1e-12)
+
+
+def test_equivalence_odeint_fixed_pytree():
+    """Integrator.solve == odeint_fixed on a tuple (CNF-style) state."""
+    def f(s, state):
+        z, logp = state
+        return (-z, -jnp.sum(z, axis=-1))
+
+    state0 = (jnp.ones((3, 2), jnp.float64), jnp.zeros((3,), jnp.float64))
+    grid = FixedGrid.over(0.0, 1.0, 6)
+    a = odeint_fixed(f, state0, grid, RK4, return_traj=True)
+    b = Integrator(tableau=RK4).solve(f, state0, grid, return_traj=True)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # analytic check: z decays to e^{-1}
+    np.testing.assert_allclose(np.asarray(b[0][-1]),
+                               np.exp(-1.0) * np.ones((3, 2)), rtol=1e-5)
+
+
+def test_equivalence_hypersolver_odeint():
+    """HyperSolver.odeint (the legacy entry point) == Integrator.solve with
+    the same correction, on a pytree state."""
+    def f(s, state):
+        z, aux = state
+        return (jnp.tanh(z), -aux)
+
+    g = lambda eps, s, state, dstate: (0.2 * state[0], 0.1 * state[1])
+    state0 = (jnp.array([[0.3, -1.1]], jnp.float64),
+              jnp.ones((1,), jnp.float64))
+    grid = FixedGrid.over(0.0, 1.0, 5)
+    hs = HyperSolver(tableau=MIDPOINT, g=g)
+    a = hs.odeint(f, state0, grid, return_traj=False)
+    b = Integrator(tableau=MIDPOINT, g=g).solve(f, state0, grid,
+                                                return_traj=False)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_terminal_matches_trajectory_tail():
+    f = lambda s, z: -z
+    z0 = jnp.ones((4, 3), jnp.float64)
+    grid = FixedGrid.over(0.0, 1.0, 7)
+    integ = Integrator(tableau=RK4)
+    traj = integ.solve(f, z0, grid, return_traj=True)
+    zT = integ.solve(f, z0, grid, return_traj=False)
+    assert traj.shape == (8, 4, 3)
+    np.testing.assert_array_equal(np.asarray(traj[-1]), np.asarray(zT))
+    np.testing.assert_array_equal(np.asarray(traj[0]), np.asarray(z0))
+
+
+# ------------------------------------------------------ batched step sizes ----
+
+def test_batched_eps_matches_per_sample_solves():
+    """grid.eps with a leading batch axis == stacking per-sample scalar-eps
+    solves (multi-rate serving: each row integrates its own mesh)."""
+    f = lambda s, z: -z + depth_like(jnp.sin(s), z)
+    z0 = jnp.asarray(np.random.RandomState(0).randn(4, 3))
+    eps = jnp.asarray([0.1, 0.125, 0.2, 0.05], jnp.float64)
+    integ = Integrator(tableau=RK4)
+    zb = integ.solve(f, z0, FixedGrid(0.0, eps, 8), return_traj=False)
+    for i in range(4):
+        zi = integ.solve(f, z0[i:i + 1],
+                         FixedGrid(0.0, float(eps[i]), 8),
+                         return_traj=False)
+        np.testing.assert_allclose(np.asarray(zb[i]), np.asarray(zi[0]),
+                                   rtol=1e-10)
+
+
+def test_vmap_over_state_and_eps():
+    """The engine composes with vmap over (z0, eps) — the fully general
+    per-sample path — and agrees with the native batched-eps path."""
+    f = lambda s, z: -z + depth_like(jnp.sin(s), z)
+    z0 = jnp.asarray(np.random.RandomState(1).randn(4, 3))
+    eps = jnp.asarray([0.1, 0.125, 0.2, 0.05], jnp.float64)
+    integ = Integrator(tableau=HEUN)
+    native = integ.solve(f, z0, FixedGrid(0.0, eps, 6), return_traj=False)
+    vmapped = jax.vmap(
+        lambda z, e: integ.solve(f, z, FixedGrid(0.0, e, 6),
+                                 return_traj=False))(z0, eps)
+    np.testing.assert_allclose(np.asarray(vmapped), np.asarray(native),
+                               rtol=1e-10)
+
+
+def test_batched_eps_hypersolver_correction_scaling():
+    """The eps^{p+1} correction weight is applied per-sample too."""
+    g = lambda eps, s, z, dz: jnp.ones_like(z)
+    f = lambda s, z: jnp.zeros_like(z)
+    z0 = jnp.zeros((3, 2), jnp.float64)
+    eps = jnp.asarray([0.1, 0.2, 0.4], jnp.float64)
+    integ = Integrator(tableau=EULER, g=g)
+    zT = integ.solve(f, z0, FixedGrid(0.0, eps, 1), return_traj=False)
+    np.testing.assert_allclose(
+        np.asarray(zT), np.asarray(eps[:, None] ** 2 * np.ones((3, 2))),
+        rtol=1e-12)
+
+
+# ------------------------------------------------------- jit / checkpoint ----
+
+def test_jit_and_grad_with_checkpoint():
+    f = lambda s, z: jnp.tanh(z)
+    z0 = jnp.asarray([[0.5, -0.25]], jnp.float64)
+    grid = FixedGrid.over(0.0, 1.0, 16)
+    integ = Integrator(tableau=HEUN)
+
+    def loss(z, ckpt):
+        out = integ.solve(f, z, grid, return_traj=False, checkpoint=ckpt)
+        return jnp.sum(out ** 2)
+
+    l0, g0 = jax.value_and_grad(loss)(z0, False)
+    l1, g1 = jax.jit(jax.value_and_grad(loss), static_argnums=1)(z0, True)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), rtol=1e-10)
+
+
+# ------------------------------------------------------------- fused path ----
+
+@pytest.mark.parametrize("base", ["euler", "heun", "midpoint", "rk4"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_solve_matches_unfused(base, dtype):
+    """fused=True (Pallas fused_rk_update, interpret on CPU) == the jnp
+    leaf-algebra path for every base tableau, with and without g."""
+    f = lambda s, z: jnp.sin(z)
+    g = lambda eps, s, z, dz: 0.3 * z + 0.1 * dz
+    z0 = jax.random.normal(jax.random.PRNGKey(0), (4, 37)).astype(dtype)
+    grid = FixedGrid.over(0.0, 1.0, 3)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-6)
+    for corr in (None, g):
+        a = Integrator(get_tableau(base), g=corr).solve(
+            f, z0, grid, return_traj=False)
+        b = Integrator(get_tableau(base), g=corr, fused=True).solve(
+            f, z0, grid, return_traj=False)
+        assert b.dtype == z0.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **tol)
+
+
+def test_fused_falls_back_on_batched_eps():
+    """Batched eps cannot be baked into the kernel: the engine silently
+    takes the jnp path and stays correct."""
+    f = lambda s, z: -z
+    z0 = jnp.ones((2, 5), jnp.float32)
+    eps = jnp.asarray([0.1, 0.2], jnp.float32)
+    a = Integrator(RK4).solve(f, z0, FixedGrid(0.0, eps, 4),
+                              return_traj=False)
+    b = Integrator(RK4, fused=True).solve(f, z0, FixedGrid(0.0, eps, 4),
+                                          return_traj=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# ------------------------------------------------------------ coercion ----
+
+def test_as_integrator_coercions():
+    assert as_integrator("rk4").tableau is RK4
+    assert as_integrator(HEUN).tableau is HEUN
+    integ = Integrator(tableau=EULER)
+    assert as_integrator(integ) is integ
+    hs = HyperSolver(tableau=MIDPOINT, g=None)
+    assert as_integrator(hs).tableau is MIDPOINT
+    assert as_integrator(integ.with_tableau("heun")).tableau.name == "heun"
+    with pytest.raises(TypeError):
+        as_integrator(123)

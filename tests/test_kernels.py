@@ -6,8 +6,8 @@ import pytest
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.hyper_step.ops import hyper_step
-from repro.kernels.hyper_step.ref import hyper_step_ref
+from repro.kernels.hyper_step.ops import fused_rk_update, hyper_step
+from repro.kernels.hyper_step.ref import fused_rk_update_ref, hyper_step_ref
 from repro.kernels.rglru_scan.ops import rglru_scan
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
 from repro.kernels.rwkv6_scan.ops import wkv6
@@ -32,6 +32,30 @@ def test_hyper_step_sweep(shape, dtype, eps, order):
     g = jax.random.normal(ks[2], shape, dtype)
     out = hyper_step(z, f, g, eps, order, interpret=True)
     ref = hyper_step_ref(z, f, g, eps, order)
+    assert out.dtype == z.dtype and out.shape == z.shape
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(7,), (33, 5), (2, 3, 257), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("tab_name,eps", [
+    ("euler", 0.1), ("heun", 0.25), ("midpoint", 0.5), ("rk4", 0.125),
+])
+@pytest.mark.parametrize("with_g", [True, False])
+def test_fused_rk_update_sweep(shape, dtype, tab_name, eps, with_g):
+    """Generalized kernel: b-weighted stage combine + correction in one
+    pass, vs the jnp oracle, across tableaus/orders/dtypes."""
+    from repro.core import get_tableau
+    tab = get_tableau(tab_name)
+    ks = jax.random.split(jax.random.PRNGKey(3), tab.stages + 2)
+    z = jax.random.normal(ks[0], shape, dtype)
+    stages = tuple(jax.random.normal(k, shape, dtype)
+                   for k in ks[1:1 + tab.stages])
+    g = jax.random.normal(ks[-1], shape, dtype) if with_g else None
+    out = fused_rk_update(z, stages, g, eps, tab.b, tab.order,
+                          interpret=True)
+    ref = fused_rk_update_ref(z, stages, g, eps, tab.b, tab.order)
     assert out.dtype == z.dtype and out.shape == z.shape
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
