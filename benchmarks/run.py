@@ -25,6 +25,7 @@ MODULES = [
     "bench_cnf",
     "bench_kernels",
     "bench_cdepth_lm",
+    "bench_serve",
 ]
 
 

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from benchmarks.bench_cdepth_lm import train_small_lm
 from repro.data import token_batches
-from repro.launch.serve import greedy_generate
+from repro.launch.engine import greedy_generate
 from repro.models.cdepth import (
     cdepth_residual_loss, lm_forward_cdepth, lm_g_init,
 )

@@ -4,12 +4,19 @@ from repro.core.tableaus import (  # noqa: F401
     alpha_family, get as get_tableau,
 )
 from repro.core.integrate import (  # noqa: F401
-    Integrator, as_integrator, depth_like, rk_stages, with_initial,
+    Integrator, SolveStats, as_integrator, depth_like, rk_stages,
+    with_initial,
 )
 from repro.core.solvers import (  # noqa: F401
     FixedGrid, odeint_fixed, rk_psi, local_error, tree_axpy, tree_lincomb,
 )
-from repro.core.adaptive import odeint_dopri5  # noqa: F401
+from repro.core.controllers import (  # noqa: F401
+    EmbeddedErrorController, FixedController, HypersolverResidualController,
+    embedded_step, error_ratio, per_sample_norm, step_factor,
+)
+from repro.core.adaptive import (  # noqa: F401
+    odeint_dopri5, odeint_dopri5_batched,
+)
 from repro.core.hypersolver import HyperSolver, make as make_solver  # noqa: F401
 from repro.core.residual import (  # noqa: F401
     solver_residual, residual_fitting_loss, trajectory_fitting_loss, combined_loss,

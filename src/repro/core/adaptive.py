@@ -2,38 +2,32 @@
 
 Used to generate "exact" solution checkpoints z(s_k) at mesh points for
 hypersolver training (paper Sec. 3.2: "practically obtained through an
-adaptive-step solver set up with low tolerances"). Implemented with
-``lax.while_loop`` per mesh segment; not differentiated through (trainers
-``stop_gradient`` its outputs, matching the paper's ``.detach()``).
+adaptive-step solver set up with low tolerances").
+
+The embedded-error machinery is NOT private to this module: one step of
+the pair, the error ratio, and the safety-clamped step factor live in
+``core/controllers.py`` (``embedded_step`` / ``error_ratio`` /
+``step_factor``) and are shared with the serving-time
+``EmbeddedErrorController`` — ``odeint_dopri5`` is simply the DOPRI5
+accept/reject instance of that code path, run per mesh segment under
+``lax.while_loop``. ``odeint_dopri5_batched`` vmaps the whole solve over
+a leading batch axis so every sample adapts its own step sequence (and
+reports its own NFE) in one compiled call — the batched ground-truth path
+for multi-rate serving targets.
+
+Not differentiated through (trainers ``stop_gradient`` its outputs,
+matching the paper's ``.detach()``).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.solvers import FixedGrid, Pytree, VectorField, tree_axpy, tree_lincomb
+from repro.core.controllers import embedded_step, error_ratio, step_factor
+from repro.core.solvers import FixedGrid, Pytree, VectorField, with_initial
 from repro.core.tableaus import DOPRI5
-
-_SAFETY = 0.9
-_MIN_FACTOR = 0.2
-_MAX_FACTOR = 5.0
-
-
-def _flat_rms(tree: Pytree) -> jnp.ndarray:
-    leaves = [jnp.mean(l.astype(jnp.float32) ** 2) for l in jax.tree_util.tree_leaves(tree)]
-    n = len(leaves)
-    return jnp.sqrt(sum(leaves) / n)
-
-
-def _error_ratio(z, z_new, err, atol, rtol):
-    def leafwise(zl, znl, el):
-        tol = atol + rtol * jnp.maximum(jnp.abs(zl), jnp.abs(znl))
-        return jnp.mean((el.astype(jnp.float32) / tol.astype(jnp.float32)) ** 2)
-
-    parts = jax.tree_util.tree_leaves(jax.tree_util.tree_map(leafwise, z, z_new, err))
-    return jnp.sqrt(sum(parts) / len(parts))
 
 
 class _SegState(NamedTuple):
@@ -44,17 +38,8 @@ class _SegState(NamedTuple):
 
 
 def _dopri5_stages(f: VectorField, s, eps, z):
-    tab = DOPRI5
-    stages = []
-    for i in range(tab.stages):
-        if i == 0:
-            zi = z
-        else:
-            zi = tree_axpy(eps, tree_lincomb(tab.a[i], stages), z)
-        stages.append(f(s + tab.c[i] * eps, zi))
-    z5 = tree_axpy(eps, tree_lincomb(tab.b, stages), z)
-    err_w = tuple(b - be for b, be in zip(tab.b, tab.b_err))
-    err = jax.tree_util.tree_map(lambda l: eps * l, tree_lincomb(err_w, stages))
+    """(z5, err): one DOPRI5 pair step via the shared embedded-error path."""
+    z5, err, _ = embedded_step(f, DOPRI5, s, eps, z)
     return z5, err
 
 
@@ -67,12 +52,10 @@ def _integrate_segment(f, z0, s0, s1, eps0, atol, rtol, max_steps):
     def body(st: _SegState):
         eps = jnp.minimum(st.eps, s1 - st.s)
         z_new, err = _dopri5_stages(f, st.s, eps, st.z)
-        ratio = _error_ratio(st.z, z_new, err, atol, rtol)
+        ratio = error_ratio(st.z, z_new, err, atol, rtol)
         accept = ratio <= 1.0
-        factor = jnp.clip(
-            _SAFETY * (jnp.maximum(ratio, 1e-10) ** -0.2), _MIN_FACTOR, _MAX_FACTOR
-        )
-        new_eps = jnp.clip(eps * factor, 1e-8, s1 - s0)
+        new_eps = jnp.clip(eps * step_factor(ratio, DOPRI5.order),
+                           1e-8, s1 - s0)
         z_out = jax.tree_util.tree_map(
             lambda a, b: jnp.where(accept, a, b), z_new, st.z
         )
@@ -116,7 +99,30 @@ def odeint_dopri5(
     (_, _), (traj, nfes) = jax.lax.scan(
         seg, (z0, jnp.asarray(grid.eps, jnp.float32)), pairs
     )
-    full = jax.tree_util.tree_map(
-        lambda a, b: jnp.concatenate([a[None], b], axis=0), z0, traj
-    )
-    return full, jnp.sum(nfes)
+    return with_initial(z0, traj), jnp.sum(nfes)
+
+
+def odeint_dopri5_batched(
+    f: VectorField,
+    z0: Pytree,
+    grid: FixedGrid,
+    atol: float = 1e-5,
+    rtol: float = 1e-5,
+    max_steps_per_segment: int = 1000,
+):
+    """``odeint_dopri5`` vmapped over a leading batch axis of ``z0``.
+
+    Each sample runs its OWN accept/reject step sequence (the while_loop is
+    masked under vmap, not lock-stepped), so stiff rows take more internal
+    steps than easy rows — and the returned per-sample NFE vector exposes
+    exactly that, the signal multi-rate serving buckets on.
+
+    ``f`` is called with per-sample (unbatched) states, as under
+    ``jax.vmap``. Returns (trajectory with leading axes (B, K+1), nfe (B,)).
+    """
+
+    def solve_one(z0_i):
+        return odeint_dopri5(f, z0_i, grid, atol=atol, rtol=rtol,
+                             max_steps_per_segment=max_steps_per_segment)
+
+    return jax.vmap(solve_one)(z0)

@@ -1,0 +1,219 @@
+"""Step controllers — the error-control layer between solvers and serving.
+
+The paper's pitch is pareto efficiency (fewest NFEs for a target error),
+but a fixed mesh spends the same K on every request. A ``StepController``
+closes the loop: from a *cheap local-error probe* it picks a per-sample
+mesh length K, so easy requests integrate in 2-4 NFEs while hard ones get
+8-16. Three instances:
+
+  * ``FixedController``      — the status quo: constant K, no probe.
+  * ``EmbeddedErrorController`` — classical embedded-pair estimation
+    (paper Sec. 2): one probe step of a tableau with ``b_err`` weights;
+    the |b - b_err|-weighted stage combination estimates the local
+    truncation error.  ``odeint_dopri5`` (core/adaptive.py) is the DOPRI5
+    accept/reject instance of the *same* ``embedded_step`` /
+    ``error_ratio`` / ``step_factor`` code path.
+  * ``HypersolverResidualController`` — the hypersolver's own correction
+    magnitude ||g|| as a *free* error proxy: g_omega is trained to fit the
+    eps^{p+1}-scaled local defect R_k (paper Eq. 6), so
+    ``||g|| * eps^{p+1}`` estimates the base solver's local truncation
+    error at the cost of a single vector-field evaluation.
+
+All controllers share one selection rule: with a one-full-span probe error
+``e ~ C * h^{q+1}`` and global error over K steps accumulating as
+``K * C * (h/K)^{q+1} = e / K^q``, the smallest mesh meeting ``tol`` is
+
+    K = ceil((e / tol)^{1/q})         (clipped to [k_min, k_max]).
+
+``Integrator.solve(..., controller=...)`` (core/integrate.py) consumes a
+controller and emits per-sample NFE counts; ``launch/engine.py`` uses the
+same selection to bucket requests for multi-rate batched serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tableaus import HEUN, Tableau, get as get_tableau
+
+Pytree = Any
+
+
+class Probe(NamedTuple):
+    """Result of a controller's ``select``: per-sample mesh lengths plus the
+    evidence. ``dz0 = f(s0, z0)`` is the probe's first stage — identical to
+    stage 0 of the subsequent solve, so solvers reuse it
+    (``Integrator.solve(first_stage=...)``) and the probe costs one fewer
+    NFE than it evaluates. None when the controller did not probe."""
+
+    K: jnp.ndarray          # (B,) int32 selected mesh lengths
+    err: jnp.ndarray        # (B,) float32 local-error estimate (0 = no probe)
+    nfe: int                # vector-field evals the probe spent, per sample
+    dz0: Optional[Pytree]   # f(s0, z0), reusable as the solve's first stage
+
+# Classical step-size controller constants (shared with core/adaptive.py).
+SAFETY = 0.9
+MIN_FACTOR = 0.2
+MAX_FACTOR = 5.0
+
+
+# ----------------------------------------------- shared embedded-error path ----
+
+def embedded_step(f, tab: Tableau, s, eps, z: Pytree):
+    """One step of an embedded RK pair: returns ``(z_hi, err, stages)``.
+
+    ``z_hi`` is the higher-order update (weights ``b``); ``err`` is the
+    leaf-wise local-error estimate ``eps * sum_j (b_j - b_err_j) r_j`` —
+    the difference between the pair's two solutions. This is THE embedded
+    estimator: ``odeint_dopri5`` and ``EmbeddedErrorController`` both call
+    it (DOPRI5 and HEUN instances respectively).
+    """
+    from repro.core.integrate import rk_stages, tree_axpy, tree_lincomb
+
+    if tab.b_err is None:
+        raise ValueError(f"tableau {tab.name!r} has no embedded b_err weights")
+    stages = rk_stages(f, tab, s, eps, z)
+    z_hi = tree_axpy(eps, tree_lincomb(tab.b, stages), z)
+    err_w = tuple(b - be for b, be in zip(tab.b, tab.b_err))
+    err = jax.tree_util.tree_map(lambda l: eps * l, tree_lincomb(err_w, stages))
+    return z_hi, err, stages
+
+
+def error_ratio(z: Pytree, z_new: Pytree, err: Pytree, atol, rtol):
+    """RMS of err / (atol + rtol * max(|z|, |z_new|)); accept iff <= 1."""
+
+    def leafwise(zl, znl, el):
+        tol = atol + rtol * jnp.maximum(jnp.abs(zl), jnp.abs(znl))
+        return jnp.mean((el.astype(jnp.float32) / tol.astype(jnp.float32)) ** 2)
+
+    parts = jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(leafwise, z, z_new, err))
+    return jnp.sqrt(sum(parts) / len(parts))
+
+
+def step_factor(ratio, order: int):
+    """Classical safety-clamped step-size multiplier ratio^{-1/order}."""
+    return jnp.clip(
+        SAFETY * (jnp.maximum(ratio, 1e-10) ** (-1.0 / order)),
+        MIN_FACTOR, MAX_FACTOR,
+    )
+
+
+def per_sample_norm(tree: Pytree) -> jnp.ndarray:
+    """RMS over everything but the leading (batch) axis, averaged across
+    leaves — the per-request scalar the serving policy keys on."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    parts = [
+        jnp.mean(l.astype(jnp.float32).reshape(l.shape[0], -1) ** 2, axis=-1)
+        for l in leaves
+    ]
+    return jnp.sqrt(sum(parts) / len(parts))
+
+
+def mesh_for_tolerance(err, tol: float, q: int, k_min: int, k_max: int):
+    """K = ceil((err/tol)^{1/q}) clipped — the shared selection rule.
+
+    A non-finite probe error (the probe step itself blew up) means the
+    request is as hard as they come: it gets k_max, never the smallest
+    bucket a NaN would otherwise select through the int cast."""
+    e = jnp.maximum(jnp.asarray(err, jnp.float32), 1e-30)
+    k = jnp.ceil((e / tol) ** (1.0 / q))
+    k = jnp.where(jnp.isfinite(k), k, float(k_max))
+    return jnp.clip(k, k_min, k_max).astype(jnp.int32)
+
+
+# ------------------------------------------------------------- controllers ----
+
+@dataclasses.dataclass(frozen=True)
+class FixedController:
+    """Constant mesh length for every sample (no probe, probe_nfe = 0)."""
+
+    K: int
+
+    k_min: int = dataclasses.field(init=False, default=1)
+
+    @property
+    def k_max(self) -> int:
+        return self.K
+
+    def select(self, integ, f, z0: Pytree, span: Tuple[float, float]) -> Probe:
+        B = jax.tree_util.tree_leaves(z0)[0].shape[0]
+        Ks = jnp.full((B,), self.K, jnp.int32)
+        return Probe(Ks, jnp.zeros((B,), jnp.float32), 0, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddedErrorController:
+    """Per-sample K from one embedded-pair probe step over the full span.
+
+    ``probe`` is any tableau with ``b_err`` (default HEUN, whose embedded
+    Euler pair costs 2 NFEs; DOPRI5 gives a 5(4) estimate for 7). The
+    error exponent q is the serving integrator's order — the rate at which
+    its global error decays under mesh refinement.
+    """
+
+    tol: float = 1e-2
+    k_min: int = 1
+    k_max: int = 16
+    probe: Tableau = HEUN
+
+    def __post_init__(self):
+        if isinstance(self.probe, str):
+            object.__setattr__(self, "probe", get_tableau(self.probe))
+        if self.probe.b_err is None:
+            raise ValueError(
+                f"probe tableau {self.probe.name!r} has no b_err weights")
+
+    @property
+    def probe_nfe(self) -> int:
+        return self.probe.stages
+
+    def select(self, integ, f, z0: Pytree, span: Tuple[float, float]) -> Probe:
+        s0, s1 = span
+        h = s1 - s0
+        _, err, stages = embedded_step(f, self.probe, s0, h, z0)
+        e = per_sample_norm(err)
+        # K is sized for the SERVING integrator: its order governs how the
+        # error decays with mesh refinement (for the default HEUN probe
+        # serving euler, integ.order == probe embedded order anyway).
+        q = max(integ.order, 1)
+        Ks = mesh_for_tolerance(e, self.tol, q, self.k_min, self.k_max)
+        return Probe(Ks, e, self.probe.stages, stages[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class HypersolverResidualController:
+    """Per-sample K from the learned correction magnitude ||g||.
+
+    g_omega fits the eps^{p+1}-scaled residual (paper Eq. 6), so the local
+    defect of one full-span base step is ~ ||g(h, s0, z0, dz)|| * h^{p+1}
+    — an error estimate whose only cost is the dz = f(s0, z0) evaluation
+    the subsequent solve needs anyway (1 probe NFE; g itself is the
+    paper's Sec. 6 negligible overhead).
+    """
+
+    tol: float = 1e-2
+    k_min: int = 1
+    k_max: int = 16
+
+    probe_nfe: int = dataclasses.field(init=False, default=1)
+
+    def select(self, integ, f, z0: Pytree, span: Tuple[float, float]) -> Probe:
+        if integ.g is None:
+            raise ValueError(
+                "HypersolverResidualController needs an Integrator with a "
+                "correction g; use EmbeddedErrorController for base solvers")
+        s0, s1 = span
+        h = s1 - s0
+        dz = f(s0, z0)
+        corr = integ.g(h, s0, z0, dz)
+        p = integ.order
+        e = per_sample_norm(corr) * (h ** (p + 1))
+        Ks = mesh_for_tolerance(e, self.tol, p, self.k_min, self.k_max)
+        return Probe(Ks, e, 1, dz)
+
+
+StepController = Any  # FixedController | EmbeddedErrorController | ...

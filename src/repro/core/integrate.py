@@ -20,16 +20,39 @@ loops): one scan-native engine that
   * routes the update through the fused Pallas ``hyper_step`` kernel
     (``fused=True``): the b-weighted stage combination AND the eps^{p+1}
     correction term collapse into one memory pass per leaf, for every base
-    tableau — the update is memory-bound, so this is the serving hot path.
+    tableau — the update is memory-bound, so this is the serving hot path;
+  * integrates under a step controller (``controller=``,
+    core/controllers.py): a cheap probe picks a per-sample mesh length,
+    the probe's first stage is reused, and the solve reports per-sample
+    NFE counts (``SolveStats``) — the error-control layer multi-rate
+    serving (launch/engine.py) builds on.
 
 The hypersolver update implemented for tableau psi and correction g
 (paper Eq. 3 + Eq. 5, Poli et al. 2020):
 
     z_{k+1} = z_k + eps * sum_j b_j r_j + eps^{p+1} * g(eps, s_k, z_k, r_0)
+
+Controller/engine architecture (error-controlled multi-rate serving)::
+
+    core/tableaus.py      Tableau (+ b_err embedded weights)
+          |
+    core/controllers.py   embedded_step / error_ratio / step_factor
+          |                 FixedController | EmbeddedErrorController |
+          |                 HypersolverResidualController
+          |                       | per-sample K from a cheap probe
+    core/integrate.py     Integrator.solve(..., controller=) -> (z, SolveStats)
+          |                 masked multi-rate scan, per-sample NFE counts
+          |\
+          | core/adaptive.py   odeint_dopri5 = DOPRI5 accept/reject instance
+          |                    of the same embedded-error path (+ vmap batch)
+    launch/engine.py      MultiRateEngine: probe -> eps-bucket assignment ->
+          |                 same-bucket batch packing -> scalar-eps solves
+    launch/serve.py       CLI only (arch/solver/--g-ckpt flags)
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
@@ -90,14 +113,20 @@ def with_initial(z0: Pytree, traj: Pytree) -> Pytree:
     )
 
 
-def rk_stages(f: VectorField, tab: Tableau, s, eps, z: Pytree):
+def rk_stages(f: VectorField, tab: Tableau, s, eps, z: Pytree,
+              first_stage: Optional[Pytree] = None):
     """All stage evaluations r_i of an explicit tableau (paper Eq. 3).
 
     ``stages[0] == f(s, z)``, which hypersolvers reuse as a free input to
-    g_omega. ``eps`` may be batched (leading axis)."""
+    g_omega. ``eps`` may be batched (leading axis). A precomputed
+    ``first_stage`` (e.g. a controller probe's dz, core/controllers.py)
+    substitutes for stage 0, saving one vector-field evaluation."""
     stages = []
     for i in range(tab.stages):
         if i == 0:
+            if first_stage is not None:
+                stages.append(first_stage)
+                continue
             zi = z
         else:
             zi = tree_axpy(eps, tree_lincomb(tab.a[i], stages), z)
@@ -122,6 +151,40 @@ def _static_eps(eps) -> Optional[float]:
     except (TypeError, jax.errors.ConcretizationTypeError):
         pass
     return None
+
+
+_fused_fallback_warned = False
+
+
+def _warn_fused_fallback() -> None:
+    """One-time process-wide warning when fused=True cannot use the kernel.
+
+    Serving configs key off this (or ``Integrator.fused_available``) to know
+    the Pallas hyper_step kernel is NOT in play — e.g. a multi-rate batch
+    with per-sample eps must be split into scalar-eps buckets to fuse."""
+    global _fused_fallback_warned
+    if not _fused_fallback_warned:
+        warnings.warn(
+            "Integrator(fused=True): eps is batched or traced, so the fused "
+            "Pallas hyper_step kernel cannot be specialized; falling back to "
+            "the leaf-wise jnp update path. Use a concrete scalar eps (one "
+            "bucket per step size) to keep the kernel in play.",
+            RuntimeWarning, stacklevel=3)
+        _fused_fallback_warned = True
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveStats:
+    """Per-sample accounting from a controller-driven solve.
+
+    ``nfe`` includes the controller's probe cost; ``K`` is the per-sample
+    mesh length the controller selected; ``err_probe`` its local-error
+    estimate (0 for FixedController)."""
+
+    nfe: jnp.ndarray        # (B,) int32 — vector-field evals incl. probe
+    K: jnp.ndarray          # (B,) int32 — selected mesh lengths
+    err_probe: jnp.ndarray  # (B,) float32 — probe local-error estimate
+    probe_nfe: int          # per-sample probe cost included in ``nfe``
 
 
 # ------------------------------------------------------------- the engine ----
@@ -164,14 +227,31 @@ class Integrator:
         overhead, paper Sec. 6)."""
         return self.tableau.stages * K
 
+    def fused_available(self, eps) -> bool:
+        """True iff the fused Pallas kernel path will actually run for this
+        eps — the structured twin of the one-time fallback warning, for
+        serving configs to assert the kernel is in play."""
+        return self.fused and _static_eps(eps) is not None
+
     # ------------------------------------------------------------- step ----
-    def step(self, f: VectorField, s, eps, z: Pytree):
-        """One (hyper)solved step. Returns (z_next, psi, dz)."""
+    def step(self, f: VectorField, s, eps, z: Pytree,
+             first_stage: Optional[Pytree] = None):
+        """One (hyper)solved step. Returns (z_next, psi, dz).
+
+        ``psi`` (the b-weighted stage combination) is lazy: on the fused
+        path the kernel already produced the combined update, so psi is
+        returned as ``None`` rather than re-running ``stages`` leaf-wise
+        passes nobody consumes — the serving hot loop only uses z_next.
+
+        ``first_stage`` substitutes a precomputed f(s, z) for stage 0
+        (probe reuse — see core/controllers.py)."""
         tab = self.tableau
-        stages = rk_stages(f, tab, s, eps, z)
+        stages = rk_stages(f, tab, s, eps, z, first_stage=first_stage)
         dz = stages[0]
         corr = self.g(eps, s, z, dz) if self.g is not None else None
         eps_f = _static_eps(eps) if self.fused else None
+        if self.fused and eps_f is None:
+            _warn_fused_fallback()
         if eps_f is not None:
             from repro.kernels.hyper_step.ops import fused_rk_update
             # zero-b stages never reach the kernel: each operand costs a
@@ -187,7 +267,7 @@ class Integrator:
                     eps_f, b_live, tab.order),
                 z, *(r for _, r in live),
                 *((corr,) if corr is not None else ()))
-            psi = tree_lincomb(tab.b, stages)
+            psi = None  # fused kernel already combined the stages
         else:
             psi = tree_lincomb(tab.b, stages)
             z_next = tree_axpy(eps, psi, z)
@@ -207,6 +287,8 @@ class Integrator:
         *,
         return_traj: bool = True,
         checkpoint: bool = False,
+        controller=None,
+        first_stage: Optional[Pytree] = None,
     ):
         """Integrate z' = f(s, z) over ``grid`` (a FixedGrid; ``grid.eps``
         may carry a leading batch axis for per-sample step sizes, in which
@@ -216,21 +298,82 @@ class Integrator:
         Returns the dense trajectory stacked on a leading axis of length
         K+1 (including z0) when ``return_traj``, else the terminal state.
         ``checkpoint=True`` rematerializes each step under reverse-mode AD.
+
+        With a ``controller`` (core/controllers.py), ``grid`` supplies only
+        the span [s0, s0 + eps*K] (scalar eps required): the controller
+        probes z0, picks a per-sample mesh length K_i, and the solve runs a
+        masked multi-rate scan — sample i integrates at eps_i = span/K_i
+        and freezes after K_i steps. Returns ``(result, SolveStats)`` with
+        per-sample NFE counts (probe included, minus the reused first
+        stage). The scan length is the controller's ``k_max``, so pack
+        similar-difficulty samples together (launch/engine.py's bucketing)
+        to avoid masked-step waste.
+
+        ``first_stage`` is a precomputed f(s0, z0) (a probe's dz) reused as
+        stage 0 of the first step — one NFE saved per solve.
         """
         eps = grid.eps
+        if controller is not None:
+            return self._solve_controlled(f, z0, grid, controller,
+                                          return_traj, checkpoint)
 
         def body(z, k):
-            s = grid.s0 + k * eps
-            z_next, _, _ = self.step(f, s, eps, z)
+            z_next, _, _ = self.step(f, grid.s0 + k * eps, eps, z)
             return z_next, (z_next if return_traj else None)
 
         if checkpoint:
             body = jax.checkpoint(body)
-        ks = jnp.arange(grid.K)
-        zT, ys = jax.lax.scan(body, z0, ks)
+        if first_stage is None:
+            zT, ys = jax.lax.scan(body, z0, jnp.arange(grid.K))
+            if not return_traj:
+                return zT
+            return with_initial(z0, ys)
+        # step 0 unrolled to consume the probe's stage; scan the rest
+        z1, _, _ = self.step(f, grid.s0, eps, z0, first_stage=first_stage)
+        zT, ys = jax.lax.scan(body, z1, jnp.arange(1, grid.K))
         if not return_traj:
             return zT
-        return with_initial(z0, ys)
+        return with_initial(z0, with_initial(z1, ys))
+
+    def _solve_controlled(self, f, z0, grid, controller, return_traj,
+                          checkpoint):
+        """Masked multi-rate scan over per-sample meshes chosen by the
+        controller. All z0 leaves must share a leading batch axis."""
+        assert jnp.ndim(grid.eps) == 0, (
+            "controller-driven solve derives per-sample eps itself; pass a "
+            "scalar-eps grid defining the span")
+        s0 = grid.s0
+        s1 = s0 + grid.eps * grid.K
+        probe = controller.select(self, f, z0, (s0, s1))
+        Ks = probe.K
+        eps = jnp.asarray(s1 - s0) / Ks  # (B,) per-sample step sizes
+
+        def body(z, k):
+            s = s0 + k * eps
+            z_next, _, _ = self.step(f, s, eps, z)
+            active = k < Ks
+            z_next = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(_bcast(active, b), a, b), z_next, z)
+            return z_next, (z_next if return_traj else None)
+
+        if checkpoint:
+            body = jax.checkpoint(body)
+        # step 0 is always active (K_i >= 1) and can reuse the probe's dz0
+        # — f(s0, z0) does not depend on eps, so it is shared by every
+        # sample regardless of its selected rate.
+        z1, _, _ = self.step(f, s0, eps, z0, first_stage=probe.dz0)
+        zT, ys = jax.lax.scan(body, z1, jnp.arange(1, int(controller.k_max)))
+        reused = 1 if probe.dz0 is not None else 0
+        stats = SolveStats(
+            nfe=(probe.nfe - reused
+                 + self.tableau.stages * Ks).astype(jnp.int32),
+            K=Ks,
+            err_probe=jnp.asarray(probe.err, jnp.float32),
+            probe_nfe=int(probe.nfe),
+        )
+        if not return_traj:
+            return zT, stats
+        return with_initial(z0, with_initial(z1, ys)), stats
 
 
 def as_integrator(

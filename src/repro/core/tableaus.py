@@ -45,7 +45,11 @@ MIDPOINT = Tableau(
     name="midpoint", a=((), (0.5,)), b=(0.0, 1.0), c=(0.0, 0.5), order=2
 )
 
-HEUN = Tableau(name="heun", a=((), (1.0,)), b=(0.5, 0.5), c=(0.0, 1.0), order=2)
+# b_err = plain Euler: the classical Heun-Euler 2(1) embedded pair — the
+# cheapest embedded local-error estimate (2 NFEs), used by the serving
+# probe (core/controllers.py::EmbeddedErrorController).
+HEUN = Tableau(name="heun", a=((), (1.0,)), b=(0.5, 0.5), c=(0.0, 1.0),
+               order=2, b_err=(1.0, 0.0))
 
 RALSTON = Tableau(
     name="ralston",

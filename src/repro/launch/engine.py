@@ -1,0 +1,355 @@
+"""Multi-rate serving engine: error-controlled per-request step sizes.
+
+This is where the repo's batching/eps policy lives (launch/serve.py is the
+CLI over it). The loop the paper's pareto pitch implies, end to end:
+
+    submit(x) -> request queue
+        -> probe: one cheap depth-field step per request
+           (core/controllers.py picks a per-sample mesh length K; the
+           probe's dz = f(s0, z0) is kept and reused as stage 0 of the
+           solve, so probing costs one fewer NFE than it evaluates)
+        -> bucket assignment: snap K to the configured serving buckets
+        -> pack same-bucket (and same-shape) requests into batches
+        -> drive each bucket through a scalar-eps K-step solve
+           (scalar eps keeps the fused Pallas kernel path eligible;
+           ``Integrator.fused_available`` is the structured flag)
+        -> Completed{outputs, K, nfe, err_probe} per request
+
+Hot (easy) requests integrate in 2-4 NFEs; hard ones get 8-16. Per-request
+NFE accounting includes the probe cost (minus the reused stage), so
+reported pareto points are honest.
+
+The engine is generic over a ``DepthModel`` adapter (embed -> field ->
+readout); ``lm_depth_model`` serves the continuous-depth LM
+(models/cdepth.py) and ``node_depth_model`` any ``NeuralODE`` (the paper's
+image classifiers). This is the seam for the roadmap's async-serving item
+(continuous batching = calling ``step()`` as requests arrive) and sharded
+integration (shard the bucket batch axis; the depth scan stays local).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ArchConfig
+from repro.core.controllers import (
+    EmbeddedErrorController, FixedController, HypersolverResidualController,
+)
+from repro.core.integrate import Integrator
+from repro.core.solvers import FixedGrid
+from repro.models.cdepth import lm_g_init, lm_integrator
+from repro.models.lm import init_lm_cache, lm_decode_step, lm_prefill
+
+
+# ----------------------------------------------------------- discrete path ----
+
+def greedy_generate(params, cfg, prompt, gen_len: int, jit_step=None):
+    """Standard cached decode; prompt: (B, P) int32. Prefill is a single
+    batched forward (one compiled scan over the prompt, models/lm.py),
+    then token-by-token greedy decode."""
+    B, P = prompt.shape
+    caches = init_lm_cache(cfg, B, P + gen_len)
+    step = jit_step or jax.jit(
+        lambda p, t, c, i: lm_decode_step(p, cfg, t, c, i))
+    prefill = jax.jit(lambda p, toks, c: lm_prefill(p, cfg, toks, c))
+    logits, caches = prefill(params, prompt, caches)
+    out = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    for t in range(P, P + gen_len - 1):
+        logits, caches = step(params, out[-1], caches,
+                              jnp.asarray(t, jnp.int32))
+        out.append(jnp.argmax(logits, -1).astype(jnp.int32))
+    return jnp.stack(out, axis=1)
+
+
+# -------------------------------------------------------------- g loading ----
+
+def load_g_params(path: str, cfg: ArchConfig, rank: int = 32):
+    """Restore a trained LM hypersolver correction from a CheckpointManager
+    directory (the --g-ckpt CLI flag)."""
+    cm = CheckpointManager(path)
+    step = cm.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {path!r}")
+    template = lm_g_init(jax.random.PRNGKey(0), cfg, rank=rank,
+                         param_dtype=jnp.float32)
+    return cm.restore(step, jax.eval_shape(lambda: template))
+
+
+# ---------------------------------------------------------- model adapters ----
+
+@dataclasses.dataclass(frozen=True)
+class DepthModel:
+    """What the engine needs to serve a continuous-depth model.
+
+    ``embed(x)`` lifts a request batch to the ODE state z0; ``field_of(x)``
+    closes the vector field over any conditioning; ``readout(x, zT)`` maps
+    the terminal state to outputs (logits). ``integ`` is the serving
+    Integrator (base tableau + optional correction g)."""
+
+    embed: Callable[[Any], Any]
+    field_of: Callable[[Any], Callable]
+    readout: Callable[[Any, Any], Any]
+    integ: Integrator
+    span: Tuple[float, float] = (0.0, 1.0)
+
+
+def lm_depth_model(params, cfg: ArchConfig, solver: str = "euler",
+                   g_params: Any = None, fused: bool = False) -> DepthModel:
+    """The unified LM's depth ODE (models/cdepth.py) as a servable model."""
+    from repro.models.cdepth import apply_tail, depth_field
+    from repro.models.lm import _embed
+
+    f = depth_field(params, cfg)
+    return DepthModel(
+        embed=lambda toks: _embed(params, cfg, toks),
+        field_of=lambda toks: f,
+        readout=lambda toks, h: apply_tail(params, cfg, h),
+        integ=lm_integrator(solver, g_params, fused=fused),
+    )
+
+
+def node_depth_model(node, params, solver: str = "euler",
+                     g_apply: Any = None, g_params: Any = None,
+                     fused: bool = False) -> DepthModel:
+    """Any ``NeuralODE`` (core/neural_ode.py) as a servable model — e.g.
+    the paper's image classifiers (models/conv_node.py). ``solver`` may
+    carry a ``hyper_`` prefix (requires g_apply/g_params). ``g_apply`` gets
+    x=None: conditioning-dependent corrections need a custom adapter."""
+    from repro.core.train import make_integrator
+
+    if solver.startswith("hyper_"):
+        if g_apply is None:
+            raise ValueError(
+                f"solver {solver!r} needs a correction: pass g_apply/"
+                "g_params (a hyper solver silently downgraded to its base "
+                "would misreport benchmark numbers)")
+        base = solver[len("hyper_"):]
+    else:
+        base = solver
+    return DepthModel(
+        embed=lambda x: node.hx_apply(params, x),
+        field_of=lambda x: node.field(params, x),
+        readout=lambda x, zT: node.hy_apply(params, zT),
+        integ=make_integrator(base, g_apply, g_params, None, fused=fused),
+        span=tuple(node.s_span),
+    )
+
+
+# ------------------------------------------------------------ bucket policy ----
+
+def snap_to_buckets(Ks: np.ndarray, buckets: Sequence[int]) -> np.ndarray:
+    """Smallest configured bucket >= K (largest bucket when K overshoots).
+
+    Snapping up, never down: a request is only ever integrated at least as
+    finely as its controller asked for."""
+    buckets = np.asarray(sorted(buckets), np.int32)
+    idx = np.searchsorted(buckets, np.asarray(Ks, np.int32), side="left")
+    return buckets[np.minimum(idx, len(buckets) - 1)]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Batching/eps policy knobs for the multi-rate engine."""
+
+    buckets: Tuple[int, ...] = (2, 4, 8, 16)
+    tol: float = 1e-2             # target local-error tolerance for probes
+    max_batch: int = 8            # max requests packed into one bucket batch
+    solver: str = "euler"         # base tableau; "hyper_*" pairs it with g
+    controller: str = "auto"      # auto | residual | embedded | fixed
+    fixed_K: int = 0              # mesh length when controller == "fixed"
+    fused: bool = False           # route bucket solves through the kernel
+
+    def __post_init__(self):
+        assert self.buckets == tuple(sorted(self.buckets)), self.buckets
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    uid: int
+    x: np.ndarray                 # one request's input (no batch axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class Completed:
+    uid: int
+    outputs: np.ndarray           # readout of the terminal state (e.g. logits)
+    K: int                        # bucket mesh length actually used
+    nfe: int                      # per-request NFE, probe included
+    err_probe: float              # controller's local-error estimate
+    fused_kernel: bool            # Pallas fused path in play for the solve
+
+
+class MultiRateEngine:
+    """Request-queue engine serving continuous-depth models at per-request
+    rates. Heavy lifting is jitted and cached per request shape for probes
+    and per (shape, K) for bucket solves, so a steady-state traffic mix
+    compiles once per cell."""
+
+    def __init__(self, model: DepthModel, engine_cfg: EngineConfig):
+        if engine_cfg.fused and not model.integ.fused:
+            model = dataclasses.replace(
+                model, integ=dataclasses.replace(model.integ, fused=True))
+        self.model = model
+        self.ecfg = engine_cfg
+        if engine_cfg.solver.startswith("hyper_") and model.integ.g is None:
+            raise ValueError(
+                f"solver {engine_cfg.solver!r} needs a correction: build the "
+                "DepthModel with g_params (serve CLI: --g-ckpt)")
+        self.controller = self._make_controller()
+        self._queue: deque = deque()
+        self._uid = 0
+        self._probe_fns: Dict[Tuple, Any] = {}
+        self._solve_fns: Dict[Tuple, Any] = {}
+
+    # ---------------------------------------------------------- policy ----
+    def _make_controller(self):
+        e = self.ecfg
+        kind = e.controller
+        if kind == "auto":
+            kind = ("residual" if self.model.integ.g is not None
+                    else "embedded")
+        k_min, k_max = min(e.buckets), max(e.buckets)
+        if kind == "fixed":
+            K = e.fixed_K or k_max
+            assert K <= k_max, (
+                f"fixed_K={K} exceeds the largest bucket {k_max}; "
+                "snap_to_buckets never snaps down — widen buckets")
+            return FixedController(K=K)
+        if kind == "residual":
+            return HypersolverResidualController(
+                tol=e.tol, k_min=k_min, k_max=k_max)
+        if kind == "embedded":
+            return EmbeddedErrorController(
+                tol=e.tol, k_min=k_min, k_max=k_max)
+        raise ValueError(f"unknown controller {kind!r}")
+
+    @property
+    def probe_nfe(self) -> int:
+        """Probe cost per request, net of the reused first stage."""
+        raw = getattr(self.controller, "probe_nfe", 0)
+        return max(raw - 1, 0) if raw else 0
+
+    def fused_in_play(self, K: int) -> bool:
+        span = self.model.span[1] - self.model.span[0]
+        return self.model.integ.fused_available(span / K)
+
+    def nfe_of(self, K: int) -> int:
+        """Per-request NFE for a bucket-K solve, probe included (the solve
+        reuses the probe's first stage, so one eval is not double-counted)."""
+        return self.probe_nfe + self.model.integ.tableau.stages * K
+
+    def probe(self, xs):
+        """Probe a request batch without serving it: returns (raw per-
+        sample K before bucket snapping, per-sample error estimate)."""
+        xs = np.asarray(xs)
+        Ks, errs, _, _ = self._probe_fn(xs.shape[1:])(jnp.asarray(xs))
+        return np.asarray(Ks), np.asarray(errs)
+
+    # ----------------------------------------------------------- queue ----
+    def submit(self, x) -> int:
+        self._uid += 1
+        self._queue.append(Request(uid=self._uid, x=np.asarray(x)))
+        return self._uid
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------- jit cells ----
+    def _probe_fn(self, shape):
+        if shape not in self._probe_fns:
+            m, ctrl = self.model, self.controller
+
+            @jax.jit
+            def probe(x):
+                z0 = m.embed(x)
+                p = ctrl.select(m.integ, m.field_of(x), z0, m.span)
+                return p.K, p.err, z0, p.dz0
+
+            self._probe_fns[shape] = probe
+        return self._probe_fns[shape]
+
+    def _solve_fn(self, shape, K: int):
+        key = (shape, K)
+        if key not in self._solve_fns:
+            m = self.model
+            s0, s1 = m.span
+            grid = FixedGrid.over(s0, s1, K)
+
+            @jax.jit
+            def solve(x, z0, dz0):
+                # z0/dz0 come from the probe cell (embed + first stage are
+                # not recomputed); the fixed path passes z0=None and
+                # embeds here.
+                if z0 is None:
+                    z0 = m.embed(x)
+                zT = m.integ.solve(m.field_of(x), z0, grid,
+                                   return_traj=False, first_stage=dz0)
+                return m.readout(x, zT)
+
+            self._solve_fns[key] = solve
+        return self._solve_fns[key]
+
+    # ------------------------------------------------------------ serve ----
+    def step(self) -> List[Completed]:
+        """Drain the queue once: probe, bucket, pack, solve. Returns the
+        completed requests (order not guaranteed — uid is the join key)."""
+        if not self._queue:
+            return []
+        pending: List[Request] = []
+        while self._queue:
+            pending.append(self._queue.popleft())
+
+        done: List[Completed] = []
+        # group by request shape — each shape is its own jit cell
+        by_shape: Dict[Tuple, List[Request]] = {}
+        for r in pending:
+            by_shape.setdefault(r.x.shape, []).append(r)
+
+        for shape, reqs in by_shape.items():
+            xs = np.stack([r.x for r in reqs])
+            if isinstance(self.controller, FixedController):
+                Ks_raw = np.full((len(reqs),), self.controller.K, np.int32)
+                errs = np.zeros((len(reqs),), np.float32)
+                z0 = dz0 = None
+            else:
+                Ks_dev, err_dev, z0, dz0 = self._probe_fn(shape)(
+                    jnp.asarray(xs))
+                Ks_raw = np.asarray(Ks_dev)
+                errs = np.asarray(err_dev)
+            Ks = snap_to_buckets(Ks_raw, self.ecfg.buckets)
+
+            # pack same-bucket requests into batches of <= max_batch
+            take = lambda tree, sel: None if tree is None else \
+                jax.tree_util.tree_map(lambda l: l[sel], tree)
+            for K in np.unique(Ks):
+                idx = np.flatnonzero(Ks == K)
+                for lo in range(0, len(idx), self.ecfg.max_batch):
+                    sel = idx[lo:lo + self.ecfg.max_batch]
+                    outputs = np.asarray(
+                        self._solve_fn(shape, int(K))(
+                            jnp.asarray(xs[sel]), take(z0, sel),
+                            take(dz0, sel)))
+                    nfe = self.nfe_of(int(K))
+                    fused = self.fused_in_play(int(K))
+                    for j, i in enumerate(sel):
+                        done.append(Completed(
+                            uid=reqs[i].uid, outputs=outputs[j], K=int(K),
+                            nfe=nfe, err_probe=float(errs[i]),
+                            fused_kernel=fused))
+        return done
+
+    def run(self, xs) -> List[Completed]:
+        """Convenience: submit a batch (leading axis = requests) and drain
+        to completion, returning results ordered by submission."""
+        uids = [self.submit(x) for x in np.asarray(xs)]
+        results: Dict[int, Completed] = {}
+        while self._queue:
+            for c in self.step():
+                results[c.uid] = c
+        return [results[u] for u in uids]

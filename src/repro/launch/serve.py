@@ -1,14 +1,19 @@
-"""Batched serving driver with selectable depth solver — where the paper's
-technique meets the serving stack.
+"""Serving CLI — batching/eps policy lives in ``launch/engine.py``; this
+module only parses flags and reports.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b --reduced \
-        --batch 4 --prompt-len 16 --gen 32 [--solver hyper_euler --nfe 4]
+        --batch 4 --prompt-len 16 --gen 32 [--solver hyper_euler --nfe 4] \
+        [--g-ckpt /path/to/g --g-rank 32] [--multirate --tol 1e-2 \
+         --buckets 2,4,8]
 
 solver=discrete (default): standard full-depth cached decode.
-solver=euler|heun|... with --nfe K: continuous-depth inference
-(models/cdepth.py) — per-token depth integration in K steps; with a trained
-hypersolver checkpoint (--g-ckpt), the correction term is applied
-(HyperEuler). Reports tokens/s and NFE per token.
+solver=euler|heun|...|hyper_* : continuous-depth scoring. Fixed-K serving
+with --nfe K, or error-controlled multi-rate serving with --multirate: a
+cheap per-request probe assigns each request an eps bucket and same-bucket
+requests are packed into batches (see launch/engine.py). ``hyper_*``
+solvers apply a trained hypersolver correction loaded via --g-ckpt
+(HyperEuler etc.). Reports per-request NFE and argmax agreement vs the
+full-depth forward.
 """
 from __future__ import annotations
 
@@ -19,29 +24,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
 from repro.configs import get
-from repro.models.lm import (
-    group_layout, init_lm, init_lm_cache, lm_decode_step, lm_forward,
-    lm_prefill,
+from repro.launch.engine import (
+    EngineConfig, MultiRateEngine, greedy_generate, lm_depth_model,
+    load_g_params,
 )
-
-def greedy_generate(params, cfg, prompt, gen_len: int, jit_step=None):
-    """Standard cached decode; prompt: (B, P) int32. Prefill is a single
-    batched forward (one compiled scan over the prompt, models/lm.py),
-    then token-by-token greedy decode."""
-    B, P = prompt.shape
-    caches = init_lm_cache(cfg, B, P + gen_len)
-    step = jit_step or jax.jit(
-        lambda p, t, c, i: lm_decode_step(p, cfg, t, c, i))
-    prefill = jax.jit(lambda p, toks, c: lm_prefill(p, cfg, toks, c))
-    logits, caches = prefill(params, prompt, caches)
-    out = [jnp.argmax(logits, -1).astype(jnp.int32)]
-    for t in range(P, P + gen_len - 1):
-        logits, caches = step(params, out[-1], caches,
-                              jnp.asarray(t, jnp.int32))
-        out.append(jnp.argmax(logits, -1).astype(jnp.int32))
-    return jnp.stack(out, axis=1)
+from repro.models.lm import discrete_nfe, group_layout, init_lm, lm_forward
 
 
 def main():
@@ -52,8 +40,24 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--solver", default="discrete")
-    ap.add_argument("--nfe", type=int, default=0)
+    ap.add_argument("--nfe", type=int, default=0,
+                    help="fixed mesh length K (ignored with --multirate)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--g-ckpt", default=None,
+                    help="CheckpointManager dir of a trained LM hypersolver "
+                         "correction (enables hyper_* solvers)")
+    ap.add_argument("--g-rank", type=int, default=32,
+                    help="rank of the g_omega checkpoint being restored")
+    ap.add_argument("--multirate", action="store_true",
+                    help="error-controlled per-request step sizes "
+                         "(launch/engine.py) instead of one fixed K")
+    ap.add_argument("--tol", type=float, default=1e-2,
+                    help="probe local-error tolerance for --multirate")
+    ap.add_argument("--buckets", default="2,4,8",
+                    help="comma-separated serving K buckets for --multirate")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--fused", action="store_true",
+                    help="route bucket solves through the Pallas kernel")
     args = ap.parse_args()
 
     cfg = get(args.arch)
@@ -67,25 +71,53 @@ def main():
         t0 = time.time()
         toks = greedy_generate(params, cfg, prompt, args.gen)
         dt = time.time() - t0
-        _, n_groups, _ = group_layout(cfg)
         print(f"[discrete] {args.batch}x{args.gen} tokens in {dt:.2f}s "
               f"({args.batch * args.gen / dt:.1f} tok/s), "
-              f"NFE/token = {n_groups} groups")
+              f"NFE/token = {discrete_nfe(cfg)} groups")
         print("sample:", np.asarray(toks[0, :16]))
-    else:
-        # continuous-depth scoring comparison at reduced NFE
-        from repro.models.cdepth import lm_forward_cdepth
-        _, n_groups, _ = group_layout(cfg)
-        K = args.nfe or max(1, n_groups // 2)
-        full, _ = lm_forward(params, cfg, prompt)
-        t0 = time.time()
-        approx = lm_forward_cdepth(params, cfg, prompt, K=K,
-                                   solver=args.solver)
-        dt = time.time() - t0
-        agree = float(jnp.mean(jnp.argmax(full, -1) == jnp.argmax(approx, -1)))
-        print(f"[{args.solver} K={K}] scored {args.batch}x{args.prompt_len} "
-              f"in {dt:.2f}s; NFE {K}/{n_groups}; "
-              f"argmax agreement vs full depth: {agree:.3f}")
+        return
+
+    # continuous-depth scoring comparison at reduced NFE
+    _, n_groups, _ = group_layout(cfg)
+    g_params = None
+    if args.g_ckpt:
+        g_params = load_g_params(args.g_ckpt, cfg, rank=args.g_rank)
+    if args.solver.startswith("hyper_") and g_params is None:
+        raise SystemExit(f"--solver {args.solver} needs --g-ckpt "
+                         "(a trained correction checkpoint)")
+
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    K_fixed = args.nfe or max(1, n_groups // 2)
+    ecfg = EngineConfig(
+        buckets=buckets if args.multirate else (K_fixed,),
+        tol=args.tol,
+        max_batch=args.max_batch,
+        solver=args.solver,
+        controller="auto" if args.multirate else "fixed",
+        fixed_K=K_fixed,
+        fused=args.fused,
+    )
+    model = lm_depth_model(params, cfg, solver=args.solver,
+                           g_params=g_params, fused=args.fused)
+    engine = MultiRateEngine(model, ecfg)
+
+    full, _ = lm_forward(params, cfg, prompt)
+    full_top = np.asarray(jnp.argmax(full, -1))
+    t0 = time.time()
+    results = engine.run(np.asarray(prompt))
+    dt = time.time() - t0
+    agree = [float(np.mean(np.argmax(r.outputs, -1) == full_top[i]))
+             for i, r in enumerate(results)]
+    nfes = [r.nfe for r in results]
+    mode = "multirate" if args.multirate else f"K={K_fixed}"
+    print(f"[{args.solver} {mode}] scored {args.batch}x{args.prompt_len} "
+          f"in {dt:.2f}s; mean NFE {np.mean(nfes):.2f}/{n_groups} "
+          f"(probe {engine.probe_nfe}); mean argmax agreement vs full "
+          f"depth: {np.mean(agree):.3f}")
+    for r, a in zip(results, agree):
+        print(f"  req {r.uid}: K={r.K} nfe={r.nfe} "
+              f"err_probe={r.err_probe:.3e} agree={a:.3f} "
+              f"fused={r.fused_kernel}")
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ArchConfig
-from repro.core import FixedGrid, Integrator, get_tableau, with_initial
+from repro.core import FixedGrid, Integrator, SolveStats, get_tableau, with_initial
 from repro.core.residual import combined_loss
 from repro.models.lm import (
     ZERO_AUX, _embed, _readout, block_apply, dtype_of, group_layout,
@@ -117,13 +117,51 @@ def lm_g_apply(gp, eps, s, x, h, dh):
 
 # ----------------------------------------------------------- inference ----
 
+def bind_lm_g(g_params):
+    """Close LM g_omega over its params to the core Correction signature."""
+    return lambda eps, s, z, dz: lm_g_apply(g_params, eps, s, None, z, dz)
+
+
+def lm_integrator(solver: str = "euler", g_params: Any = None,
+                  fused: bool = False) -> Integrator:
+    """The serving Integrator for the LM depth ODE. ``solver`` may carry a
+    ``hyper_`` prefix (``hyper_euler`` == euler base + correction, which
+    then requires ``g_params`` — a hyper solver silently downgraded to its
+    base would misreport agreement/benchmark numbers)."""
+    if solver.startswith("hyper_"):
+        if g_params is None:
+            raise ValueError(
+                f"solver {solver!r} needs a trained correction: pass "
+                "g_params (serve CLI: --g-ckpt)")
+        base = solver[len("hyper_"):]
+    else:
+        base = solver
+    g = bind_lm_g(g_params) if g_params is not None else None
+    return Integrator(tableau=get_tableau(base), g=g, fused=fused)
+
+
+def apply_tail(params, cfg: ArchConfig, h):
+    """The discrete tail layers + readout shared by every LM serving path
+    (full-K scoring, the engine's readout, and reference solves)."""
+    pattern, _, tail = group_layout(cfg)
+    aux = ZERO_AUX()
+    for i in range(tail):
+        h, aux = block_apply(params["tail"][f"t{i}"], cfg, pattern[i], h, aux)
+    return _readout(params, cfg, h)
+
+
 def lm_forward_cdepth(params, cfg: ArchConfig, tokens: jnp.ndarray, K: int,
                       solver: str = "euler", g_params: Any = None,
-                      frontend: Optional[jnp.ndarray] = None):
+                      frontend: Optional[jnp.ndarray] = None,
+                      with_stats: bool = False):
     """Full-sequence scoring with a K-step (hyper)solved depth integration.
 
     K == n_groups with solver='euler', g=None reproduces lm_forward exactly
     (up to tail layers, which are always applied discretely).
+
+    ``with_stats=True`` additionally returns per-sample ``SolveStats`` (NFE
+    = stages * K for every row of the batch; the multi-rate engine in
+    launch/engine.py adds its probe cost on top).
     """
     pattern, n_groups, tail = group_layout(cfg)
     h = _embed(params, cfg, tokens)
@@ -132,16 +170,39 @@ def lm_forward_cdepth(params, cfg: ArchConfig, tokens: jnp.ndarray, K: int,
         fe = dense(params["patch_proj"], frontend.astype(h.dtype))
         h = jnp.concatenate([fe, h], axis=1)
     f = depth_field(params, cfg)
-    g = None
-    if g_params is not None:
-        g = lambda eps, s, z, dz: lm_g_apply(g_params, eps, s, None, z, dz)
-    integ = Integrator(tableau=get_tableau(solver), g=g)
+    integ = lm_integrator(solver, g_params)
     grid = FixedGrid.over(0.0, 1.0, K)
     h = integ.solve(f, h, grid, return_traj=False)
-    aux = ZERO_AUX()
-    for i in range(tail):
-        h, aux = block_apply(params["tail"][f"t{i}"], cfg, pattern[i], h, aux)
-    return _readout(params, cfg, h)
+    logits = apply_tail(params, cfg, h)
+    if not with_stats:
+        return logits
+    B = tokens.shape[0]
+    stats = SolveStats(
+        nfe=jnp.full((B,), integ.tableau.stages * K, jnp.int32),
+        K=jnp.full((B,), K, jnp.int32),
+        err_probe=jnp.zeros((B,), jnp.float32),
+        probe_nfe=0,
+    )
+    return logits, stats
+
+
+def depth_probe(params, cfg: ArchConfig, tokens: jnp.ndarray, controller,
+                solver: str = "euler", g_params: Any = None,
+                frontend: Optional[jnp.ndarray] = None):
+    """Cheap per-request error probe over the LM depth ODE.
+
+    Embeds the prompt and lets ``controller`` (core/controllers.py) pick a
+    per-sample mesh length from one probe step of the depth field. Returns
+    a ``Probe`` (K, err, nfe, dz0) — the serving engine snaps K to its
+    buckets and reuses dz0 as the solve's first stage."""
+    h = _embed(params, cfg, tokens)
+    if frontend is not None:
+        from repro.nn.module import dense
+        fe = dense(params["patch_proj"], frontend.astype(h.dtype))
+        h = jnp.concatenate([fe, h], axis=1)
+    f = depth_field(params, cfg)
+    integ = lm_integrator(solver, g_params)
+    return controller.select(integ, f, h, (0.0, 1.0))
 
 
 def cdepth_residual_loss(params, g_params, cfg: ArchConfig,

@@ -75,6 +75,15 @@ def group_layout(cfg: ArchConfig) -> Tuple[Tuple[str, ...], int, int]:
     return pattern, n_groups, tail
 
 
+def discrete_nfe(cfg: ArchConfig) -> int:
+    """Depth-ODE NFE equivalent of the discrete full-depth forward: one
+    vector-field (= block-group) evaluation per group. The serving pareto
+    (launch/engine.py, benchmarks/bench_serve.py) reports continuous-depth
+    NFE against this baseline."""
+    _, n_groups, _ = group_layout(cfg)
+    return n_groups
+
+
 # ------------------------------------------------------------- blocks ----
 
 def block_init(key, cfg: ArchConfig, kind: str) -> Params:

@@ -15,6 +15,8 @@ X64_MODULES = {
     "test_hypersolver.py",
     "test_core_properties.py",
     "test_integrate.py",
+    "test_adaptive.py",
+    "test_controllers.py",
 }
 
 

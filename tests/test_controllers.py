@@ -1,0 +1,207 @@
+"""Step controllers (core/controllers.py) and the controller-driven
+multi-rate solve path of the Integrator: selection monotonicity, shared
+embedded-error machinery, per-sample NFE accounting, probe-stage reuse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EmbeddedErrorController, FixedController, FixedGrid, HEUN,
+    HypersolverResidualController, Integrator, depth_like, embedded_step,
+    error_ratio, get_tableau, per_sample_norm, step_factor,
+)
+
+# x64 enabled per-module via tests/conftest.py
+
+
+def field(s, z):
+    return -z + depth_like(jnp.sin(3.0 * jnp.asarray(s)), z) * jnp.ones_like(z)
+
+
+# -------------------------------------------------- shared embedded machinery ----
+
+def test_embedded_step_error_order():
+    """The Heun-Euler pair's error estimate scales ~ h^2 (embedded order 1),
+    the same machinery odeint_dopri5 runs with DOPRI5 weights."""
+    z0 = jnp.asarray([[1.0, -0.4]])
+    f = lambda s, z: jnp.sin(z) + z ** 2 * 0.1
+    errs = []
+    for h in (0.2, 0.1, 0.05):
+        _, err, stages = embedded_step(f, HEUN, 0.0, h, z0)
+        assert len(stages) == HEUN.stages
+        errs.append(float(jnp.linalg.norm(err)))
+    slopes = np.diff(np.log(errs)) / np.diff(np.log([0.2, 0.1, 0.05]))
+    assert np.all(slopes > 1.6), (errs, slopes)
+
+
+def test_embedded_step_requires_b_err():
+    with pytest.raises(ValueError):
+        embedded_step(field, get_tableau("rk4"), 0.0, 0.1, jnp.ones((1, 2)))
+
+
+def test_step_factor_clamped():
+    assert float(step_factor(jnp.asarray(1e9), 5)) == pytest.approx(0.2)
+    assert float(step_factor(jnp.asarray(1e-12), 5)) == pytest.approx(5.0)
+    # dopri5 instance: ratio^{-1/5} * safety, the original exponent
+    assert float(step_factor(jnp.asarray(1.0), 5)) == pytest.approx(0.9)
+
+
+def test_error_ratio_accept_boundary():
+    z = jnp.zeros((2, 2))
+    err_ok = jnp.full((2, 2), 0.5e-3)
+    err_bad = jnp.full((2, 2), 2e-3)
+    assert float(error_ratio(z, z, err_ok, 1e-3, 0.0)) < 1.0
+    assert float(error_ratio(z, z, err_bad, 1e-3, 0.0)) > 1.0
+
+
+def test_per_sample_norm_reduces_to_leading_axis():
+    t = {"a": jnp.ones((3, 4, 5)) * 2.0, "b": jnp.zeros((3, 7))}
+    out = per_sample_norm(t)
+    assert out.shape == (3,)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.sqrt((4.0 + 0.0) / 2) * np.ones(3))
+
+
+# -------------------------------------------------------- controller selection ----
+
+def test_fixed_controller_constant():
+    probe = FixedController(K=5).select(Integrator(HEUN), field,
+                                        jnp.ones((4, 3)), (0.0, 1.0))
+    np.testing.assert_array_equal(np.asarray(probe.K), [5, 5, 5, 5])
+    assert probe.nfe == 0 and probe.dz0 is None
+
+
+def test_embedded_controller_tol_monotone():
+    """Tighter tolerance never selects a coarser mesh."""
+    z0 = jnp.asarray(np.random.RandomState(0).randn(4, 3))
+    prev = None
+    for tol in (1e-1, 1e-2, 1e-3):
+        c = EmbeddedErrorController(tol=tol, k_min=1, k_max=64)
+        probe = c.select(Integrator(HEUN), field, z0, (0.0, 1.0))
+        if prev is not None:
+            assert np.all(np.asarray(probe.K) >= np.asarray(prev))
+        prev = probe.K
+        assert probe.nfe == HEUN.stages and probe.dz0 is not None
+
+
+def test_embedded_controller_harder_sample_gets_finer_mesh():
+    """A sample with larger local error gets at least as large a K."""
+    z0 = jnp.stack([0.01 * jnp.ones((3,)), 5.0 * jnp.ones((3,))])
+    f = lambda s, z: -z ** 2  # curvature grows with |z|
+    c = EmbeddedErrorController(tol=1e-3, k_min=1, k_max=128)
+    probe = c.select(Integrator(HEUN), f, z0, (0.0, 1.0))
+    assert int(probe.K[1]) > int(probe.K[0]), np.asarray(probe.K)
+    assert float(probe.err[1]) > float(probe.err[0])
+
+
+def test_residual_controller_uses_g_magnitude():
+    g_small = lambda eps, s, z, dz: 1e-4 * jnp.ones_like(z)
+    g_big = lambda eps, s, z, dz: 10.0 * jnp.ones_like(z)
+    z0 = jnp.ones((2, 3))
+    c = HypersolverResidualController(tol=1e-2, k_min=1, k_max=64)
+    k_small = c.select(Integrator(get_tableau("euler"), g=g_small), field,
+                       z0, (0.0, 1.0)).K
+    k_big = c.select(Integrator(get_tableau("euler"), g=g_big), field,
+                     z0, (0.0, 1.0)).K
+    assert np.all(np.asarray(k_big) > np.asarray(k_small))
+
+
+def test_residual_controller_requires_g():
+    c = HypersolverResidualController()
+    with pytest.raises(ValueError):
+        c.select(Integrator(HEUN), field, jnp.ones((1, 2)), (0.0, 1.0))
+
+
+# ------------------------------------------------- controller-driven solve ----
+
+def test_controlled_solve_matches_per_sample_fixed_solves():
+    """The masked multi-rate scan == separate scalar-eps solves at each
+    sample's selected K (the correctness core of multi-rate serving)."""
+    scales = jnp.asarray([0.05, 0.3, 1.0, 2.5, 6.0])[:, None]
+    z0 = scales * jnp.ones((5, 3))  # per-row stiffness spread
+    f = lambda s, z: -z ** 2
+    integ = Integrator(HEUN)
+    ctrl = EmbeddedErrorController(tol=1e-1, k_min=1, k_max=64)
+    out, stats = integ.solve(f, z0, FixedGrid.over(0.0, 1.0, 8),
+                             return_traj=False, controller=ctrl)
+    Ks = np.asarray(stats.K)
+    assert len(set(Ks.tolist())) > 1, "workload should be heterogeneous"
+    for i in range(z0.shape[0]):
+        zi = integ.solve(f, z0[i:i + 1],
+                         FixedGrid.over(0.0, 1.0, int(Ks[i])),
+                         return_traj=False)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(zi[0]),
+                                   rtol=1e-9, atol=1e-12)
+
+
+def test_controlled_solve_nfe_accounting():
+    """Per-sample NFE = probe evals - reused stage + stages * K."""
+    z0 = jnp.asarray(np.random.RandomState(2).randn(4, 2))
+    integ = Integrator(HEUN)
+    ctrl = EmbeddedErrorController(tol=1e-2, k_min=2, k_max=16)
+    _, stats = integ.solve(field, z0, FixedGrid.over(0.0, 1.0, 4),
+                           return_traj=False, controller=ctrl)
+    expect = ctrl.probe_nfe - 1 + HEUN.stages * np.asarray(stats.K)
+    np.testing.assert_array_equal(np.asarray(stats.nfe), expect)
+    assert stats.probe_nfe == HEUN.stages
+
+
+def test_controlled_solve_fixed_controller_matches_plain_solve():
+    z0 = jnp.asarray(np.random.RandomState(3).randn(3, 4))
+    integ = Integrator(get_tableau("rk4"))
+    grid = FixedGrid.over(0.0, 1.0, 6)
+    ref = integ.solve(field, z0, grid, return_traj=False)
+    out, stats = integ.solve(field, z0, grid, return_traj=False,
+                             controller=FixedController(K=6))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-12)
+    np.testing.assert_array_equal(np.asarray(stats.nfe), [24, 24, 24])
+
+
+def test_controlled_solve_rejects_batched_eps_grid():
+    integ = Integrator(HEUN)
+    grid = FixedGrid(0.0, jnp.asarray([0.1, 0.2]), 4)
+    with pytest.raises(AssertionError):
+        integ.solve(field, jnp.ones((2, 3)), grid,
+                    controller=FixedController(K=4))
+
+
+# ------------------------------------------------------- probe-stage reuse ----
+
+def test_first_stage_reuse_exact():
+    """solve(first_stage=f(s0, z0)) == solve() bitwise: stage 0 is simply
+    not recomputed."""
+    z0 = jnp.asarray(np.random.RandomState(4).randn(3, 2))
+    integ = Integrator(get_tableau("midpoint"))
+    grid = FixedGrid.over(0.0, 1.0, 5)
+    dz0 = field(0.0, z0)
+    a = integ.solve(field, z0, grid, return_traj=True)
+    b = integ.solve(field, z0, grid, return_traj=True, first_stage=dz0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    aT = integ.solve(field, z0, grid, return_traj=False)
+    bT = integ.solve(field, z0, grid, return_traj=False, first_stage=dz0)
+    np.testing.assert_array_equal(np.asarray(aT), np.asarray(bT))
+
+
+def test_first_stage_reuse_single_step():
+    z0 = jnp.ones((2, 3))
+    integ = Integrator(HEUN)
+    grid = FixedGrid.over(0.0, 1.0, 1)
+    a = integ.solve(field, z0, grid, return_traj=True)
+    b = integ.solve(field, z0, grid, return_traj=True,
+                    first_stage=field(0.0, z0))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------- lazy psi ----
+
+def test_step_psi_lazy_on_fused_path():
+    """The fused serving path skips the redundant b-weighted recombination:
+    psi is None; the unfused path still returns it."""
+    z0 = jnp.ones((2, 8), jnp.float32)
+    f = lambda s, z: -z
+    _, psi_unfused, _ = Integrator(HEUN).step(f, 0.0, 0.25, z0)
+    assert psi_unfused is not None
+    _, psi_fused, _ = Integrator(HEUN, fused=True).step(f, 0.0, 0.25, z0)
+    assert psi_fused is None

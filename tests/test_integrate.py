@@ -203,16 +203,23 @@ def test_fused_solve_matches_unfused(base, dtype):
 
 
 def test_fused_falls_back_on_batched_eps():
-    """Batched eps cannot be baked into the kernel: the engine silently
-    takes the jnp path and stays correct."""
+    """Batched eps cannot be baked into the kernel: the engine takes the
+    jnp path (correct results), surfaces a one-time RuntimeWarning, and
+    exposes the structured ``fused_available`` flag for serving configs."""
+    from repro.core import integrate as integrate_mod
+
     f = lambda s, z: -z
     z0 = jnp.ones((2, 5), jnp.float32)
     eps = jnp.asarray([0.1, 0.2], jnp.float32)
     a = Integrator(RK4).solve(f, z0, FixedGrid(0.0, eps, 4),
                               return_traj=False)
-    b = Integrator(RK4, fused=True).solve(f, z0, FixedGrid(0.0, eps, 4),
-                                          return_traj=False)
+    fused = Integrator(RK4, fused=True)
+    integrate_mod._fused_fallback_warned = False
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        b = fused.solve(f, z0, FixedGrid(0.0, eps, 4), return_traj=False)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    assert not fused.fused_available(eps)
+    assert fused.fused_available(0.1)
 
 
 # ------------------------------------------------------------ coercion ----
