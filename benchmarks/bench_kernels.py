@@ -1,72 +1,156 @@
 """Kernel micro-bench: Pallas (interpret on CPU — correctness-grade
-timing) vs the pure-jnp reference, plus analytic VMEM/MXU utilization
-notes per kernel for the TPU target."""
+timing) vs the pure-jnp reference vs the Integrator's unfused jnp-fallback
+sequence, plus the analytic HBM-traffic model the fusion is about.
+
+The hyper_step section sweeps tableaus through the runtime-eps MASKED
+MULTI-RATE update (per-sample eps row + active mask — the serving hot
+path): the fused kernel does it in ONE memory pass per leaf, the unfused
+leaf-wise path in ``stages + 3`` passes (b-lincomb, eps-axpy, correction
+axpy, freeze where). Interpret-mode wall times on CPU do not measure TPU
+HBM; the traffic model is the perf trajectory, timings pin relative
+regressions. Writes BENCH_kernels.json at the repo root (CI uploads all
+BENCH_*.json as artifacts per run — the serving counterpart is
+BENCH_serve.json).
+"""
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timed
+from repro.core import get_tableau
+from repro.core.integrate import tree_axpy, tree_lincomb
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.hyper_step.ops import hyper_step
-from repro.kernels.hyper_step.ref import hyper_step_ref
+from repro.kernels.hyper_step.ops import fused_rk_update
+from repro.kernels.hyper_step.ref import fused_rk_update_ref
 from repro.kernels.rglru_scan.ops import rglru_scan
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
 from repro.kernels.rwkv6_scan.ops import wkv6
 from repro.kernels.rwkv6_scan.ref import wkv6_ref
 
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_kernels.json")
+
+TABLEAUS = ("euler", "heun", "rk3", "rk4")
+
+
+def _unfused_update(z, stages, g, eps, b, order, active):
+    """The exact jnp sequence Integrator.step runs when the kernel is not
+    in play: stages + 3 leaf-wise memory passes."""
+    psi = tree_lincomb(b, stages)
+    out = tree_axpy(eps, psi, z)
+    if g is not None:
+        out = tree_axpy(jnp.asarray(eps) ** (order + 1), g, out)
+    mask = active.reshape(active.shape + (1,) * (z.ndim - 1)) != 0
+    return jnp.where(mask, out, z).astype(z.dtype)
+
+
+def _traffic_model(stages: int, with_g: bool, nbytes: int):
+    """Bytes over the HBM bus for one masked multi-rate state update.
+
+    fused: every operand streams exactly once — z + S stages (+ g) read,
+    z_next written; the (B,) eps/mask rows ride in SMEM (negligible).
+    unfused: ``stages + 3`` read-modify-write passes over state-sized
+    arrays (b-lincomb accumulation, eps-axpy, correction axpy, freeze
+    where), each re-reading its accumulator."""
+    reads_fused = (1 + stages + (1 if with_g else 0)) * nbytes
+    writes_fused = nbytes
+    passes_unfused = stages + (3 if with_g else 2)
+    # lincomb: S passes (r_j + accumulator re-read after the first),
+    # each later pipeline stage: 2 reads + 1 write of state size.
+    reads_unfused = (2 * stages - 1 + 2 * (passes_unfused - stages)) * nbytes
+    writes_unfused = passes_unfused * nbytes
+    return {
+        "memory_passes_fused": 1,
+        "memory_passes_unfused": passes_unfused,
+        "hbm_bytes_fused": reads_fused + writes_fused,
+        "hbm_bytes_unfused": reads_unfused + writes_unfused,
+        "traffic_ratio": round(
+            (reads_unfused + writes_unfused)
+            / (reads_fused + writes_fused), 2),
+    }
+
 
 def main(budget: str = "small"):
     rows = []
-    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    ks = jax.random.split(jax.random.PRNGKey(0), 12)
+    B, D = (8, 4096) if budget == "small" else (64, 16384)
 
-    # hyper_step
-    z, f, g = (jax.random.normal(ks[i], (64, 2048)) for i in range(3))
-    t_ref, _ = timed(jax.jit(lambda a, b, c: hyper_step_ref(a, b, c, 0.1, 1)),
-                     z, f, g)
-    t_pal, _ = timed(lambda a, b, c: hyper_step(a, b, c, 0.1, 1), z, f, g)
-    rows.append({"bench": "kernels", "kernel": "hyper_step",
-                 "shape": "64x2048",
-                 "ref_us": round(t_ref * 1e6, 1),
-                 "pallas_interpret_us": round(t_pal * 1e6, 1),
-                 "tpu_note": "mem-bound fusion: 4 HBM streams vs 8 unfused"})
+    # ---- hyper_step: runtime-eps masked multi-rate update per tableau ----
+    z = jax.random.normal(ks[0], (B, D))
+    g = jax.random.normal(ks[1], (B, D))
+    eps = jnp.linspace(0.05, 0.5, B)
+    active = (jnp.arange(B) % 2).astype(jnp.int32)
+    for name in TABLEAUS:
+        tab = get_tableau(name)
+        stages = tuple(jax.random.normal(k, (B, D))
+                       for k in jax.random.split(ks[2], tab.stages))
+        t_ref, _ = timed(
+            jax.jit(lambda z_, s_, g_, e_, a_, b=tab.b, o=tab.order:
+                    fused_rk_update_ref(z_, s_, g_, e_, b, o, active=a_)),
+            z, stages, g, eps, active)
+        t_unf, _ = timed(
+            jax.jit(lambda z_, s_, g_, e_, a_, b=tab.b, o=tab.order:
+                    _unfused_update(z_, s_, g_, e_, b, o, a_)),
+            z, stages, g, eps, active)
+        t_pal, _ = timed(
+            lambda z_, s_, g_, e_, a_, b=tab.b, o=tab.order:
+            fused_rk_update(z_, s_, g_, e_, b, o, active=a_),
+            z, stages, g, eps, active)
+        nbytes = z.size * z.dtype.itemsize
+        rows.append({
+            "bench": "kernels", "kernel": "hyper_step", "tableau": name,
+            "stages": tab.stages, "shape": f"{B}x{D}",
+            "update": "masked multi-rate (per-sample eps row + active "
+                      "mask, runtime scalar-prefetch operands)",
+            "ref_us": round(t_ref * 1e6, 1),
+            "jnp_fallback_us": round(t_unf * 1e6, 1),
+            "pallas_interpret_us": round(t_pal * 1e6, 1),
+            **_traffic_model(tab.stages, True, nbytes),
+            "tpu_note": "mem-bound: one HBM pass replaces the unfused "
+                        "lincomb/axpy/axpy/where pipeline; eps in SMEM "
+                        "so one compile serves every step-size mix",
+        })
 
-    # flash attention
-    B, S, H, KV, hd = 1, 256, 4, 2, 64
-    q = jax.random.normal(ks[3], (B, S, H, hd))
-    k = jax.random.normal(ks[4], (B, S, KV, hd))
-    v = jax.random.normal(ks[5], (B, S, KV, hd))
+    # ---- flash attention ----
+    Bq, S, H, KV, hd = 1, 256, 4, 2, 64
+    q = jax.random.normal(ks[3], (Bq, S, H, hd))
+    k = jax.random.normal(ks[4], (Bq, S, KV, hd))
+    v = jax.random.normal(ks[5], (Bq, S, KV, hd))
     ref_fn = jax.jit(lambda q, k, v: attention_ref(
         jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)))
     t_ref, _ = timed(ref_fn, q, k, v)
     t_pal, _ = timed(lambda q, k, v: flash_attention(q, k, v), q, k, v)
     rows.append({"bench": "kernels", "kernel": "flash_attention",
-                 "shape": f"{B}x{S}x{H}x{hd}",
+                 "shape": f"{Bq}x{S}x{H}x{hd}",
                  "ref_us": round(t_ref * 1e6, 1),
                  "pallas_interpret_us": round(t_pal * 1e6, 1),
                  "tpu_note": "128x128 MXU blocks; causal skips upper "
                              "triangle via loop bound"})
 
-    # wkv6
-    Bt, T, Hh, D = 1, 256, 2, 16
-    r = jax.random.normal(ks[6], (Bt, T, Hh, D))
-    kk = jax.random.normal(ks[7], (Bt, T, Hh, D))
-    vv = jax.random.normal(ks[0], (Bt, T, Hh, D))
-    w = jax.nn.sigmoid(jax.random.normal(ks[1], (Bt, T, Hh, D)))
-    u = jnp.full((Hh, D), 0.3)
+    # ---- wkv6 ----
+    Bt, T, Hh, Dh = 1, 256, 2, 16
+    r = jax.random.normal(ks[6], (Bt, T, Hh, Dh))
+    kk = jax.random.normal(ks[7], (Bt, T, Hh, Dh))
+    vv = jax.random.normal(ks[8], (Bt, T, Hh, Dh))
+    w = jax.nn.sigmoid(jax.random.normal(ks[9], (Bt, T, Hh, Dh)))
+    u = jnp.full((Hh, Dh), 0.3)
     t_ref, _ = timed(jax.jit(wkv6_ref), r, kk, vv, w, u)
     t_pal, _ = timed(lambda *a: wkv6(*a, chunk=64), r, kk, vv, w, u)
     rows.append({"bench": "kernels", "kernel": "rwkv6_scan",
-                 "shape": f"{Bt}x{T}x{Hh}x{D}",
+                 "shape": f"{Bt}x{T}x{Hh}x{Dh}",
                  "ref_us": round(t_ref * 1e6, 1),
                  "pallas_interpret_us": round(t_pal * 1e6, 1),
                  "tpu_note": "chunked VMEM-resident (D,D) state; "
                              "O(T D) HBM traffic"})
 
-    # rglru
-    a = jax.nn.sigmoid(jax.random.normal(ks[2], (2, 512, 128)))
-    b = jax.random.normal(ks[3], (2, 512, 128))
+    # ---- rglru ----
+    a = jax.nn.sigmoid(jax.random.normal(ks[10], (2, 512, 128)))
+    b = jax.random.normal(ks[11], (2, 512, 128))
     t_ref, _ = timed(jax.jit(rglru_scan_ref), a, b)
     t_pal, _ = timed(lambda x, y: rglru_scan(x, y, chunk=128, bw=128), a, b)
     rows.append({"bench": "kernels", "kernel": "rglru_scan",
@@ -74,6 +158,9 @@ def main(budget: str = "small"):
                  "ref_us": round(t_ref * 1e6, 1),
                  "pallas_interpret_us": round(t_pal * 1e6, 1),
                  "tpu_note": "lane-parallel VPU scan, fp32 carry"})
+
+    with open(OUT_PATH, "w") as fh:
+        json.dump(rows, fh, indent=1, default=str)
     return rows
 
 

@@ -7,6 +7,11 @@ Figure mapping: bench_pareto (Fig 3/9), bench_wallclock (Fig 4),
 bench_alpha_family (Fig 5-6), bench_cnf (Fig 1/7), bench_trajectory
 (Fig 8), bench_overhead (Fig 2 + Sec 6), bench_kernels (kernel layer),
 bench_cdepth_lm (beyond paper: the technique on LM serving).
+
+Perf trajectory files at the repo root (uploaded as CI artifacts on every
+tier-1 run): BENCH_kernels.json (bench_kernels — fused hyper_step traffic
+model + timings per tableau) and BENCH_serve.json (bench_serve — the
+multi-rate NFE/agreement pareto).
 """
 from __future__ import annotations
 

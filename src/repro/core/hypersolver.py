@@ -27,10 +27,12 @@ class HyperSolver(Integrator):
     """A base tableau paired with a correction network of matching order.
 
     ``fused=True`` routes the whole update — b-weighted stage combination
-    plus correction — through the Pallas fused_rk_update kernel
-    (kernels/hyper_step): one read/write of the state per step instead of
-    ``stages + 2`` — the update itself is memory-bound, so the fusion is
-    the whole win on TPU (interpret-mode on CPU)."""
+    plus correction plus the multi-rate freeze mask — through the Pallas
+    fused_rk_update kernel (kernels/hyper_step): one read/write of the
+    state per step instead of ``stages + 3``, for ANY step-size pattern
+    (eps is a runtime scalar-prefetch operand) — the update itself is
+    memory-bound, so the fusion is the whole win on TPU (interpret-mode
+    on CPU)."""
 
     def odeint(self, f: VectorField, z0: Pytree, grid: FixedGrid,
                return_traj: bool = True):

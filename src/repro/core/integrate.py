@@ -18,14 +18,27 @@ loops): one scan-native engine that
     (``checkpoint=True``) so trajectories of long meshes backprop in O(K)
     memory instead of O(K * stages);
   * routes the update through the fused Pallas ``hyper_step`` kernel
-    (``fused=True``): the b-weighted stage combination AND the eps^{p+1}
-    correction term collapse into one memory pass per leaf, for every base
-    tableau — the update is memory-bound, so this is the serving hot path;
+    (``fused=True``): the b-weighted stage combination, the eps^{p+1}
+    correction term, AND the multi-rate freeze mask collapse into one
+    memory pass per leaf, for every base tableau — the update is
+    memory-bound, so this is the serving hot path. Step sizes are RUNTIME
+    kernel operands (scalar-prefetch SMEM rows, kernels/hyper_step): a
+    Python float, a traced scalar, and a per-sample ``(B,)`` eps row all
+    hit the same compiled kernel, so multi-rate serving never recompiles
+    per step size and never falls off the fused path. The only surviving
+    fallback is odd state dtypes (see ``fused_available``);
   * integrates under a step controller (``controller=``,
     core/controllers.py): a cheap probe picks a per-sample mesh length,
     the probe's first stage is reused, and the solve reports per-sample
     NFE counts (``SolveStats``) — the error-control layer multi-rate
-    serving (launch/engine.py) builds on.
+    serving (launch/engine.py) builds on. ``solve_multirate`` is the same
+    masked scan with externally supplied per-sample mesh lengths (the
+    serving engine packs mixed-K batches straight into it);
+  * runs data-parallel under a device mesh (``solve(mesh=...)``): the
+    leading batch axis shards over the mesh's data axis via ``shard_map``
+    and the depth scan stays local — batch rows share nothing (the
+    runtime-eps kernel looks its coefficients up per row), so the mesh
+    walk needs no cross-device communication.
 
 The hypersolver update implemented for tableau psi and correction g
 (paper Eq. 3 + Eq. 5, Poli et al. 2020):
@@ -41,12 +54,16 @@ Controller/engine architecture (error-controlled multi-rate serving)::
           |                 HypersolverResidualController
           |                       | per-sample K from a cheap probe
     core/integrate.py     Integrator.solve(..., controller=) -> (z, SolveStats)
-          |                 masked multi-rate scan, per-sample NFE counts
+          |                 masked multi-rate scan (fused in-kernel mask),
+          |                 per-sample NFE counts; solve_multirate(Ks=...)
+          |                 is the serving entry; solve(mesh=...) shards
+          |                 the batch axis (launch/mesh.py debug/prod mesh)
           |\
           | core/adaptive.py   odeint_dopri5 = DOPRI5 accept/reject instance
           |                    of the same embedded-error path (+ vmap batch)
-    launch/engine.py      MultiRateEngine: probe -> eps-bucket assignment ->
-          |                 same-bucket batch packing -> scalar-eps solves
+    launch/engine.py      MultiRateEngine: probe -> bucket snap (packing
+          |                 policy only) -> mixed-K batch packing ->
+          |                 per-sample-eps fused solves
     launch/serve.py       CLI only (arch/solver/--g-ckpt flags)
 """
 from __future__ import annotations
@@ -140,37 +157,52 @@ def rk_psi(f: VectorField, tab: Tableau, s, eps, z: Pytree):
     return tree_lincomb(tab.b, stages), stages
 
 
-def _static_eps(eps) -> Optional[float]:
-    """eps as a Python float when it is concrete and scalar, else None
-    (batched or traced eps cannot be baked into a Pallas kernel)."""
-    if isinstance(eps, (int, float)):
-        return float(eps)
-    try:
-        if jnp.ndim(eps) == 0:
-            return float(eps)
-    except (TypeError, jax.errors.ConcretizationTypeError):
-        pass
-    return None
+# Storage dtypes the runtime-eps Pallas kernel takes. Since eps became a
+# runtime operand (scalar-prefetch SMEM row), step sizes can no longer
+# disqualify the fused path — odd state dtypes are the only fallback left.
+_FUSED_DTYPES = frozenset(("float32", "bfloat16", "float16"))
 
 
-_fused_fallback_warned = False
+def _fusable(z: Pytree) -> bool:
+    """True iff every state leaf has a dtype the fused kernel stores.
+    Dtype-less leaves (Python scalars) take the jnp fallback, which
+    promotes them; the kernel needs real arrays."""
+    return all(hasattr(l, "dtype") and l.dtype.name in _FUSED_DTYPES
+               for l in jax.tree_util.tree_leaves(z))
 
 
-def _warn_fused_fallback() -> None:
-    """One-time process-wide warning when fused=True cannot use the kernel.
+class _FusedFallback:
+    """Resettable one-time-warning latch for the surviving fused fallback.
 
-    Serving configs key off this (or ``Integrator.fused_available``) to know
-    the Pallas hyper_step kernel is NOT in play — e.g. a multi-rate batch
-    with per-sample eps must be split into scalar-eps buckets to fuse."""
-    global _fused_fallback_warned
-    if not _fused_fallback_warned:
-        warnings.warn(
-            "Integrator(fused=True): eps is batched or traced, so the fused "
-            "Pallas hyper_step kernel cannot be specialized; falling back to "
-            "the leaf-wise jnp update path. Use a concrete scalar eps (one "
-            "bucket per step size) to keep the kernel in play.",
-            RuntimeWarning, stacklevel=3)
-        _fused_fallback_warned = True
+    Was a process-global module bool, which made warning assertions
+    test-order-dependent (whichever test tripped the fallback first
+    swallowed everyone else's warning). Tests reset it around each test via
+    the autouse fixture in tests/conftest.py; serving configs that must
+    *know* rather than be warned use ``Integrator.fused_available``."""
+
+    __slots__ = ("warned",)
+
+    def __init__(self) -> None:
+        self.warned = False
+
+    def warn(self, reason: str) -> None:
+        if not self.warned:
+            warnings.warn(
+                f"Integrator(fused=True): {reason}; falling back to the "
+                "leaf-wise jnp update path for this solve.",
+                RuntimeWarning, stacklevel=4)
+            self.warned = True
+
+    def reset(self) -> None:
+        self.warned = False
+
+
+_fused_fallback = _FusedFallback()
+
+
+def reset_fused_fallback_warning() -> None:
+    """Re-arm the one-time fused-fallback RuntimeWarning (test isolation)."""
+    _fused_fallback.reset()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,11 +228,13 @@ class Integrator:
     update path.
 
     ``fused=True`` collapses the whole per-step state update — the
-    b-weighted stage combination plus the eps^{p+1} correction — into a
-    single Pallas kernel pass per leaf (kernels/hyper_step): one read of
-    each stage and one write of the state instead of ``stages + 2`` passes.
-    Falls back to the jnp path when eps is batched/traced (the kernel bakes
-    eps statically).
+    b-weighted stage combination, the eps^{p+1} correction, and the
+    multi-rate freeze mask — into a single Pallas kernel pass per leaf
+    (kernels/hyper_step): one read of each stage and one write of the state
+    instead of ``stages + 3`` passes. The kernel takes eps at RUNTIME
+    (scalar-prefetch SMEM rows), so scalar, traced, and per-sample batched
+    step sizes all fuse through one compilation; only odd state dtypes
+    (outside ``_FUSED_DTYPES``) fall back to the jnp path.
     """
 
     tableau: Tableau
@@ -227,16 +261,28 @@ class Integrator:
         overhead, paper Sec. 6)."""
         return self.tableau.stages * K
 
-    def fused_available(self, eps) -> bool:
-        """True iff the fused Pallas kernel path will actually run for this
-        eps — the structured twin of the one-time fallback warning, for
-        serving configs to assert the kernel is in play."""
-        return self.fused and _static_eps(eps) is not None
+    def fused_available(self, eps=None, z: Optional[Pytree] = None) -> bool:
+        """True iff the fused Pallas kernel path will actually run — the
+        structured twin of the one-time fallback warning, for serving
+        configs to assert the kernel is in play. ``eps`` is accepted for
+        interface stability but no longer gates anything: the runtime-eps
+        kernel fuses scalar, traced, AND per-sample batched step sizes.
+        Pass the state (``z=``) to also vet its dtypes."""
+        del eps  # runtime operand now — any step-size pattern fuses
+        return self.fused and (z is None or _fusable(z))
 
     # ------------------------------------------------------------- step ----
     def step(self, f: VectorField, s, eps, z: Pytree,
-             first_stage: Optional[Pytree] = None):
+             first_stage: Optional[Pytree] = None,
+             active: Optional[jnp.ndarray] = None):
         """One (hyper)solved step. Returns (z_next, psi, dz).
+
+        ``eps`` may be a Python float, a traced scalar, or a per-sample
+        ``(B,)`` row (then all state leaves carry the leading batch axis).
+        ``active`` is an optional ``(B,)`` mask row: inactive samples keep
+        ``z`` (the multi-rate freeze) — applied inside the fused kernel at
+        zero extra memory passes, or as a trailing leaf-wise ``where`` on
+        the jnp path.
 
         ``psi`` (the b-weighted stage combination) is lazy: on the fused
         path the kernel already produced the combined update, so psi is
@@ -249,10 +295,12 @@ class Integrator:
         stages = rk_stages(f, tab, s, eps, z, first_stage=first_stage)
         dz = stages[0]
         corr = self.g(eps, s, z, dz) if self.g is not None else None
-        eps_f = _static_eps(eps) if self.fused else None
-        if self.fused and eps_f is None:
-            _warn_fused_fallback()
-        if eps_f is not None:
+        use_kernel = self.fused and _fusable(z)
+        if self.fused and not use_kernel:
+            _fused_fallback.warn(
+                "state dtypes outside the kernel set "
+                f"{sorted(_FUSED_DTYPES)}")
+        if use_kernel:
             from repro.kernels.hyper_step.ops import fused_rk_update
             # zero-b stages never reach the kernel: each operand costs a
             # full HBM read per step, the whole traffic the fusion saves
@@ -260,11 +308,13 @@ class Integrator:
                          if bj != 0.0)
             b_live = tuple(bj for bj, _ in live)
             n_live = len(live)
+            eps_op = eps if isinstance(eps, (int, float)) \
+                else jnp.asarray(eps)
             z_next = jax.tree_util.tree_map(
                 lambda zl, *rest: fused_rk_update(
                     zl, rest[:n_live],
                     rest[n_live] if corr is not None else None,
-                    eps_f, b_live, tab.order),
+                    eps_op, b_live, tab.order, active=active),
                 z, *(r for _, r in live),
                 *((corr,) if corr is not None else ()))
             psi = None  # fused kernel already combined the stages
@@ -276,6 +326,10 @@ class Integrator:
                 ceps = eps ** p1 if isinstance(eps, (int, float)) \
                     else jnp.asarray(eps) ** p1
                 z_next = tree_axpy(ceps, corr, z_next)
+            if active is not None:
+                z_next = jax.tree_util.tree_map(
+                    lambda a, b_: jnp.where(_bcast(active, b_), a, b_),
+                    z_next, z)
         return z_next, psi, dz
 
     # ------------------------------------------------------------ solve ----
@@ -289,6 +343,8 @@ class Integrator:
         checkpoint: bool = False,
         controller=None,
         first_stage: Optional[Pytree] = None,
+        mesh=None,
+        batch_axis: str = "data",
     ):
         """Integrate z' = f(s, z) over ``grid`` (a FixedGrid; ``grid.eps``
         may carry a leading batch axis for per-sample step sizes, in which
@@ -311,7 +367,18 @@ class Integrator:
 
         ``first_stage`` is a precomputed f(s0, z0) (a probe's dz) reused as
         stage 0 of the first step — one NFE saved per solve.
+
+        ``mesh`` shards the solve data-parallel: the leading batch axis of
+        every state leaf (and a batched ``grid.eps``) is sharded over the
+        mesh's ``batch_axis`` via ``shard_map`` and the depth scan runs
+        local to each shard — batch rows share nothing, so no collective
+        is ever emitted. The batch size must divide the axis size.
         """
+        if mesh is not None:
+            return self._solve_sharded(
+                f, z0, grid, mesh, batch_axis, return_traj=return_traj,
+                checkpoint=checkpoint, controller=controller,
+                first_stage=first_stage)
         eps = grid.eps
         if controller is not None:
             return self._solve_controlled(f, z0, grid, controller,
@@ -335,45 +402,123 @@ class Integrator:
             return zT
         return with_initial(z0, with_initial(z1, ys))
 
+    def solve_multirate(self, f, z0: Pytree, span, Ks, k_max: int, *,
+                        first_stage: Optional[Pytree] = None,
+                        return_traj: bool = False,
+                        checkpoint: bool = False):
+        """Masked multi-rate solve over externally supplied per-sample mesh
+        lengths: sample i integrates ``span`` in ``Ks[i]`` uniform steps
+        (eps_i = (s1 - s0) / Ks[i]); the scan runs ``k_max`` steps and
+        freezes sample i once ``k >= Ks[i]``. All z0 leaves must share a
+        leading batch axis matching ``Ks``.
+
+        This is the serving engine's entry point (launch/engine.py packs a
+        mixed-K request batch straight into one call — ``Ks`` is a traced
+        operand, so one compilation per (shape, k_max) serves every bucket
+        mix). On the fused path the whole masked update
+        ``where(k < K_i, z + eps_i*psi + eps_i^{p+1}*g, z)`` is ONE kernel
+        memory pass per leaf; unfused it is ``stages + 3`` jnp passes
+        (lincomb + axpy + correction axpy + freeze where).
+
+        ``k_max`` must cover every ``Ks[i]`` — a sample whose mesh is
+        longer than the scan would silently stop mid-span (checked here
+        when Ks is concrete; traced callers own the invariant, as the
+        engine does with ``k_max = Ks.max()``)."""
+        s0, s1 = span
+        Ks = jnp.asarray(Ks, jnp.int32)
+        try:
+            ks_hi = int(jnp.max(Ks))
+        except jax.errors.ConcretizationTypeError:
+            ks_hi = None
+        if ks_hi is not None and ks_hi > int(k_max):
+            raise ValueError(
+                f"k_max={int(k_max)} truncates samples with K up to "
+                f"{ks_hi}: their scan would stop mid-span")
+        eps = jnp.asarray(s1 - s0) / Ks  # (B,) per-sample step sizes
+
+        def body(z, k):
+            z_next, _, _ = self.step(f, s0 + k * eps, eps, z,
+                                     active=(k < Ks))
+            return z_next, (z_next if return_traj else None)
+
+        if checkpoint:
+            body = jax.checkpoint(body)
+        # step 0 is always active (K_i >= 1) and can reuse a probe's dz0
+        # — f(s0, z0) does not depend on eps, so it is shared by every
+        # sample regardless of its selected rate.
+        z1, _, _ = self.step(f, s0, eps, z0, first_stage=first_stage)
+        zT, ys = jax.lax.scan(body, z1, jnp.arange(1, int(k_max)))
+        if not return_traj:
+            return zT
+        return with_initial(z0, with_initial(z1, ys))
+
     def _solve_controlled(self, f, z0, grid, controller, return_traj,
                           checkpoint):
-        """Masked multi-rate scan over per-sample meshes chosen by the
-        controller. All z0 leaves must share a leading batch axis."""
+        """Probe, pick per-sample mesh lengths, run the masked multi-rate
+        scan, and account per-sample NFE."""
         assert jnp.ndim(grid.eps) == 0, (
             "controller-driven solve derives per-sample eps itself; pass a "
             "scalar-eps grid defining the span")
         s0 = grid.s0
         s1 = s0 + grid.eps * grid.K
         probe = controller.select(self, f, z0, (s0, s1))
-        Ks = probe.K
-        eps = jnp.asarray(s1 - s0) / Ks  # (B,) per-sample step sizes
-
-        def body(z, k):
-            s = s0 + k * eps
-            z_next, _, _ = self.step(f, s, eps, z)
-            active = k < Ks
-            z_next = jax.tree_util.tree_map(
-                lambda a, b: jnp.where(_bcast(active, b), a, b), z_next, z)
-            return z_next, (z_next if return_traj else None)
-
-        if checkpoint:
-            body = jax.checkpoint(body)
-        # step 0 is always active (K_i >= 1) and can reuse the probe's dz0
-        # — f(s0, z0) does not depend on eps, so it is shared by every
-        # sample regardless of its selected rate.
-        z1, _, _ = self.step(f, s0, eps, z0, first_stage=probe.dz0)
-        zT, ys = jax.lax.scan(body, z1, jnp.arange(1, int(controller.k_max)))
+        result = self.solve_multirate(
+            f, z0, (s0, s1), probe.K, int(controller.k_max),
+            first_stage=probe.dz0, return_traj=return_traj,
+            checkpoint=checkpoint)
         reused = 1 if probe.dz0 is not None else 0
         stats = SolveStats(
             nfe=(probe.nfe - reused
-                 + self.tableau.stages * Ks).astype(jnp.int32),
-            K=Ks,
+                 + self.tableau.stages * probe.K).astype(jnp.int32),
+            K=probe.K,
             err_probe=jnp.asarray(probe.err, jnp.float32),
             probe_nfe=int(probe.nfe),
         )
-        if not return_traj:
-            return zT, stats
-        return with_initial(z0, with_initial(z1, ys)), stats
+        return result, stats
+
+    def _solve_sharded(self, f, z0, grid, mesh, batch_axis, *, return_traj,
+                       checkpoint, controller, first_stage):
+        """Data-parallel solve: shard the leading batch axis over
+        ``batch_axis``, depth scan local to each shard. Batch rows share
+        nothing — the runtime-eps kernel looks its per-row coefficients up
+        from prefetched SMEM — so the body emits no collectives and the
+        wrapper is pure bookkeeping (specs in, specs out)."""
+        from jax.experimental.shard_map import shard_map
+        P = jax.sharding.PartitionSpec
+        tmap = jax.tree_util.tree_map
+        bspec = P(batch_axis)
+        eps_batched = jnp.ndim(grid.eps) > 0
+        args = [z0, jnp.asarray(grid.eps)]
+        in_specs = [tmap(lambda _: bspec, z0),
+                    bspec if eps_batched else P()]
+        if first_stage is not None:
+            args.append(first_stage)
+            in_specs.append(tmap(lambda _: bspec, first_stage))
+
+        def body(z0_, eps_, *fs_):
+            out = self.solve(
+                f, z0_, grid._replace(eps=eps_), return_traj=return_traj,
+                checkpoint=checkpoint, controller=controller,
+                first_stage=fs_[0] if fs_ else None)
+            if controller is not None:
+                res, st = out
+                # SolveStats is not a pytree (static probe_nfe member):
+                # ship its arrays through the shard_map boundary and
+                # rebuild outside.
+                return res, (st.nfe, st.K, st.err_probe)
+            return out
+
+        res_spec = P(None, batch_axis) if return_traj else bspec
+        out_specs = (res_spec, (bspec, bspec, bspec)) \
+            if controller is not None else res_spec
+        out = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                        out_specs=out_specs, check_rep=False)(*args)
+        if controller is None:
+            return out
+        res, (nfe, K, err) = out
+        return res, SolveStats(
+            nfe=nfe, K=K, err_probe=err,
+            probe_nfe=int(getattr(controller, "probe_nfe", 0)))
 
 
 def as_integrator(

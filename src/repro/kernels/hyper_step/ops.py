@@ -1,65 +1,103 @@
-"""Public wrappers: arbitrary-shape pytree-leaf updates with padding to the
-(ROWS, 128) tile grid; auto-interpret on CPU.
+"""Public wrappers: arbitrary-shape pytree-leaf updates with batch-major
+padding to the (B, R, 128) tile layout; auto-interpret on CPU.
 
 ``fused_rk_update`` is the general entry point used by the core
 ``Integrator`` engine: one kernel pass for the b-weighted stage combination
-of any explicit tableau plus the optional eps^{p+1} hypersolver correction.
+of any explicit tableau, the optional eps^{p+1} hypersolver correction, and
+the multi-rate ``active`` freeze mask. ``eps`` is a RUNTIME operand — a
+Python float, a traced scalar, or a per-sample ``(B,)`` row all hit the
+same compiled kernel (scalar-prefetch SMEM lookup, no respecialization).
 ``hyper_step`` (psi precombined, single stage) is kept for callers of the
 original final-axpy fusion.
+
+``TRACE_COUNTS`` counts kernel *traces* (not calls): the body of the jitted
+wrapper runs only when jax actually retraces, so serving many distinct eps
+values through one shape must leave the counter untouched after the first
+trace — the compile-count regression tests pin this.
 """
 from __future__ import annotations
 
+import collections
 from functools import partial
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import on_cpu
 from repro.kernels.hyper_step.hyper_step import (
-    LANES, ROWS, hyper_step_2d, rk_update_2d,
+    LANES, MAX_BLOCK_ROWS, SUBLANES, rk_update_batched,
 )
 
-
-def _tile_shape(n: int) -> Tuple[int, int]:
-    cols = LANES
-    rows = -(-n // cols)
-    rows += (-rows) % ROWS
-    return rows, cols
+# name -> number of times the jitted kernel wrapper was TRACED. jit caches
+# by shape/dtype/static-args, so a counter bumped at trace time is exactly
+# the compile count the recompile-churn fix pins down.
+TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
-def _flat(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
-    x = x.reshape(-1)
-    return jnp.pad(x, (0, rows * cols - x.size)).reshape(rows, cols)
+def _row_geometry(per_sample: int) -> int:
+    """Rows R of the (R, 128) plane holding one sample's flattened state:
+    lane-rounded, sublane-aligned, and block-divisible when R exceeds one
+    block."""
+    r = -(-per_sample // LANES)
+    r += (-r) % SUBLANES
+    if r > MAX_BLOCK_ROWS:
+        r += (-r) % MAX_BLOCK_ROWS
+    return r
 
 
-@partial(jax.jit,
-         static_argnames=("eps", "b", "order", "interpret"))
+def _pack_rows(x: jnp.ndarray, B: int, R: int) -> jnp.ndarray:
+    """(B, anything...) -> zero-padded (B, R, 128) batch-major view."""
+    x = x.reshape(B, -1)
+    return jnp.pad(x, ((0, 0), (0, R * LANES - x.shape[1]))) \
+        .reshape(B, R, LANES)
+
+
+@partial(jax.jit, static_argnames=("b", "order", "interpret"))
 def fused_rk_update(z: jnp.ndarray, stages: Sequence[jnp.ndarray],
-                    g: Optional[jnp.ndarray], eps: float,
+                    g: Optional[jnp.ndarray], eps,
                     b: Tuple[float, ...], order: int = 1,
+                    active: Optional[jnp.ndarray] = None,
                     interpret: bool | None = None):
-    """Fused z + eps*sum_j b[j]*stages[j] + eps^{order+1}*g over any-shaped
-    arrays (g may be None for a plain base-solver step)."""
+    """Fused ``where(active, z + eps*sum_j b[j]*stages[j] + eps^{order+1}*g,
+    z)`` over any-shaped arrays.
+
+    ``eps``: Python float, traced scalar, or per-sample ``(B,)`` row (then
+    every array must carry the leading batch axis B). ``g`` may be None for
+    a plain base-solver step; ``active`` is an optional ``(B,)`` bool/int
+    row (None = all rows step). eps/active are traced operands: one trace
+    serves every step-size pattern of a given shape.
+    """
+    TRACE_COUNTS["fused_rk_update"] += 1
     interpret = on_cpu() if interpret is None else interpret
-    shape, n = z.shape, z.size
-    rows, cols = _tile_shape(n)
-    out = rk_update_2d(
-        _flat(z, rows, cols),
-        tuple(_flat(r, rows, cols) for r in stages),
-        _flat(g, rows, cols) if g is not None else None,
-        eps, tuple(b), order, interpret=interpret)
-    return out.reshape(-1)[:n].reshape(shape)
+    shape = z.shape
+    eps = jnp.asarray(eps, jnp.float32)
+    batched = eps.ndim == 1 or active is not None
+    if batched:
+        B = eps.shape[0] if eps.ndim == 1 else shape[0]
+        assert shape[0] == B, (
+            f"per-sample eps/active of length {B} need a matching leading "
+            f"batch axis, got leaf shape {shape}")
+        per = int(np.prod(shape[1:], dtype=np.int64)) if len(shape) > 1 else 1
+    else:
+        B, per = 1, z.size
+    eps_row = jnp.broadcast_to(eps.reshape(-1), (B,))
+    epsp_row = eps_row ** (order + 1)
+    act_row = jnp.ones((B,), jnp.int32) if active is None \
+        else jnp.asarray(active).astype(jnp.int32).reshape(B)
+    R = _row_geometry(per)
+    out = rk_update_batched(
+        _pack_rows(z, B, R),
+        tuple(_pack_rows(r, B, R) for r in stages),
+        _pack_rows(g, B, R) if g is not None else None,
+        eps_row, epsp_row, act_row, tuple(b), interpret=interpret)
+    return out.reshape(B, -1)[:, :per].reshape(shape)
 
 
-@partial(jax.jit, static_argnames=("eps", "order", "interpret"))
 def hyper_step(z: jnp.ndarray, psi: jnp.ndarray, g: jnp.ndarray,
-               eps: float, order: int = 1, interpret: bool | None = None):
-    """Fused z + eps*psi + eps^{order+1}*g over any-shaped arrays."""
-    interpret = on_cpu() if interpret is None else interpret
-    shape, n = z.shape, z.size
-    rows, cols = _tile_shape(n)
-    out = hyper_step_2d(_flat(z, rows, cols), _flat(psi, rows, cols),
-                        _flat(g, rows, cols), eps, order,
-                        interpret=interpret)
-    return out.reshape(-1)[:n].reshape(shape)
+               eps, order: int = 1, interpret: bool | None = None):
+    """Fused z + eps*psi + eps^{order+1}*g over any-shaped arrays — the
+    single-stage special case b = (1.0,) of ``fused_rk_update``."""
+    return fused_rk_update(z, (psi,), g, eps, (1.0,), order,
+                           interpret=interpret)

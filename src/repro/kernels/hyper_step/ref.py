@@ -2,18 +2,32 @@
 import jax.numpy as jnp
 
 
-def hyper_step_ref(z, psi, g, eps: float, order: int):
+def _coef(a, leaf):
+    """Right-pad a scalar-or-(B,) coefficient to broadcast against leaf."""
+    a = jnp.asarray(a, jnp.float32)
+    if a.ndim:
+        a = a.reshape(a.shape + (1,) * (leaf.ndim - a.ndim))
+    return a
+
+
+def hyper_step_ref(z, psi, g, eps, order: int):
     z32 = z.astype(jnp.float32)
-    out = z32 + eps * psi.astype(jnp.float32) \
-        + (eps ** (order + 1)) * g.astype(jnp.float32)
+    out = z32 + _coef(eps, z) * psi.astype(jnp.float32) \
+        + (_coef(eps, z) ** (order + 1)) * g.astype(jnp.float32)
     return out.astype(z.dtype)
 
 
-def fused_rk_update_ref(z, stages, g, eps: float, b, order: int):
-    out = z.astype(jnp.float32)
+def fused_rk_update_ref(z, stages, g, eps, b, order: int, active=None):
+    """Runtime-eps oracle: eps scalar or per-sample (B,) row; ``active`` an
+    optional (B,) mask row freezing inactive samples at z."""
+    z32 = z.astype(jnp.float32)
+    out = z32
+    e = _coef(eps, z)
     for bj, r in zip(b, stages):
         if bj != 0.0:
-            out = out + (eps * bj) * r.astype(jnp.float32)
+            out = out + (e * bj) * r.astype(jnp.float32)
     if g is not None:
-        out = out + (eps ** (order + 1)) * g.astype(jnp.float32)
+        out = out + (e ** (order + 1)) * g.astype(jnp.float32)
+    if active is not None:
+        out = jnp.where(_coef(active, z) != 0, out, z32)
     return out.astype(z.dtype)

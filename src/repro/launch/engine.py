@@ -8,11 +8,16 @@ CLI over it). The loop the paper's pareto pitch implies, end to end:
            (core/controllers.py picks a per-sample mesh length K; the
            probe's dz = f(s0, z0) is kept and reused as stage 0 of the
            solve, so probing costs one fewer NFE than it evaluates)
-        -> bucket assignment: snap K to the configured serving buckets
-        -> pack same-bucket (and same-shape) requests into batches
-        -> drive each bucket through a scalar-eps K-step solve
-           (scalar eps keeps the fused Pallas kernel path eligible;
-           ``Integrator.fused_available`` is the structured flag)
+        -> bucket snap: clamp K to the configured serving buckets — a
+           PACKING POLICY (bounds masked-step waste and the number of
+           (shape, k_max) jit cells), NOT a kernel-eligibility rule
+        -> pack same-shape requests into batches, sorted by K so batches
+           stay as K-pure as the traffic allows (leftovers mix freely)
+        -> drive each batch through ONE masked multi-rate solve
+           (``Integrator.solve_multirate``): per-sample eps and the
+           mesh-length row are TRACED operands of the runtime-eps fused
+           kernel, so a mixed-K batch runs fused end to end and a given
+           (shape, k_max) cell never recompiles across bucket mixes
         -> Completed{outputs, K, nfe, err_probe} per request
 
 Hot (easy) requests integrate in 2-4 NFEs; hard ones get 8-16. Per-request
@@ -42,7 +47,6 @@ from repro.core.controllers import (
     EmbeddedErrorController, FixedController, HypersolverResidualController,
 )
 from repro.core.integrate import Integrator
-from repro.core.solvers import FixedGrid
 from repro.models.cdepth import lm_g_init, lm_integrator
 from repro.models.lm import init_lm_cache, lm_decode_step, lm_prefill
 
@@ -147,7 +151,9 @@ def snap_to_buckets(Ks: np.ndarray, buckets: Sequence[int]) -> np.ndarray:
     """Smallest configured bucket >= K (largest bucket when K overshoots).
 
     Snapping up, never down: a request is only ever integrated at least as
-    finely as its controller asked for."""
+    finely as its controller asked for. Since the runtime-eps kernel fuses
+    any K mix, snapping exists purely to bound masked-step waste and the
+    set of (shape, k_max) jit cells — not to make batches kernel-eligible."""
     buckets = np.asarray(sorted(buckets), np.int32)
     idx = np.searchsorted(buckets, np.asarray(Ks, np.int32), side="left")
     return buckets[np.minimum(idx, len(buckets) - 1)]
@@ -163,7 +169,8 @@ class EngineConfig:
     solver: str = "euler"         # base tableau; "hyper_*" pairs it with g
     controller: str = "auto"      # auto | residual | embedded | fixed
     fixed_K: int = 0              # mesh length when controller == "fixed"
-    fused: bool = False           # route bucket solves through the kernel
+    fused: bool = False           # route batch solves through the kernel
+    #                               (runtime-eps: any K mix fuses)
 
     def __post_init__(self):
         assert self.buckets == tuple(sorted(self.buckets)), self.buckets
@@ -235,9 +242,11 @@ class MultiRateEngine:
         raw = getattr(self.controller, "probe_nfe", 0)
         return max(raw - 1, 0) if raw else 0
 
-    def fused_in_play(self, K: int) -> bool:
-        span = self.model.span[1] - self.model.span[0]
-        return self.model.integ.fused_available(span / K)
+    def fused_in_play(self, z0=None) -> bool:
+        """Kernel eligibility is K-independent now (runtime-eps kernel):
+        only the integrator's fused flag and the state dtypes matter —
+        pass the embedded state (or its eval_shape) to vet the latter."""
+        return self.model.integ.fused_available(z=z0)
 
     def nfe_of(self, K: int) -> int:
         """Per-request NFE for a bucket-K solve, probe included (the solve
@@ -274,22 +283,23 @@ class MultiRateEngine:
             self._probe_fns[shape] = probe
         return self._probe_fns[shape]
 
-    def _solve_fn(self, shape, K: int):
-        key = (shape, K)
+    def _solve_fn(self, shape, k_max: int):
+        key = (shape, k_max)
         if key not in self._solve_fns:
             m = self.model
-            s0, s1 = m.span
-            grid = FixedGrid.over(s0, s1, K)
 
             @jax.jit
-            def solve(x, z0, dz0):
+            def solve(x, z0, dz0, Ks):
                 # z0/dz0 come from the probe cell (embed + first stage are
                 # not recomputed); the fixed path passes z0=None and
-                # embeds here.
+                # embeds here. Ks is a TRACED (B,) row: sample i runs its
+                # own eps_i = span / Ks[i] mesh and freezes after Ks[i]
+                # steps, so one (shape, k_max) compilation serves every
+                # bucket mix and every step size the controller emits.
                 if z0 is None:
                     z0 = m.embed(x)
-                zT = m.integ.solve(m.field_of(x), z0, grid,
-                                   return_traj=False, first_stage=dz0)
+                zT = m.integ.solve_multirate(
+                    m.field_of(x), z0, m.span, Ks, k_max, first_stage=dz0)
                 return m.readout(x, zT)
 
             self._solve_fns[key] = solve
@@ -324,24 +334,32 @@ class MultiRateEngine:
                 errs = np.asarray(err_dev)
             Ks = snap_to_buckets(Ks_raw, self.ecfg.buckets)
 
-            # pack same-bucket requests into batches of <= max_batch
+            # mixed-K packing: sort by K so batches stay as K-pure as the
+            # traffic allows (bucket purity bounds masked-step waste), then
+            # fill batches of <= max_batch straight through — a batch mixing
+            # buckets still solves fused, scanning to its largest K.
             take = lambda tree, sel: None if tree is None else \
                 jax.tree_util.tree_map(lambda l: l[sel], tree)
-            for K in np.unique(Ks):
-                idx = np.flatnonzero(Ks == K)
-                for lo in range(0, len(idx), self.ecfg.max_batch):
-                    sel = idx[lo:lo + self.ecfg.max_batch]
-                    outputs = np.asarray(
-                        self._solve_fn(shape, int(K))(
-                            jnp.asarray(xs[sel]), take(z0, sel),
-                            take(dz0, sel)))
-                    nfe = self.nfe_of(int(K))
-                    fused = self.fused_in_play(int(K))
-                    for j, i in enumerate(sel):
-                        done.append(Completed(
-                            uid=reqs[i].uid, outputs=outputs[j], K=int(K),
-                            nfe=nfe, err_probe=float(errs[i]),
-                            fused_kernel=fused))
+            # vet the actual state dtypes so Completed.fused_kernel is
+            # honest; the fixed path has no probe z0, so eval_shape the
+            # embedding (dtypes only, no compute)
+            z_like = z0 if z0 is not None else jax.eval_shape(
+                self.model.embed,
+                jax.ShapeDtypeStruct(xs.shape, xs.dtype))
+            fused = self.fused_in_play(z_like)
+            order = np.argsort(Ks, kind="stable")
+            for lo in range(0, len(order), self.ecfg.max_batch):
+                sel = order[lo:lo + self.ecfg.max_batch]
+                k_max = int(Ks[sel].max())
+                outputs = np.asarray(
+                    self._solve_fn(shape, k_max)(
+                        jnp.asarray(xs[sel]), take(z0, sel),
+                        take(dz0, sel), jnp.asarray(Ks[sel], jnp.int32)))
+                for j, i in enumerate(sel):
+                    done.append(Completed(
+                        uid=reqs[i].uid, outputs=outputs[j], K=int(Ks[i]),
+                        nfe=self.nfe_of(int(Ks[i])),
+                        err_probe=float(errs[i]), fused_kernel=fused))
         return done
 
     def run(self, xs) -> List[Completed]:

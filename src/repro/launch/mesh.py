@@ -34,3 +34,29 @@ def mesh_context(mesh):
     where it exists (jax >= 0.5), else the Mesh's own context manager."""
     set_mesh = getattr(jax, "set_mesh", None)
     return set_mesh(mesh) if set_mesh is not None else mesh
+
+
+def sharded_solve(integ, f, z0, grid, *, mesh, **solve_kwargs):
+    """Run ``Integrator.solve`` data-parallel over ``mesh``: the leading
+    batch axis of the state (and of a batched ``grid.eps``) shards over the
+    mesh's data axis ('data', the 'pod' outer axis being gradient-only),
+    the depth scan stays local to each shard — the runtime-eps fused kernel
+    looks its per-row step size up from prefetched SMEM, so batch rows
+    share nothing and the solve emits no collectives.
+
+    Thin policy layer over ``integ.solve(mesh=...)``: picks the batch axis
+    from the mesh and checks divisibility up front (shard_map's own error
+    is about block shapes, not requests)."""
+    import jax.numpy as jnp
+    axis = "data"
+    B = jax.tree_util.tree_leaves(z0)[0].shape[0]
+    n = mesh.shape[axis]
+    if B % n:
+        raise ValueError(
+            f"batch {B} does not divide the '{axis}' mesh axis ({n}); pad "
+            "or re-bucket the request batch (launch/engine.py max_batch)")
+    if jnp.ndim(grid.eps) not in (0, 1):
+        raise ValueError(f"grid.eps must be scalar or (B,), got "
+                         f"ndim={jnp.ndim(grid.eps)}")
+    return integ.solve(f, z0, grid, mesh=mesh, batch_axis=axis,
+                       **solve_kwargs)

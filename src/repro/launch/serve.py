@@ -9,11 +9,13 @@ module only parses flags and reports.
 solver=discrete (default): standard full-depth cached decode.
 solver=euler|heun|...|hyper_* : continuous-depth scoring. Fixed-K serving
 with --nfe K, or error-controlled multi-rate serving with --multirate: a
-cheap per-request probe assigns each request an eps bucket and same-bucket
-requests are packed into batches (see launch/engine.py). ``hyper_*``
-solvers apply a trained hypersolver correction loaded via --g-ckpt
-(HyperEuler etc.). Reports per-request NFE and argmax agreement vs the
-full-depth forward.
+cheap per-request probe assigns each request a mesh-length bucket and
+same-shape requests pack into mixed-K batches solved in one masked
+multi-rate pass — with --fused the whole per-step update (per-sample eps,
+correction, freeze mask) is a single runtime-eps Pallas kernel pass, for
+every bucket mix (see launch/engine.py). ``hyper_*`` solvers apply a
+trained hypersolver correction loaded via --g-ckpt (HyperEuler etc.).
+Reports per-request NFE and argmax agreement vs the full-depth forward.
 """
 from __future__ import annotations
 
@@ -57,7 +59,8 @@ def main():
                     help="comma-separated serving K buckets for --multirate")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--fused", action="store_true",
-                    help="route bucket solves through the Pallas kernel")
+                    help="route batch solves through the runtime-eps "
+                         "Pallas kernel (any bucket mix fuses)")
     args = ap.parse_args()
 
     cfg = get(args.arch)

@@ -39,10 +39,19 @@ def _group_apply(params, cfg: ArchConfig, gp, h):
 
 
 def depth_field(params, cfg: ArchConfig):
-    """VectorField f(s, h) over the residual stream (full sequence)."""
+    """VectorField f(s, h) over the residual stream (full sequence).
+
+    ``s`` may be a scalar or a per-sample ``(B,)`` row (multi-rate solves,
+    core/integrate.py ``solve_multirate``): group selection is by depth, so
+    per-sample depths gather per-sample group weights via a vmap over the
+    batch axis (each sample keeps its singleton batch dim so the block
+    stack sees its native (B, S, d) rank)."""
     _, n_groups, _ = group_layout(cfg)
 
     def f(s, h):
+        if jnp.ndim(s):
+            return jax.vmap(lambda si, hi: f(si, hi[None])[0])(
+                jnp.reshape(s, (-1,)), h)
         idx = jnp.clip(jnp.floor(s * n_groups).astype(jnp.int32), 0,
                        n_groups - 1)
         gp = jax.tree_util.tree_map(lambda p: p[idx], params["groups"])

@@ -27,3 +27,15 @@ def _x64_scope(request):
     jax.config.update("jax_enable_x64", need)
     yield
     jax.config.update("jax_enable_x64", prev)
+
+
+@pytest.fixture(autouse=True)
+def _rearm_fused_fallback_warning():
+    """The fused-fallback RuntimeWarning is a one-time latch; re-arm it per
+    test so warning assertions are not test-order-dependent (the latch used
+    to be a process-global bool that whichever test tripped first would
+    consume for the whole session)."""
+    from repro.core.integrate import reset_fused_fallback_warning
+
+    reset_fused_fallback_warning()
+    yield

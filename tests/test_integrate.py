@@ -202,11 +202,12 @@ def test_fused_solve_matches_unfused(base, dtype):
                                    np.asarray(b, np.float32), **tol)
 
 
-def test_fused_falls_back_on_batched_eps():
-    """Batched eps cannot be baked into the kernel: the engine takes the
-    jnp path (correct results), surfaces a one-time RuntimeWarning, and
-    exposes the structured ``fused_available`` flag for serving configs."""
-    from repro.core import integrate as integrate_mod
+def test_fused_handles_batched_eps_in_kernel():
+    """Per-sample (B,) eps is a RUNTIME kernel operand now: the fused path
+    stays on the Pallas kernel (no fallback warning), matches the jnp
+    leaf-algebra path, and ``fused_available`` reports the kernel in play
+    for every step-size pattern."""
+    import warnings
 
     f = lambda s, z: -z
     z0 = jnp.ones((2, 5), jnp.float32)
@@ -214,12 +215,40 @@ def test_fused_falls_back_on_batched_eps():
     a = Integrator(RK4).solve(f, z0, FixedGrid(0.0, eps, 4),
                               return_traj=False)
     fused = Integrator(RK4, fused=True)
-    integrate_mod._fused_fallback_warned = False
-    with pytest.warns(RuntimeWarning, match="falling back"):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
         b = fused.solve(f, z0, FixedGrid(0.0, eps, 4), return_traj=False)
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
-    assert not fused.fused_available(eps)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                               atol=1e-6)
+    assert fused.fused_available(eps)
     assert fused.fused_available(0.1)
+    assert fused.fused_available(eps, z=z0)
+
+
+def test_fused_falls_back_on_odd_dtype_resettably():
+    """The one surviving fallback: state dtypes the kernel does not store
+    (complex here). The warning is one-time but RESETTABLE, so it is not
+    test-order-dependent (tests/conftest.py re-arms it per test)."""
+    from repro.core.integrate import reset_fused_fallback_warning
+
+    f = lambda s, z: -z
+    z0 = jnp.ones((2, 3), jnp.complex64)
+    grid = FixedGrid.over(0.0, 1.0, 2)
+    fused = Integrator(HEUN, fused=True)
+    a = Integrator(HEUN).solve(f, z0, grid, return_traj=False)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        b = fused.solve(f, z0, grid, return_traj=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    assert not fused.fused_available(z=z0)
+    # latch: silent on the next solve, re-armed after an explicit reset
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        fused.solve(f, z0, grid, return_traj=False)
+    reset_fused_fallback_warning()
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        fused.solve(f, z0, grid, return_traj=False)
 
 
 # ------------------------------------------------------------ coercion ----

@@ -61,6 +61,48 @@ def test_fused_rk_update_sweep(shape, dtype, tab_name, eps, with_g):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("shape", [(4,), (4, 37), (4, 3, 57), (8, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("tab_name", ["euler", "heun", "rk4"])
+@pytest.mark.parametrize("with_g", [True, False])
+def test_fused_rk_update_per_sample_eps_sweep(shape, dtype, tab_name,
+                                              with_g):
+    """Runtime-eps path: per-sample (B,) eps row + active freeze mask ride
+    the scalar-prefetch SMEM operands — one masked multi-rate update in a
+    single kernel pass, vs the jnp oracle."""
+    from repro.core import get_tableau
+    tab = get_tableau(tab_name)
+    B = shape[0]
+    ks = jax.random.split(jax.random.PRNGKey(7), tab.stages + 2)
+    z = jax.random.normal(ks[0], shape, dtype)
+    stages = tuple(jax.random.normal(k, shape, dtype)
+                   for k in ks[1:1 + tab.stages])
+    g = jax.random.normal(ks[-1], shape, dtype) if with_g else None
+    eps = jnp.linspace(0.05, 0.5, B)
+    active = (jnp.arange(B) % 2).astype(jnp.int32)
+    out = fused_rk_update(z, stages, g, eps, tab.b, tab.order,
+                          active=active, interpret=True)
+    ref = fused_rk_update_ref(z, stages, g, eps, tab.b, tab.order,
+                              active=active)
+    assert out.dtype == z.dtype and out.shape == z.shape
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+    # frozen rows are bitwise the input state
+    np.testing.assert_array_equal(
+        np.asarray(out, np.float32)[::2], np.asarray(z, np.float32)[::2])
+
+
+def test_fused_rk_update_traced_scalar_eps():
+    """A traced 0-d eps (the controller's span/K) takes the same kernel —
+    no concretization, no fallback."""
+    z = jnp.ones((3, 5))
+    r = jnp.full((3, 5), 2.0)
+
+    out = jax.jit(lambda e: fused_rk_update(z, (r,), None, e, (1.0,), 1,
+                                            interpret=True))(jnp.asarray(0.25))
+    np.testing.assert_allclose(np.asarray(out), 1.5)
+
+
 # ------------------------------------------------------ flash_attention ----
 
 @pytest.mark.parametrize("B,S,H,KV,hd", [
