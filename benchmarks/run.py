@@ -1,21 +1,31 @@
 """Benchmark harness — one module per paper table/figure (+ beyond-paper).
 
     PYTHONPATH=src python -m benchmarks.run [--budget small|full] [--only X]
+    PYTHONPATH=src python -m benchmarks.run --check
 
 Prints one CSV-ish line per result row: ``name,us_per_call,derived``.
 Figure mapping: bench_pareto (Fig 3/9), bench_wallclock (Fig 4),
 bench_alpha_family (Fig 5-6), bench_cnf (Fig 1/7), bench_trajectory
 (Fig 8), bench_overhead (Fig 2 + Sec 6), bench_kernels (kernel layer),
-bench_cdepth_lm (beyond paper: the technique on LM serving).
+bench_cdepth_lm (beyond paper: the technique on LM serving),
+bench_scheduler (in-flight continuous batching vs the drain engine).
 
 Perf trajectory files at the repo root (uploaded as CI artifacts on every
 tier-1 run): BENCH_kernels.json (bench_kernels — fused hyper_step traffic
-model + timings per tableau) and BENCH_serve.json (bench_serve — the
-multi-rate NFE/agreement pareto).
+model + timings per tableau), BENCH_serve.json (bench_serve — the
+multi-rate NFE/agreement pareto), and BENCH_scheduler.json
+(bench_scheduler — serving-latency head-to-head, p50/p99/waste).
+
+``--check`` is the BENCH-schema smoke gate (tier-1 CI): it validates
+every committed BENCH_*.json — parseable, non-empty list of rows, every
+row tagged with its bench — plus per-file invariants (the scheduler
+verdict row must exist; kernels rows must carry the traffic model), so a
+malformed perf-trajectory file fails fast instead of at analysis time.
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import time
@@ -31,14 +41,80 @@ MODULES = [
     "bench_kernels",
     "bench_cdepth_lm",
     "bench_serve",
+    "bench_scheduler",
 ]
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+# BENCH_*.json contract: every tracked perf-trajectory file must exist at
+# the repo root, and each file's rows must contain the listed keys in at
+# least one row (the row-level invariant the analysis scripts key on).
+BENCH_REQUIRED = {
+    "BENCH_kernels.json": ("memory_passes_fused", "hbm_bytes_fused"),
+    "BENCH_serve.json": ("mean_nfe", "mode"),
+    "BENCH_scheduler.json": ("p99_latency", "waste_steps"),
+}
+
+
+def check_bench_files(root: str = REPO_ROOT) -> list:
+    """Validate BENCH_*.json at the repo root; returns a list of error
+    strings (empty = all good). Shared by ``--check`` and the tier-1
+    test (tests/test_scheduler.py)."""
+    errors = []
+    found = {os.path.basename(p) for p in
+             glob.glob(os.path.join(root, "BENCH_*.json"))}
+    for name in BENCH_REQUIRED:
+        if name not in found:
+            errors.append(f"{name}: missing from repo root")
+    for name in sorted(found):
+        path = os.path.join(root, name)
+        try:
+            with open(path) as fh:
+                rows = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"{name}: unreadable/malformed JSON ({e})")
+            continue
+        if not isinstance(rows, list) or not rows:
+            errors.append(f"{name}: expected a non-empty list of rows")
+            continue
+        bad = [i for i, r in enumerate(rows)
+               if not isinstance(r, dict) or not isinstance(
+                   r.get("bench"), str)]
+        if bad:
+            errors.append(f"{name}: rows {bad[:5]} lack a 'bench' tag")
+        for key in BENCH_REQUIRED.get(name, ()):
+            if not any(isinstance(r, dict) and key in r for r in rows):
+                errors.append(f"{name}: no row carries required key "
+                              f"{key!r}")
+        if name == "BENCH_scheduler.json":
+            verdicts = [r for r in rows if isinstance(r, dict)
+                        and r.get("mode") == "verdict"]
+            if not verdicts:
+                errors.append(f"{name}: missing the verdict row "
+                              "(inflight_wins_p99 scoreboard)")
+            elif "inflight_wins_p99" not in verdicts[0]:
+                errors.append(f"{name}: verdict row lacks "
+                              "'inflight_wins_p99'")
+    return errors
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", default="small", choices=["small", "full"])
     ap.add_argument("--only", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="validate committed BENCH_*.json schemas and exit "
+                         "(the tier-1 fail-fast gate; runs no benchmarks)")
     args = ap.parse_args()
+
+    if args.check:
+        errors = check_bench_files()
+        for e in errors:
+            print(f"# BENCH-CHECK FAIL: {e}")
+        if errors:
+            raise SystemExit(1)
+        print(f"# BENCH-CHECK OK: {sorted(BENCH_REQUIRED)}")
+        return
 
     out_dir = os.path.join(os.path.dirname(__file__), "..", "artifacts")
     os.makedirs(out_dir, exist_ok=True)

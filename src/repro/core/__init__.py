@@ -4,8 +4,8 @@ from repro.core.tableaus import (  # noqa: F401
     alpha_family, get as get_tableau,
 )
 from repro.core.integrate import (  # noqa: F401
-    Integrator, SolveStats, as_integrator, depth_like, rk_stages,
-    with_initial,
+    Integrator, SegmentCarry, SolveStats, as_integrator, depth_like,
+    make_segment_carry, rk_stages, with_initial,
 )
 from repro.core.solvers import (  # noqa: F401
     FixedGrid, odeint_fixed, rk_psi, local_error, tree_axpy, tree_lincomb,

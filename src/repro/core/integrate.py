@@ -64,13 +64,16 @@ Controller/engine architecture (error-controlled multi-rate serving)::
     launch/engine.py      MultiRateEngine: probe -> bucket snap (packing
           |                 policy only) -> mixed-K batch packing ->
           |                 per-sample-eps fused solves
-    launch/serve.py       CLI only (arch/solver/--g-ckpt flags)
+    launch/scheduler.py   InflightScheduler: slot-pool continuous batching
+          |                 over ``solve_segment`` (resumable SegmentCarry,
+          |                 admit/retire between segments)
+    launch/serve.py       CLI only (arch/solver/--g-ckpt/--inflight flags)
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Callable, Optional, Sequence, Union
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -171,38 +174,78 @@ def _fusable(z: Pytree) -> bool:
                for l in jax.tree_util.tree_leaves(z))
 
 
-class _FusedFallback:
-    """Resettable one-time-warning latch for the surviving fused fallback.
+class OneTimeWarning:
+    """Resettable one-time RuntimeWarning latch.
 
-    Was a process-global module bool, which made warning assertions
-    test-order-dependent (whichever test tripped the fallback first
-    swallowed everyone else's warning). Tests reset it around each test via
-    the autouse fixture in tests/conftest.py; serving configs that must
-    *know* rather than be warned use ``Integrator.fused_available``."""
+    A process-global module bool made warning assertions test-order-
+    dependent (whichever test tripped a warning first swallowed everyone
+    else's). Each warn-once site holds an instance and exposes a reset
+    function that the autouse fixture in tests/conftest.py re-arms per
+    test. Instances: the fused-fallback warning below, and the bucket-
+    overflow snap warning in launch/engine.py."""
 
     __slots__ = ("warned",)
 
     def __init__(self) -> None:
         self.warned = False
 
-    def warn(self, reason: str) -> None:
+    def warn(self, message: str, stacklevel: int = 4) -> None:
         if not self.warned:
-            warnings.warn(
-                f"Integrator(fused=True): {reason}; falling back to the "
-                "leaf-wise jnp update path for this solve.",
-                RuntimeWarning, stacklevel=4)
+            warnings.warn(message, RuntimeWarning, stacklevel=stacklevel)
             self.warned = True
 
     def reset(self) -> None:
         self.warned = False
 
 
-_fused_fallback = _FusedFallback()
+_fused_fallback = OneTimeWarning()
 
 
 def reset_fused_fallback_warning() -> None:
     """Re-arm the one-time fused-fallback RuntimeWarning (test isolation)."""
     _fused_fallback.reset()
+
+
+class SegmentCarry(NamedTuple):
+    """Resumable per-slot state of a segmented multi-rate solve.
+
+    One row per *slot* (leading axis B on every array/leaf). A slot is a
+    request mid-integration: ``z`` its current state, ``k`` the next depth
+    step it will take, ``Ks`` its target mesh length, ``eps`` its step
+    size. ``first_stage`` optionally carries the admission probe's
+    ``dz0 = f(s0, z0)`` rows, substituted as stage 0 exactly while a slot
+    is still at ``k == 0`` — the same probe reuse ``solve_multirate`` gets
+    via its ``first_stage=`` argument, so segment-wise serving loses no
+    NFE accounting honesty.
+
+    The carry is a plain pytree: it jits, donates, and scatters (slot
+    refill is a leaf-wise ``.at[idx].set``). A retired/empty slot is
+    encoded as ``Ks == 0``: ``k < Ks`` is then always False, so the fused
+    freeze mask keeps its rows inert at zero bookkeeping cost —
+    occupancy is data, never a shape, which is what keeps one
+    ``(shape, seg)`` compilation serving every admission pattern.
+    """
+
+    z: Pytree                       # per-slot state, leading slot axis B
+    k: jnp.ndarray                  # (B,) int32 — next depth-step index
+    Ks: jnp.ndarray                 # (B,) int32 — target mesh lengths (0 = empty)
+    eps: jnp.ndarray                # (B,) — per-slot step sizes
+    first_stage: Optional[Pytree]   # probe dz0 rows, used only at k == 0
+
+
+def make_segment_carry(z0: Pytree, Ks, span, *,
+                       first_stage: Optional[Pytree] = None) -> SegmentCarry:
+    """Fresh carry for a slot batch: every slot at ``k = 0`` with
+    ``eps_i = (s1 - s0) / Ks[i]`` — the identical arithmetic of
+    ``solve_multirate``, so a segment-driven solve is step-for-step the
+    same mesh. ``Ks[i] == 0`` marks an empty slot (eps set to 1.0 so no
+    inf/NaN rides along in the frozen rows)."""
+    s0, s1 = span
+    Ks = jnp.asarray(Ks, jnp.int32)
+    eps = jnp.asarray(s1 - s0) / jnp.maximum(Ks, 1)
+    eps = jnp.where(Ks > 0, eps, jnp.ones_like(eps))
+    return SegmentCarry(z=z0, k=jnp.zeros_like(Ks), Ks=Ks, eps=eps,
+                        first_stage=first_stage)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -298,8 +341,9 @@ class Integrator:
         use_kernel = self.fused and _fusable(z)
         if self.fused and not use_kernel:
             _fused_fallback.warn(
-                "state dtypes outside the kernel set "
-                f"{sorted(_FUSED_DTYPES)}")
+                "Integrator(fused=True): state dtypes outside the kernel "
+                f"set {sorted(_FUSED_DTYPES)}; falling back to the "
+                "leaf-wise jnp update path for this solve.")
         if use_kernel:
             from repro.kernels.hyper_step.ops import fused_rk_update
             # zero-b stages never reach the kernel: each operand costs a
@@ -451,6 +495,59 @@ class Integrator:
         if not return_traj:
             return zT
         return with_initial(z0, with_initial(z1, ys))
+
+    def solve_segment(self, f, carry: SegmentCarry, seg: int, *,
+                      s0=0.0):
+        """Advance every slot of ``carry`` by ``seg`` depth steps and
+        return ``(carry', finished)`` — the resumable core of in-flight
+        continuous batching (launch/scheduler.py).
+
+        Each slot walks its own mesh: slot i steps at ``eps_i`` from
+        ``s = s0 + k_i * eps_i`` and freezes (state AND counter) once
+        ``k_i >= Ks_i`` — the same masked update ``solve_multirate``
+        scans, so driving a batch to completion segment-by-segment is
+        step-for-step identical to one ``solve_multirate`` call with the
+        same ``Ks`` row. The payoff is resumability: between segments a
+        caller may retire finished slots and scatter fresh requests into
+        them (a new z row, ``k = 0``, a new ``Ks``/``eps``), and because
+        occupancy/refill are carried as data, ONE ``(shape, seg)``
+        compilation — one kernel trace on the fused path — serves every
+        admission pattern with zero recompiles.
+
+        ``finished`` is ``k >= Ks`` after the segment: True for slots
+        that completed their mesh during (or before) this segment,
+        including empty ``Ks == 0`` slots — callers keep their own
+        occupancy mask to tell a retired slot from a fresh completion.
+
+        ``seg`` is a static Python int (the scan length, part of the jit
+        cell); ``s0`` is the shared span origin. A slot admitted with a
+        probe ``first_stage`` row consumes it on its ``k == 0`` step
+        only; the blend costs no extra vector-field evaluation (the
+        batch-wide ``f`` call is the one ``step`` would make anyway)."""
+        z, k, Ks, eps, fs = carry
+        k = jnp.asarray(k, jnp.int32)
+        Ks = jnp.asarray(Ks, jnp.int32)
+
+        def body(zk, _):
+            zc, kc = zk
+            active = kc < Ks
+            s = s0 + kc * eps
+            if fs is None:
+                dz0 = None
+            else:
+                # fresh slots (k == 0) substitute their probe's dz row for
+                # stage 0 — identical values to f(s0, z) there, reused so
+                # the probe's accounting (one eval saved) stays honest.
+                dz = f(s, zc)
+                fresh = kc == 0
+                dz0 = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(_bcast(fresh, b), a, b), fs, dz)
+            z_next, _, _ = self.step(f, s, eps, zc, first_stage=dz0,
+                                     active=active)
+            return (z_next, jnp.where(active, kc + 1, kc)), None
+
+        (z, k), _ = jax.lax.scan(body, (z, k), None, length=int(seg))
+        return SegmentCarry(z, k, Ks, eps, fs), k >= Ks
 
     def _solve_controlled(self, f, z0, grid, controller, return_traj,
                           checkpoint):

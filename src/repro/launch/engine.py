@@ -27,9 +27,16 @@ reported pareto points are honest.
 The engine is generic over a ``DepthModel`` adapter (embed -> field ->
 readout); ``lm_depth_model`` serves the continuous-depth LM
 (models/cdepth.py) and ``node_depth_model`` any ``NeuralODE`` (the paper's
-image classifiers). This is the seam for the roadmap's async-serving item
-(continuous batching = calling ``step()`` as requests arrive) and sharded
-integration (shard the bucket batch axis; the depth scan stays local).
+image classifiers).
+
+This drain loop is the BATCH-JOB serving shape: ``step()`` probes, packs,
+and solves everything queued to completion before admitting new work. The
+streaming shape — depth-continuous batching, where finished slots retire
+and refill *between segments* of the solve — lives in
+``launch/scheduler.py`` (InflightScheduler over
+``Integrator.solve_segment``), reusing this module's controller policy
+(``make_controller``), bucket snap, and ``DepthModel`` adapters; identical
+arrival traces replay against both via ``launch/workload.py``.
 """
 from __future__ import annotations
 
@@ -46,7 +53,7 @@ from repro.configs import ArchConfig
 from repro.core.controllers import (
     EmbeddedErrorController, FixedController, HypersolverResidualController,
 )
-from repro.core.integrate import Integrator
+from repro.core.integrate import Integrator, OneTimeWarning
 from repro.models.cdepth import lm_g_init, lm_integrator
 from repro.models.lm import init_lm_cache, lm_decode_step, lm_prefill
 
@@ -147,15 +154,37 @@ def node_depth_model(node, params, solver: str = "euler",
 
 # ------------------------------------------------------------ bucket policy ----
 
-def snap_to_buckets(Ks: np.ndarray, buckets: Sequence[int]) -> np.ndarray:
-    """Smallest configured bucket >= K (largest bucket when K overshoots).
+# bucket-overflow snap latch: one shared OneTimeWarning mechanism with
+# the fused-fallback warning (tests re-arm both per test via conftest)
+_snap_overflow = OneTimeWarning()
 
-    Snapping up, never down: a request is only ever integrated at least as
-    finely as its controller asked for. Since the runtime-eps kernel fuses
-    any K mix, snapping exists purely to bound masked-step waste and the
-    set of (shape, k_max) jit cells — not to make batches kernel-eligible."""
+
+def reset_snap_overflow_warning() -> None:
+    """Re-arm the one-time bucket-overflow RuntimeWarning (test isolation)."""
+    _snap_overflow.reset()
+
+
+def snap_to_buckets(Ks: np.ndarray, buckets: Sequence[int]) -> np.ndarray:
+    """Smallest configured bucket >= K (largest bucket when K overshoots,
+    with a one-time warning — that clamp integrates COARSER than asked).
+
+    Snapping up, never down — except at the top: a request is only ever
+    integrated at least as finely as its controller asked for, unless its
+    K exceeds ``buckets[-1]`` entirely, in which case it clamps down to
+    ``buckets[-1]`` (the warning latch flags the quality degradation once).
+    Since the runtime-eps kernel fuses any K mix, snapping exists purely to
+    bound masked-step waste and the set of (shape, k_max) jit cells — not
+    to make batches kernel-eligible."""
     buckets = np.asarray(sorted(buckets), np.int32)
-    idx = np.searchsorted(buckets, np.asarray(Ks, np.int32), side="left")
+    Ks = np.asarray(Ks, np.int32)
+    if Ks.size and int(Ks.max()) > int(buckets[-1]):
+        _snap_overflow.warn(
+            f"snap_to_buckets: probed K={int(Ks.max())} exceeds the "
+            f"largest configured bucket {int(buckets[-1])}; clamping down "
+            "to it. The request will integrate more coarsely than its "
+            "controller asked for — widen the bucket set (or raise tol) "
+            "if this is steady-state traffic.", stacklevel=3)
+    idx = np.searchsorted(buckets, Ks, side="left")
     return buckets[np.minimum(idx, len(buckets) - 1)]
 
 
@@ -174,6 +203,79 @@ class EngineConfig:
 
     def __post_init__(self):
         assert self.buckets == tuple(sorted(self.buckets)), self.buckets
+
+
+def prepare_model(model: DepthModel, ecfg: "EngineConfig") -> DepthModel:
+    """Shared serving-loop model vetting: promote the integrator onto the
+    fused kernel path when the config asks for it, and refuse a hyper_*
+    solver with no correction bound (a silent downgrade to the base
+    tableau would misreport every NFE/agreement number downstream). Both
+    MultiRateEngine and InflightScheduler construct through here, so the
+    two loops cannot drift on eligibility policy."""
+    if ecfg.fused and not model.integ.fused:
+        model = dataclasses.replace(
+            model, integ=dataclasses.replace(model.integ, fused=True))
+    if ecfg.solver.startswith("hyper_") and model.integ.g is None:
+        raise ValueError(
+            f"solver {ecfg.solver!r} needs a correction: build the "
+            "DepthModel with g_params (serve CLI: --g-ckpt)")
+    return model
+
+
+def make_controller(integ: Integrator, ecfg: "EngineConfig"):
+    """Controller selection shared by the drain engine and the in-flight
+    scheduler (launch/scheduler.py): same knobs -> same per-request K
+    policy, so the two serving loops are comparable request-for-request."""
+    kind = ecfg.controller
+    if kind == "auto":
+        kind = "residual" if integ.g is not None else "embedded"
+    k_min, k_max = min(ecfg.buckets), max(ecfg.buckets)
+    if kind == "fixed":
+        K = ecfg.fixed_K or k_max
+        assert K <= k_max, (
+            f"fixed_K={K} exceeds the largest bucket {k_max}; "
+            "snap_to_buckets never snaps down — widen buckets")
+        return FixedController(K=K)
+    if kind == "residual":
+        return HypersolverResidualController(
+            tol=ecfg.tol, k_min=k_min, k_max=k_max)
+    if kind == "embedded":
+        return EmbeddedErrorController(
+            tol=ecfg.tol, k_min=k_min, k_max=k_max)
+    raise ValueError(f"unknown controller {kind!r}")
+
+
+def probe_net_nfe(controller) -> int:
+    """Per-request probe cost net of the reused first stage (the probe's
+    dz0 substitutes for stage 0 of the solve, so one eval is free)."""
+    raw = getattr(controller, "probe_nfe", 0)
+    return max(raw - 1, 0) if raw else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class StepReport:
+    """Virtual-cost accounting for one engine drain, in SEQUENTIAL
+    vector-field evaluations (the unit a batch-parallel accelerator
+    serializes on): a K-step scan of an s-stage tableau costs s*K
+    regardless of batch width, a probe costs its probe_nfe. The trace
+    replayer (launch/workload.py) uses this to compare the drain loop
+    and the in-flight scheduler on identical arrival traces.
+
+    ``finish_offset`` maps uid -> cost offset (from drain start) at which
+    its batch's solve completed — requests in the first bucket batch of a
+    drain finish before the last batch does."""
+
+    cost: float = 0.0                 # total sequential evals this drain
+    probe_cost: float = 0.0           # sequential evals spent probing
+    useful_steps: int = 0             # sum of per-sample K over served rows
+    total_steps: int = 0              # sum of batch_rows * k_max over batches
+    batches: int = 0
+    finish_offset: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def waste_steps(self) -> int:
+        """Masked sample-steps: rows scanned past their own K_i."""
+        return self.total_steps - self.useful_steps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,48 +301,20 @@ class MultiRateEngine:
     compiles once per cell."""
 
     def __init__(self, model: DepthModel, engine_cfg: EngineConfig):
-        if engine_cfg.fused and not model.integ.fused:
-            model = dataclasses.replace(
-                model, integ=dataclasses.replace(model.integ, fused=True))
-        self.model = model
+        self.model = prepare_model(model, engine_cfg)
         self.ecfg = engine_cfg
-        if engine_cfg.solver.startswith("hyper_") and model.integ.g is None:
-            raise ValueError(
-                f"solver {engine_cfg.solver!r} needs a correction: build the "
-                "DepthModel with g_params (serve CLI: --g-ckpt)")
-        self.controller = self._make_controller()
+        self.controller = make_controller(self.model.integ, self.ecfg)
         self._queue: deque = deque()
         self._uid = 0
         self._probe_fns: Dict[Tuple, Any] = {}
         self._solve_fns: Dict[Tuple, Any] = {}
+        self.last_report = StepReport()
 
     # ---------------------------------------------------------- policy ----
-    def _make_controller(self):
-        e = self.ecfg
-        kind = e.controller
-        if kind == "auto":
-            kind = ("residual" if self.model.integ.g is not None
-                    else "embedded")
-        k_min, k_max = min(e.buckets), max(e.buckets)
-        if kind == "fixed":
-            K = e.fixed_K or k_max
-            assert K <= k_max, (
-                f"fixed_K={K} exceeds the largest bucket {k_max}; "
-                "snap_to_buckets never snaps down — widen buckets")
-            return FixedController(K=K)
-        if kind == "residual":
-            return HypersolverResidualController(
-                tol=e.tol, k_min=k_min, k_max=k_max)
-        if kind == "embedded":
-            return EmbeddedErrorController(
-                tol=e.tol, k_min=k_min, k_max=k_max)
-        raise ValueError(f"unknown controller {kind!r}")
-
     @property
     def probe_nfe(self) -> int:
         """Probe cost per request, net of the reused first stage."""
-        raw = getattr(self.controller, "probe_nfe", 0)
-        return max(raw - 1, 0) if raw else 0
+        return probe_net_nfe(self.controller)
 
     def fused_in_play(self, z0=None) -> bool:
         """Kernel eligibility is K-independent now (runtime-eps kernel):
@@ -308,9 +382,16 @@ class MultiRateEngine:
     # ------------------------------------------------------------ serve ----
     def step(self) -> List[Completed]:
         """Drain the queue once: probe, bucket, pack, solve. Returns the
-        completed requests (order not guaranteed — uid is the join key)."""
+        completed requests (order not guaranteed — uid is the join key).
+        ``self.last_report`` carries this drain's virtual-cost accounting
+        (StepReport) for the trace replayer in launch/workload.py."""
         if not self._queue:
+            self.last_report = StepReport()
             return []
+        stages = self.model.integ.tableau.stages
+        cost = probe_cost = 0.0
+        useful = total = batches = 0
+        finish_offset: Dict[int, float] = {}
         pending: List[Request] = []
         while self._queue:
             pending.append(self._queue.popleft())
@@ -332,6 +413,9 @@ class MultiRateEngine:
                     jnp.asarray(xs))
                 Ks_raw = np.asarray(Ks_dev)
                 errs = np.asarray(err_dev)
+                p = float(getattr(self.controller, "probe_nfe", 0))
+                probe_cost += p
+                cost += p
             Ks = snap_to_buckets(Ks_raw, self.ecfg.buckets)
 
             # mixed-K packing: sort by K so batches stay as K-pure as the
@@ -355,11 +439,19 @@ class MultiRateEngine:
                     self._solve_fn(shape, k_max)(
                         jnp.asarray(xs[sel]), take(z0, sel),
                         take(dz0, sel), jnp.asarray(Ks[sel], jnp.int32)))
+                cost += stages * k_max
+                useful += int(Ks[sel].sum())
+                total += len(sel) * k_max
+                batches += 1
                 for j, i in enumerate(sel):
+                    finish_offset[reqs[i].uid] = cost
                     done.append(Completed(
                         uid=reqs[i].uid, outputs=outputs[j], K=int(Ks[i]),
                         nfe=self.nfe_of(int(Ks[i])),
                         err_probe=float(errs[i]), fused_kernel=fused))
+        self.last_report = StepReport(
+            cost=cost, probe_cost=probe_cost, useful_steps=useful,
+            total_steps=total, batches=batches, finish_offset=finish_offset)
         return done
 
     def run(self, xs) -> List[Completed]:

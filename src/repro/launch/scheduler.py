@@ -1,0 +1,461 @@
+"""In-flight depth-continuous batching: a slot-pool scheduler over the
+resumable segment solve.
+
+The slot/segment model, against ``engine.py``'s drain loop
+==========================================================
+
+``MultiRateEngine.step()`` is a batch job: it drains the whole queue,
+probes, packs by bucket, and solves each batch TO COMPLETION before any
+new request gets a look. Under streaming traffic that shape loses twice:
+
+  * **queue wait** — a request arriving just after a drain starts waits
+    out the entire drain (worst case: every batch of it), even if a slot's
+    worth of work would have served it immediately;
+  * **masked-step waste** — a K=2 request packed next to a K=16 request
+    rides the scan to k_max frozen, burning kernel passes on rows that
+    finished 14 steps ago.
+
+This module is the depth-axis analog of token-level continuous batching
+from LLM serving (Orca/vLLM): where those schedulers admit and retire
+sequences between *decode steps*, ``InflightScheduler`` admits and retires
+requests between *depth segments* of the ODE solve. The pieces:
+
+  * A fixed **slot pool** per request (shape, dtype) cell: ``slots`` rows
+    of a resumable
+    ``SegmentCarry`` (core/integrate.py) — per-slot state z, step counter
+    k, target mesh length Ks, step size eps, and the admission probe's
+    first stage. ``Ks == 0`` marks an empty slot; occupancy is DATA, not
+    shape, so one ``(shape, seg)`` jit cell (one fused-kernel trace)
+    serves every admission/refill pattern with zero recompiles.
+  * A **segment** is ``seg`` masked multi-rate depth steps of the whole
+    pool (``Integrator.solve_segment``) — the same fused kernel pass the
+    drain engine uses, just chunked. A slot is finished exactly when
+    ``k >= Ks``, which is the freeze mask the kernel already takes as a
+    scalar-prefetch row.
+  * Between segments, finished slots **retire** (readout -> completion
+    record) and **refill** from the queue: admission probes the newcomers
+    batch (padded to the pool width so the probe stays one jit cell),
+    reusing the controller policy from ``launch/engine.py``
+    (``make_controller`` + ``snap_to_buckets``), and scatters their rows
+    into the free slots. A K=2 request admitted next to a half-done K=16
+    request exits after its own ~K/seg segments instead of waiting out
+    the batch.
+
+Virtual-cost clock
+------------------
+
+The scheduler keeps a virtual clock (``self.now``) in the same unit as
+``engine.StepReport``: SEQUENTIAL vector-field evaluations (batch-width
+free — the axis an accelerator parallelizes). One segment costs
+``tableau.stages * seg``; an admission probe costs the controller's
+``probe_nfe``. Completions are stamped at the end of the tick that
+retired them. ``launch/workload.py`` replays identical arrival traces
+against this clock and the drain engine's, producing comparable queue
+wait / latency / waste numbers.
+
+Choosing ``seg``: small ``seg`` = fast admission and low masked waste but
+more per-segment host round-trips; large ``seg`` degenerates toward the
+drain loop (``seg >= max bucket`` is exactly a drain with extra steps).
+``seg`` of 2-4 with ``slots ~ max_batch`` is the useful regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controllers import FixedController
+from repro.core.integrate import SegmentCarry
+from repro.launch.engine import (
+    DepthModel, EngineConfig, Request, make_controller, prepare_model,
+    probe_net_nfe, snap_to_buckets,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class InflightCompleted:
+    """Per-request completion record with the latency decomposition the
+    drain engine cannot express: queue wait (submit -> slot admission) and
+    service (admission -> retirement), in virtual cost units."""
+
+    uid: int
+    outputs: np.ndarray
+    K: int                        # snapped mesh length actually integrated
+    nfe: int                      # probe (net of reuse) + stages * K
+    err_probe: float
+    fused_kernel: bool
+    t_submit: float
+    t_admit: float
+    t_done: float
+    segments: int                 # pool segments this request rode
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_admit - self.t_submit
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass(frozen=True)
+class TickReport:
+    """One scheduling round: admissions + at most one segment per pool."""
+
+    cost: float = 0.0             # sequential evals this tick
+    probe_cost: float = 0.0
+    admitted: int = 0
+    retired: int = 0
+    useful_steps: int = 0         # slot-steps that advanced a live request
+    total_steps: int = 0          # slots * seg over pools that ran
+    occupied_steps: int = 0       # occupied-slot-steps (live at segment start)
+
+    @property
+    def waste_steps(self) -> int:
+        """Slot-steps computed for frozen or empty rows."""
+        return self.total_steps - self.useful_steps
+
+
+class _SlotPool:
+    """Fixed-width slot pool for one request shape: device-side carry
+    (z / first_stage pytrees) + host-side bookkeeping rows (k, Ks, eps,
+    uid, timestamps). All jit cells are pool-width, so occupancy never
+    respecializes anything."""
+
+    def __init__(self, sched: "InflightScheduler", shape: Tuple[int, ...],
+                 dtype: np.dtype):
+        self.sched = sched
+        self.shape = shape
+        n = sched.slots
+        self.uid = np.full((n,), -1, np.int64)        # -1 = empty slot
+        self.k = np.zeros((n,), np.int32)
+        self.Ks = np.zeros((n,), np.int32)
+        self.eps = np.ones((n,), np.float32)
+        self.err = np.zeros((n,), np.float32)
+        self.t_submit = np.zeros((n,), np.float64)
+        self.t_admit = np.zeros((n,), np.float64)
+        self.segments = np.zeros((n,), np.int32)
+        self.xs = np.zeros((n,) + shape, dtype)
+        self._xs_dev = None     # device mirror of xs, refreshed on admit
+        self.z: Any = None                            # device pytree or None
+        self.fs: Any = None                           # probe dz rows or None
+        self._probe_fn = None
+        self._embed_fn = None
+        self._segment_fn = None
+        self._readout_fn = None
+
+    # ------------------------------------------------------- jit cells ----
+    def _cells(self):
+        m, integ = self.sched.model, self.sched.model.integ
+        ctrl, seg = self.sched.controller, self.sched.seg
+        s0 = m.span[0]
+
+        if self._probe_fn is None:
+            @jax.jit
+            def probe(xs):
+                z0 = m.embed(xs)
+                p = ctrl.select(integ, m.field_of(xs), z0, m.span)
+                return p.K, p.err, z0, p.dz0
+
+            @jax.jit
+            def embed(xs):
+                return m.embed(xs)
+
+            @jax.jit
+            def segment(xs, z, k, Ks, eps, fs):
+                carry = SegmentCarry(z, k, Ks, eps, fs)
+                carry, fin = integ.solve_segment(
+                    m.field_of(xs), carry, seg, s0=s0)
+                return carry.z, carry.k, fin
+
+            @jax.jit
+            def readout(xs, z):
+                return m.readout(xs, z)
+
+            self._probe_fn, self._embed_fn = probe, embed
+            self._segment_fn, self._readout_fn = segment, readout
+        return (self._probe_fn, self._embed_fn, self._segment_fn,
+                self._readout_fn)
+
+    # ------------------------------------------------------- occupancy ----
+    @property
+    def free(self) -> np.ndarray:
+        return np.flatnonzero(self.uid < 0)
+
+    @property
+    def occupied(self) -> np.ndarray:
+        return self.uid >= 0
+
+    def busy(self) -> bool:
+        return bool((self.uid >= 0).any())
+
+    # ------------------------------------------------------- admission ----
+    def admit(self, reqs: List[Request], submit_t: Dict[int, float],
+              now: float) -> float:
+        """Probe ``reqs`` (padded to pool width: one probe jit cell per
+        shape) and scatter them into free slots. Returns the probe cost."""
+        probe_fn, embed_fn, _, _ = self._cells()
+        sched = self.sched
+        idx = self.free[:len(reqs)]
+        assert len(idx) == len(reqs), "caller admits at most `free` requests"
+        n_pad = sched.slots - len(reqs)
+        xs_new = np.stack([r.x for r in reqs])
+        assert xs_new.dtype == self.xs.dtype, (xs_new.dtype, self.xs.dtype)
+        xs_pad = np.concatenate(
+            [xs_new, np.repeat(xs_new[:1], n_pad, axis=0)]) \
+            if n_pad else xs_new
+
+        fixed = isinstance(sched.controller, FixedController)
+        if fixed:
+            z0 = embed_fn(jnp.asarray(xs_pad))
+            dz0 = None
+            Ks_raw = np.full((len(reqs),), sched.controller.K, np.int32)
+            errs = np.zeros((len(reqs),), np.float32)
+            probe_cost = 0.0
+        else:
+            Ks_dev, err_dev, z0, dz0 = probe_fn(jnp.asarray(xs_pad))
+            Ks_raw = np.asarray(Ks_dev)[:len(reqs)]
+            errs = np.asarray(err_dev)[:len(reqs)]
+            probe_cost = float(getattr(sched.controller, "probe_nfe", 0))
+        Ks = snap_to_buckets(Ks_raw, sched.ecfg.buckets)
+
+        # scatter: host rows directly, device pytrees leaf-wise. On the
+        # pool's first admission the padded probe output IS the pool state.
+        jidx = jnp.asarray(idx)
+        take_rows = lambda t: jax.tree_util.tree_map(
+            lambda l: l[:len(reqs)], t)
+        if self.z is None:
+            scatter = lambda _, new: jax.tree_util.tree_map(
+                lambda l: jnp.asarray(l), new)
+            self.z = scatter(None, z0)
+            self.fs = None if dz0 is None else scatter(None, dz0)
+        else:
+            upd = lambda old, new: jax.tree_util.tree_map(
+                lambda o, nl: o.at[jidx].set(nl), old, take_rows(new))
+            self.z = upd(self.z, z0)
+            if self.fs is not None:
+                self.fs = upd(self.fs, dz0)
+        span = sched.model.span
+        for j, i in enumerate(idx):
+            r = reqs[j]
+            self.uid[i] = r.uid
+            self.k[i] = 0
+            self.Ks[i] = int(Ks[j])
+            self.eps[i] = (span[1] - span[0]) / float(Ks[j])
+            self.err[i] = float(errs[j])
+            self.t_submit[i] = submit_t.pop(r.uid)
+            self.t_admit[i] = now
+            self.segments[i] = 0
+            self.xs[i] = r.x
+        # device mirror of xs: scatter only the refilled rows (a full
+        # re-upload per admission would put the big operand back on the
+        # host->device path every tick under steady streaming traffic)
+        if self._xs_dev is None:
+            self._xs_dev = jnp.asarray(self.xs)
+        else:
+            self._xs_dev = self._xs_dev.at[jidx].set(jnp.asarray(xs_new))
+        return probe_cost
+
+    # --------------------------------------------------------- segment ----
+    def run_segment(self, now_done: float) -> Tuple[List[InflightCompleted],
+                                                    int, int]:
+        """One ``seg``-step advance of the whole pool; retire finished
+        slots. Returns (completions, useful_steps, occupied_slots)."""
+        _, _, segment_fn, readout_fn = self._cells()
+        sched = self.sched
+        k_old = self.k.copy()
+        assert self._xs_dev is not None  # a busy pool has admitted
+        z, k_dev, fin = segment_fn(
+            self._xs_dev, self.z, jnp.asarray(self.k),
+            jnp.asarray(self.Ks), jnp.asarray(self.eps), self.fs)
+        self.z = z
+        self.k = np.array(k_dev)  # np.asarray of a jax array is read-only
+        occ = self.occupied
+        self.segments[occ] += 1
+        useful = int((self.k - k_old)[occ].sum())
+        finished = occ & np.asarray(fin)
+        done: List[InflightCompleted] = []
+        if finished.any():
+            outs = np.asarray(readout_fn(self._xs_dev, self.z))
+            fused = sched.model.integ.fused_available(z=self.z)
+            for i in np.flatnonzero(finished):
+                K = int(self.Ks[i])
+                done.append(InflightCompleted(
+                    uid=int(self.uid[i]), outputs=outs[i], K=K,
+                    nfe=sched.probe_nfe + sched.stages * K,
+                    err_probe=float(self.err[i]), fused_kernel=fused,
+                    t_submit=float(self.t_submit[i]),
+                    t_admit=float(self.t_admit[i]), t_done=now_done,
+                    segments=int(self.segments[i])))
+                self.uid[i] = -1          # retire: slot becomes refillable
+                self.Ks[i] = 0            # Ks==0 keeps the row frozen
+                self.eps[i] = 1.0
+                self.k[i] = 0
+        return done, useful, int(occ.sum())
+
+
+class InflightScheduler:
+    """Continuous-batching serving loop: submit as traffic arrives, call
+    ``step()`` repeatedly; each step admits into free slots and advances
+    every busy pool by one segment. See the module docstring for the
+    slot/segment model and the virtual-cost clock."""
+
+    def __init__(self, model: DepthModel,
+                 engine_cfg: Optional[EngineConfig] = None,
+                 *, slots: int = 4, seg: int = 2):
+        engine_cfg = engine_cfg or EngineConfig()
+        model = prepare_model(model, engine_cfg)
+        if seg < 1:
+            raise ValueError(f"seg must be >= 1, got {seg}")
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.model = model
+        self.ecfg = engine_cfg
+        self.slots = int(slots)
+        self.seg = int(seg)
+        self.controller = make_controller(model.integ, engine_cfg)
+        self.stages = model.integ.tableau.stages
+        self.now = 0.0
+        self.ticks = 0
+        self.total_cost = 0.0
+        self.total_probe_cost = 0.0
+        self.total_useful_steps = 0
+        self.total_slot_steps = 0
+        self.total_occupied_steps = 0
+        self.last_report = TickReport()
+        self._queue: deque = deque()
+        self._submit_t: Dict[int, float] = {}
+        self._uid = 0
+        self._pools: Dict[Tuple, _SlotPool] = {}
+
+    # ----------------------------------------------------------- queue ----
+    @property
+    def probe_nfe(self) -> int:
+        """Per-request probe cost net of the reused first stage (same
+        accounting as MultiRateEngine.probe_nfe)."""
+        return probe_net_nfe(self.controller)
+
+    def submit(self, x, t: Optional[float] = None) -> int:
+        """Queue a request. ``t`` is its arrival time on the virtual
+        clock, defaulting to now; a past ``t`` records the true arrival
+        of a request the caller is admitting late (the replay driver's
+        normal case — queue wait starts at ``t``). A FUTURE ``t`` is
+        only meaningful when the scheduler is idle, where the clock
+        idle-jumps forward to it; with work pending it is refused,
+        because jumping the clock mid-flight would bill every in-flight
+        request for time no segment ran — ``step()`` until ``now >= t``
+        instead (as ``launch/workload.py::replay_scheduler`` does)."""
+        t = self.now if t is None else float(t)
+        if t > self.now:
+            if self.pending:
+                raise ValueError(
+                    f"submit at t={t} > now={self.now} with "
+                    f"{self.pending} requests pending: advancing the "
+                    "clock mid-flight would misattribute latency; "
+                    "step() until now >= t, then submit")
+            self.advance_to(t)
+        self._uid += 1
+        self._queue.append(Request(uid=self._uid, x=np.asarray(x)))
+        self._submit_t[self._uid] = t
+        return self._uid
+
+    def advance_to(self, t: float) -> None:
+        """Idle-jump the virtual clock forward (never backward). Refused
+        while work is pending, for the same reason ``submit`` refuses a
+        future ``t`` then: the jump would bill every in-flight request
+        for time no segment ran."""
+        if float(t) > self.now and self.pending:
+            raise ValueError(
+                f"advance_to(t={t}) > now={self.now} with {self.pending} "
+                "requests pending: the clock only idle-jumps; step() "
+                "until now >= t instead")
+        self.now = max(self.now, float(t))
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet completed: queued + in flight."""
+        inflight = sum(int(p.occupied.sum()) for p in self._pools.values())
+        return len(self._queue) + inflight
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------ tick ----
+    def step(self) -> List[InflightCompleted]:
+        """One scheduling round: (1) refill free slots from the queue
+        (probe-on-admission), (2) advance every busy pool by one segment,
+        (3) retire finished slots. Advances the virtual clock by the
+        tick's cost; completions are stamped at end-of-tick."""
+        cost = 0.0
+        probe_cost = 0.0
+        admitted = 0
+        # -- admission: FIFO per (shape, dtype) pool; a full pool does not
+        #    block other pools' admissions (head-of-line blocking stays
+        #    within a cell).
+        if self._queue:
+            batches: Dict[Tuple, List[Request]] = {}
+            budget: Dict[Tuple, int] = {}
+            leftover: deque = deque()
+            while self._queue:
+                r = self._queue.popleft()
+                # pools key on (shape, dtype): same-shape requests of a
+                # different dtype must not silently cast into a pool's
+                # storage (the jit-cell retrace boundary, made explicit)
+                key = (r.x.shape, r.x.dtype.str)
+                if key not in self._pools:
+                    self._pools[key] = _SlotPool(self, r.x.shape,
+                                                 r.x.dtype)
+                if key not in budget:
+                    budget[key] = len(self._pools[key].free)
+                if budget[key] > 0:
+                    budget[key] -= 1
+                    batches.setdefault(key, []).append(r)
+                else:
+                    leftover.append(r)
+            self._queue = leftover
+            for key, batch in batches.items():
+                probe_cost += self._pools[key].admit(
+                    batch, self._submit_t, self.now + probe_cost)
+                admitted += len(batch)
+        cost += probe_cost
+        # -- segments
+        done: List[InflightCompleted] = []
+        useful = total = occupied = retired = 0
+        seg_cost = self.stages * self.seg
+        for pool in self._pools.values():
+            if not pool.busy():
+                continue
+            cost += seg_cost
+            d, u, occ = pool.run_segment(self.now + cost)
+            done.extend(d)
+            retired += len(d)
+            useful += u
+            total += self.slots * self.seg
+            occupied += occ * self.seg
+        self.now += cost
+        self.ticks += 1
+        self.total_cost += cost
+        self.total_probe_cost += probe_cost
+        self.total_useful_steps += useful
+        self.total_slot_steps += total
+        self.total_occupied_steps += occupied
+        self.last_report = TickReport(
+            cost=cost, probe_cost=probe_cost, admitted=admitted,
+            retired=retired, useful_steps=useful, total_steps=total,
+            occupied_steps=occupied)
+        return done
+
+    # ----------------------------------------------------- convenience ----
+    def run(self, xs) -> List[InflightCompleted]:
+        """Submit a batch at the current instant and drive to completion,
+        returning results ordered by submission (uid join)."""
+        uids = [self.submit(x) for x in np.asarray(xs)]
+        results: Dict[int, InflightCompleted] = {}
+        while self.pending:
+            for c in self.step():
+                results[c.uid] = c
+        return [results[u] for u in uids]

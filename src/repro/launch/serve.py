@@ -16,6 +16,14 @@ correction, freeze mask) is a single runtime-eps Pallas kernel pass, for
 every bucket mix (see launch/engine.py). ``hyper_*`` solvers apply a
 trained hypersolver correction loaded via --g-ckpt (HyperEuler etc.).
 Reports per-request NFE and argmax agreement vs the full-depth forward.
+
+--inflight swaps the drain-the-queue engine for the continuous-batching
+slot-pool scheduler (launch/scheduler.py): --slots slots advance --seg
+depth steps per scheduling round, finished requests retire and refill
+between segments. --arrival-trace poisson|bursty replays a seeded
+streaming arrival trace (--arrival-rate requests per cost unit) through
+the scheduler and reports p50/p99 latency + queue wait + masked-step
+waste (launch/workload.py); ``none`` submits the whole batch at once.
 """
 from __future__ import annotations
 
@@ -61,6 +69,20 @@ def main():
     ap.add_argument("--fused", action="store_true",
                     help="route batch solves through the runtime-eps "
                          "Pallas kernel (any bucket mix fuses)")
+    ap.add_argument("--inflight", action="store_true",
+                    help="serve through the in-flight slot-pool scheduler "
+                         "(launch/scheduler.py) instead of the drain engine")
+    ap.add_argument("--seg", type=int, default=2,
+                    help="depth steps per scheduling segment (--inflight)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="slot-pool width per request shape (--inflight)")
+    ap.add_argument("--arrival-trace", default="none",
+                    choices=["none", "poisson", "bursty"],
+                    help="replay a seeded streaming arrival trace through "
+                         "the scheduler (--inflight only)")
+    ap.add_argument("--arrival-rate", type=float, default=0.25,
+                    help="poisson arrival rate / bursty burst pacing, in "
+                         "requests per virtual cost unit")
     args = ap.parse_args()
 
     cfg = get(args.arch)
@@ -102,10 +124,55 @@ def main():
     )
     model = lm_depth_model(params, cfg, solver=args.solver,
                            g_params=g_params, fused=args.fused)
-    engine = MultiRateEngine(model, ecfg)
 
     full, _ = lm_forward(params, cfg, prompt)
     full_top = np.asarray(jnp.argmax(full, -1))
+
+    if args.inflight:
+        from repro.launch.scheduler import InflightScheduler
+        from repro.launch.workload import (
+            bursty_trace, latency_stats, poisson_trace, replay_scheduler,
+        )
+
+        if args.arrival_trace != "none" and args.arrival_rate <= 0:
+            raise SystemExit("--arrival-rate must be > 0 for "
+                             f"--arrival-trace {args.arrival_trace}")
+        sched = InflightScheduler(model, ecfg, slots=args.slots,
+                                  seg=args.seg)
+        xs = np.asarray(prompt)
+        t0 = time.time()
+        if args.arrival_trace == "none":
+            results = sched.run(xs)
+        else:
+            trace = poisson_trace(xs, rate=args.arrival_rate,
+                                  seed=args.seed) \
+                if args.arrival_trace == "poisson" else \
+                bursty_trace(xs, burst=args.slots,
+                             gap=args.slots / args.arrival_rate,
+                             seed=args.seed)
+            report = replay_scheduler(sched, trace)
+            # records join back to prompt rows by uid (arrival order)
+            results = sorted(report.records, key=lambda r: r.uid)
+            print(f"[inflight {args.arrival_trace}] "
+                  f"{latency_stats(report)}")
+        dt = time.time() - t0
+        agree = [float(np.mean(np.argmax(r.outputs, -1) == full_top[i]))
+                 for i, r in enumerate(results)]
+        nfes = [r.nfe for r in results]
+        mode = "multirate" if args.multirate else f"K={K_fixed}"
+        print(f"[{args.solver} {mode} inflight slots={args.slots} "
+              f"seg={args.seg}] scored {args.batch}x{args.prompt_len} in "
+              f"{dt:.2f}s; mean NFE {np.mean(nfes):.2f}/{n_groups} "
+              f"(probe {sched.probe_nfe}); mean argmax agreement vs full "
+              f"depth: {np.mean(agree):.3f}")
+        for r, a in zip(results, agree):
+            # both record types (InflightCompleted / RequestRecord) stamp
+            # queue_wait and latency
+            print(f"  req {r.uid}: K={r.K} nfe={r.nfe} agree={a:.3f} "
+                  f"wait={r.queue_wait:.1f} lat={r.latency:.1f}")
+        return
+
+    engine = MultiRateEngine(model, ecfg)
     t0 = time.time()
     results = engine.run(np.asarray(prompt))
     dt = time.time() - t0

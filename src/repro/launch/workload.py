@@ -1,0 +1,230 @@
+"""Arrival traces + latency accounting for the serving loops.
+
+Seeded, reproducible streaming workloads (Poisson and bursty arrival
+processes over heterogeneous difficulty mixes) and replay drivers that
+run the SAME trace through the drain-the-queue engine
+(``launch/engine.py``) and the in-flight scheduler
+(``launch/scheduler.py``), on the same virtual clock (sequential
+vector-field evaluations — see ``engine.StepReport``), producing
+comparable per-request records:
+
+    queue wait  = arrival -> the solve that serves it starts
+    latency     = arrival -> outputs ready
+    waste       = slot/sample depth-steps computed for frozen or empty rows
+
+``benchmarks/bench_scheduler.py`` is the head-to-head harness over these
+drivers; ``latency_stats`` is the summary both report (p50/p99 latency,
+throughput, occupancy, masked-step waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------- traces ----
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One request arrival: time on the virtual clock + its input."""
+
+    t: float
+    x: np.ndarray
+
+
+def heterogeneous_requests(n: int, d: int, *, easy_frac: float = 0.5,
+                           easy_loc: float = -2.0, hard_loc: float = 3.0,
+                           scale: float = 0.05, seed: int = 0,
+                           interleave: bool = True) -> np.ndarray:
+    """The repo's standard toy difficulty mix: request rows whose mean
+    drives a softplus stiffness, so `easy_loc` rows integrate in the
+    smallest buckets and `hard_loc` rows need the finest mesh (the same
+    construction tests/test_engine.py uses). ``interleave`` shuffles the
+    two classes together so arrival order carries a realistic mix."""
+    rng = np.random.RandomState(seed)
+    n_easy = int(round(n * easy_frac))
+    xs = np.concatenate([
+        rng.randn(n_easy, d) * scale + easy_loc,
+        rng.randn(n - n_easy, d) * scale + hard_loc,
+    ]).astype(np.float32)
+    if interleave:
+        rng.shuffle(xs)
+    return xs
+
+
+def poisson_trace(xs: np.ndarray, rate: float, *, seed: int = 0,
+                  t0: float = 0.0) -> List[Arrival]:
+    """Poisson arrival process: exponential inter-arrival gaps at ``rate``
+    requests per virtual cost unit, one arrival per row of ``xs``."""
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1.0 / rate, size=len(xs))
+    ts = t0 + np.cumsum(gaps)
+    return [Arrival(t=float(t), x=np.asarray(x)) for t, x in zip(ts, xs)]
+
+
+def bursty_trace(xs: np.ndarray, *, burst: int = 4, gap: float = 20.0,
+                 within: float = 0.0, seed: int = 0,
+                 t0: float = 0.0) -> List[Arrival]:
+    """Bursty arrivals: groups of ``burst`` requests landing (near-)
+    simultaneously, bursts separated by ``gap`` cost units (+- 25%
+    jitter). ``within`` spreads a burst's members by that many units."""
+    rng = np.random.RandomState(seed)
+    arrivals: List[Arrival] = []
+    t = t0
+    for lo in range(0, len(xs), burst):
+        chunk = xs[lo:lo + burst]
+        offs = np.sort(rng.uniform(0.0, within, size=len(chunk))) \
+            if within > 0 else np.zeros(len(chunk))
+        for off, x in zip(offs, chunk):
+            arrivals.append(Arrival(t=float(t + off), x=np.asarray(x)))
+        t += gap * float(rng.uniform(0.75, 1.25))
+    return arrivals
+
+
+# ------------------------------------------------------------- accounting ----
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    """Loop-agnostic per-request ledger entry (both replay drivers emit
+    these, so the comparison is apples-to-apples)."""
+
+    uid: int
+    t_submit: float
+    t_admit: float           # when the solve serving it started
+    t_done: float
+    K: int
+    nfe: int
+    outputs: np.ndarray
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_admit - self.t_submit
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceReport:
+    """One trace replay: per-request records + aggregate work accounting."""
+
+    records: Tuple[RequestRecord, ...]
+    total_cost: float        # sequential evals spent, arrivals -> drained
+    probe_cost: float
+    useful_steps: int        # sample-steps that advanced a live request
+    total_steps: int         # sample-steps computed (incl. frozen/empty)
+    makespan: float          # first arrival -> last completion
+
+    @property
+    def waste_steps(self) -> int:
+        return self.total_steps - self.useful_steps
+
+
+def latency_stats(report: TraceReport) -> Dict[str, float]:
+    """The summary row both serving loops report: latency/queue-wait
+    percentiles, throughput, and masked-step waste. An empty replay
+    (zero-request trace) yields a zero summary, not a crash."""
+    if not report.records:
+        return {"requests": 0, "p50_latency": 0.0, "p99_latency": 0.0,
+                "mean_latency": 0.0, "p50_queue_wait": 0.0,
+                "p99_queue_wait": 0.0, "mean_nfe": 0.0, "throughput": 0.0,
+                "total_cost": round(report.total_cost, 1),
+                "probe_cost": round(report.probe_cost, 1),
+                "useful_steps": 0, "waste_steps": 0, "waste_frac": 0.0}
+    lat = np.asarray([r.latency for r in report.records])
+    wait = np.asarray([r.queue_wait for r in report.records])
+    nfe = np.asarray([r.nfe for r in report.records])
+    n = len(report.records)
+    waste_frac = (report.waste_steps / report.total_steps
+                  if report.total_steps else 0.0)
+    return {
+        "requests": n,
+        "p50_latency": round(float(np.percentile(lat, 50)), 3),
+        "p99_latency": round(float(np.percentile(lat, 99)), 3),
+        "mean_latency": round(float(lat.mean()), 3),
+        "p50_queue_wait": round(float(np.percentile(wait, 50)), 3),
+        "p99_queue_wait": round(float(np.percentile(wait, 99)), 3),
+        "mean_nfe": round(float(nfe.mean()), 3),
+        "throughput": round(n / report.makespan, 4) if report.makespan
+        else float("inf"),
+        "total_cost": round(report.total_cost, 1),
+        "probe_cost": round(report.probe_cost, 1),
+        "useful_steps": int(report.useful_steps),
+        "waste_steps": int(report.waste_steps),
+        "waste_frac": round(waste_frac, 4),
+    }
+
+
+# ---------------------------------------------------------------- replays ----
+
+def replay_engine(engine, trace: Sequence[Arrival]) -> TraceReport:
+    """Drive a ``MultiRateEngine`` through an arrival trace with drain
+    semantics: whenever the loop turns and work is queued, ``step()``
+    serves EVERYTHING queued to completion (new arrivals wait out the
+    drain). Request i's service start is the drain start; its completion
+    lands at the drain's per-batch finish offset (engine.StepReport)."""
+    trace = sorted(trace, key=lambda a: a.t)
+    now = 0.0
+    i = 0
+    t_submit: Dict[int, float] = {}
+    records: List[RequestRecord] = []
+    total_cost = probe_cost = 0.0
+    useful = total = 0
+    while i < len(trace) or len(engine):
+        if not len(engine):
+            now = max(now, trace[i].t)          # idle-jump to next arrival
+        while i < len(trace) and trace[i].t <= now:
+            uid = engine.submit(trace[i].x)
+            t_submit[uid] = trace[i].t
+            i += 1
+        t_drain = now
+        done = engine.step()
+        rep = engine.last_report
+        now += rep.cost
+        total_cost += rep.cost
+        probe_cost += rep.probe_cost
+        useful += rep.useful_steps
+        total += rep.total_steps
+        for c in done:
+            records.append(RequestRecord(
+                uid=c.uid, t_submit=t_submit.pop(c.uid), t_admit=t_drain,
+                t_done=t_drain + rep.finish_offset[c.uid], K=c.K, nfe=c.nfe,
+                outputs=c.outputs))
+    t0 = trace[0].t if trace else 0.0
+    t_end = max((r.t_done for r in records), default=t0)
+    return TraceReport(records=tuple(records), total_cost=total_cost,
+                       probe_cost=probe_cost, useful_steps=useful,
+                       total_steps=total, makespan=t_end - t0)
+
+
+def replay_scheduler(sched, trace: Sequence[Arrival]) -> TraceReport:
+    """Drive an ``InflightScheduler`` through the same arrival trace:
+    arrivals are submitted the moment the virtual clock passes them, and
+    each ``step()`` admits + advances one segment — requests overlap
+    in-flight instead of waiting out a drain."""
+    trace = sorted(trace, key=lambda a: a.t)
+    i = 0
+    records: List[RequestRecord] = []
+    while i < len(trace) or sched.pending:
+        while i < len(trace) and trace[i].t <= sched.now:
+            sched.submit(trace[i].x, t=trace[i].t)
+            i += 1
+        if not sched.pending:
+            sched.advance_to(trace[i].t)
+            continue
+        for c in sched.step():
+            records.append(RequestRecord(
+                uid=c.uid, t_submit=c.t_submit, t_admit=c.t_admit,
+                t_done=c.t_done, K=c.K, nfe=c.nfe, outputs=c.outputs))
+    t0 = trace[0].t if trace else 0.0
+    t_end = max((r.t_done for r in records), default=t0)
+    return TraceReport(
+        records=tuple(records), total_cost=sched.total_cost,
+        probe_cost=sched.total_probe_cost,
+        useful_steps=sched.total_useful_steps,
+        total_steps=sched.total_slot_steps, makespan=t_end - t0)

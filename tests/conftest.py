@@ -30,12 +30,14 @@ def _x64_scope(request):
 
 
 @pytest.fixture(autouse=True)
-def _rearm_fused_fallback_warning():
-    """The fused-fallback RuntimeWarning is a one-time latch; re-arm it per
-    test so warning assertions are not test-order-dependent (the latch used
-    to be a process-global bool that whichever test tripped first would
-    consume for the whole session)."""
+def _rearm_one_time_warnings():
+    """One-time warning latches (fused fallback, bucket-overflow snap) are
+    re-armed per test so warning assertions are not test-order-dependent
+    (they used to be process-global bools that whichever test tripped
+    first would consume for the whole session)."""
     from repro.core.integrate import reset_fused_fallback_warning
+    from repro.launch.engine import reset_snap_overflow_warning
 
     reset_fused_fallback_warning()
+    reset_snap_overflow_warning()
     yield

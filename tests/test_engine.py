@@ -2,6 +2,7 @@
 request-queue packing, per-request NFE accounting, fixed-vs-multirate
 consistency, and the LM adapter end-to-end."""
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -18,10 +19,34 @@ from repro.launch.engine import (
 # ----------------------------------------------------------- bucket policy ----
 
 def test_snap_to_buckets():
-    Ks = np.array([1, 2, 3, 4, 5, 8, 9, 40])
+    Ks = np.array([1, 2, 3, 4, 5, 8])
     np.testing.assert_array_equal(snap_to_buckets(Ks, (2, 4, 8)),
-                                  [2, 2, 4, 4, 8, 8, 8, 8])
-    np.testing.assert_array_equal(snap_to_buckets(Ks, (16,)), [16] * 8)
+                                  [2, 2, 4, 4, 8, 8])
+    np.testing.assert_array_equal(snap_to_buckets(Ks, (16,)), [16] * 6)
+    with pytest.warns(RuntimeWarning):  # overshoot clamps down, warned
+        np.testing.assert_array_equal(
+            snap_to_buckets(np.array([9, 40]), (2, 4, 8)), [8, 8])
+
+
+def test_snap_to_buckets_overflow_clamps_with_one_time_warning():
+    """A probed K above the largest configured bucket clamps to
+    buckets[-1] — integrating COARSER than asked — and says so once (the
+    latch is re-armed per test by conftest)."""
+    with pytest.warns(RuntimeWarning, match="exceeds the largest"):
+        out = snap_to_buckets(np.array([3, 40]), (2, 4, 8))
+    np.testing.assert_array_equal(out, [4, 8])
+    # one-time: the second overflow in the same process stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        np.testing.assert_array_equal(
+            snap_to_buckets(np.array([99]), (2, 4, 8)), [8])
+    # in-range snapping never warns
+    from repro.launch.engine import reset_snap_overflow_warning
+
+    reset_snap_overflow_warning()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        snap_to_buckets(np.array([1, 8]), (2, 4, 8))
 
 
 def test_engine_config_requires_sorted_buckets():
@@ -54,10 +79,11 @@ def _toy_model(g_scale=None, solver="euler"):
 
 
 def _requests(n=10, d=4, seed=0):
-    rng = np.random.RandomState(seed)
-    easy = rng.randn(n // 2, d) * 0.05 - 2.0   # softplus(-2) small -> easy
-    hard = rng.randn(n - n // 2, d) * 0.05 + 3.0
-    return np.concatenate([easy, hard], axis=0).astype(np.float32)
+    # the shared difficulty-mix generator, un-interleaved so the first
+    # half is the easy (softplus(-2) small) slice the assertions key on
+    from repro.launch.workload import heterogeneous_requests
+
+    return heterogeneous_requests(n, d, seed=seed, interleave=False)
 
 
 # ------------------------------------------------------------------ engine ----

@@ -1,0 +1,68 @@
+"""launch/mesh.py policy layer — the request-facing checks that run
+BEFORE any device mesh is touched, so they are testable on the
+single-device CPU test process (the full sharded-solve semantics run in
+the forced-4-device subprocess in test_runtime_eps.py).
+
+Pinned decision: a batch that does not divide the mesh's data-axis size
+is a CLEAR ERROR naming the remedy, not silent pad-and-trim — padding
+would fabricate requests whose NFE/latency accounting the serving layer
+then misreports."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FixedGrid, Integrator, get_tableau
+from repro.launch.mesh import batch_axes, sharded_solve
+
+
+class _StubMesh:
+    """Shape/axis metadata double for the pre-dispatch policy checks
+    (sharded_solve reads nothing else before raising)."""
+
+    def __init__(self, n_data=3):
+        self.shape = {"data": n_data, "model": 2}
+        self.axis_names = ("data", "model")
+
+
+def _field(s, z):
+    return -z
+
+
+def test_sharded_solve_rejects_indivisible_batch():
+    """PINNED: batch % data-axis != 0 raises the clear error (with the
+    re-bucket remedy) before any shard_map/device work happens."""
+    integ = Integrator(get_tableau("euler"))
+    z0 = jnp.ones((8, 4))  # 8 % 3 != 0
+    with pytest.raises(ValueError, match="does not divide"):
+        sharded_solve(integ, _field, z0, FixedGrid.over(0.0, 1.0, 2),
+                      mesh=_StubMesh(n_data=3))
+
+
+def test_sharded_solve_rejects_indivisible_pytree_batch():
+    """The divisibility check keys on the leading axis of the FIRST leaf
+    — a pytree state hits the same clear error."""
+    integ = Integrator(get_tableau("euler"))
+    z0 = (jnp.ones((5, 3)), jnp.ones((5, 2)))
+    with pytest.raises(ValueError, match="does not divide"):
+        sharded_solve(integ, lambda s, z: z, z0,
+                      FixedGrid.over(0.0, 1.0, 2), mesh=_StubMesh(n_data=2))
+
+
+def test_sharded_solve_rejects_bad_eps_rank():
+    """grid.eps beyond (B,) is a policy error too, caught pre-dispatch."""
+    integ = Integrator(get_tableau("euler"))
+    z0 = jnp.ones((6, 4))
+    bad = FixedGrid(0.0, jnp.ones((6, 2)), 2)  # eps ndim == 2
+    with pytest.raises(ValueError, match="scalar or"):
+        sharded_solve(integ, _field, z0, bad, mesh=_StubMesh(n_data=3))
+
+
+def test_batch_axes_policy():
+    assert batch_axes(_StubMesh()) == ("data",)
+
+    class _PodMesh(_StubMesh):
+        def __init__(self):
+            super().__init__()
+            self.axis_names = ("pod", "data", "model")
+
+    assert batch_axes(_PodMesh()) == ("pod", "data")

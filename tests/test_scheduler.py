@@ -1,0 +1,373 @@
+"""In-flight depth-continuous batching: the resumable segment solve
+(core/integrate.py::solve_segment), the slot-pool scheduler
+(launch/scheduler.py), arrival-trace workloads + replay accounting
+(launch/workload.py), and the BENCH schema gate (benchmarks/run.py
+--check).
+
+The two acceptance pins:
+  * segment-by-segment == one ``solve_multirate`` call (fp32 allclose),
+    mixed-K, with and without a hypersolver correction;
+  * ONE fused-kernel trace per (shape, seg) cell across every
+    occupancy/refill pattern a streaming trace produces.
+"""
+import os
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FixedGrid, Integrator, SegmentCarry, get_tableau, make_segment_carry,
+)
+from repro.kernels.hyper_step.ops import TRACE_COUNTS
+from repro.launch.engine import DepthModel, EngineConfig, MultiRateEngine
+from repro.launch.scheduler import InflightScheduler
+from repro.launch.workload import (
+    bursty_trace, heterogeneous_requests, latency_stats, poisson_trace,
+    replay_engine, replay_scheduler,
+)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _field(s, z):
+    return -z * jax.nn.softplus(jnp.mean(z, axis=-1, keepdims=True))
+
+
+G = lambda eps, s, z, dz: 0.25 * z + 0.1 * dz
+
+
+def _toy_model(fused=False, g=None):
+    def field_of(x):
+        k = jax.nn.softplus(jnp.mean(x, axis=-1, keepdims=True))
+        return lambda s, z: -z * k
+
+    return DepthModel(
+        embed=lambda x: x + 0.0,
+        field_of=field_of,
+        readout=lambda x, zT: zT,
+        integ=Integrator(tableau=get_tableau("euler"), g=g, fused=fused),
+    )
+
+
+# ------------------------------------------------- solve_segment parity ----
+
+@pytest.mark.parametrize("fused", [False, True])
+@pytest.mark.parametrize("with_g", [False, True])
+@pytest.mark.parametrize("seg", [1, 2, 3, 8])
+def test_solve_segment_parity_with_solve_multirate(fused, with_g, seg):
+    """ACCEPTANCE: driving a mixed-K batch to completion segment-by-
+    segment is allclose (fp32) to ONE solve_multirate call — with and
+    without a hypersolver correction, fused and unfused, for seg both
+    dividing and not dividing the mesh lengths."""
+    g = G if with_g else None
+    integ = Integrator(get_tableau("heun"), g=g, fused=fused)
+    z0 = jax.random.normal(jax.random.PRNGKey(0), (5, 17))
+    Ks = jnp.asarray([1, 2, 5, 8, 3], jnp.int32)
+    fs = _field(0.0, z0)
+    ref = integ.solve_multirate(_field, z0, (0.0, 1.0), Ks, 8,
+                                first_stage=fs)
+    carry = make_segment_carry(z0, Ks, (0.0, 1.0), first_stage=fs)
+    fin = None
+    for _ in range(-(-8 // seg)):
+        carry, fin = integ.solve_segment(_field, carry, seg)
+    assert bool(jnp.all(fin))
+    np.testing.assert_allclose(np.asarray(carry.z), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_solve_segment_refill_midflight_matches_fresh_solve():
+    """A slot retired and refilled mid-flight (new z row, k=0, new K)
+    integrates its own mesh exactly as a fresh solve would — the
+    resumability the scheduler's admit-between-segments relies on."""
+    integ = Integrator(get_tableau("euler"), fused=True)
+    z0 = jax.random.normal(jax.random.PRNGKey(1), (3, 9))
+    carry = make_segment_carry(z0, jnp.asarray([2, 6, 0]), (0.0, 1.0))
+    carry, fin = integ.solve_segment(_field, carry, 2)
+    assert np.asarray(fin).tolist() == [True, False, True]
+    # refill slots 0 (finished) and 2 (was empty) with new requests
+    z_new = jax.random.normal(jax.random.PRNGKey(2), (2, 9))
+    idx = jnp.asarray([0, 2])
+    carry = SegmentCarry(
+        z=carry.z.at[idx].set(z_new),
+        k=carry.k.at[idx].set(0),
+        Ks=carry.Ks.at[idx].set(jnp.asarray([4, 3])),
+        eps=carry.eps.at[idx].set(jnp.asarray([0.25, 1.0 / 3.0])),
+        first_stage=None)
+    for _ in range(3):
+        carry, fin = integ.solve_segment(_field, carry, 2)
+    assert bool(jnp.all(fin))
+    for j, (i, K) in enumerate(((0, 4), (2, 3))):
+        ref = integ.solve(_field, z_new[j][None],
+                          FixedGrid.over(0.0, 1.0, K), return_traj=False)
+        np.testing.assert_allclose(np.asarray(carry.z[i]),
+                                   np.asarray(ref[0]), rtol=1e-6, atol=1e-6)
+
+
+def test_make_segment_carry_empty_slots_stay_inert():
+    """Ks == 0 marks an empty slot: frozen state, counter pinned at 0, no
+    NaN/inf leaking from the padded eps."""
+    integ = Integrator(get_tableau("euler"), fused=True)
+    z0 = jnp.ones((3, 4))
+    carry = make_segment_carry(z0, jnp.asarray([2, 0, 3]), (0.0, 1.0))
+    assert np.all(np.isfinite(np.asarray(carry.eps)))
+    carry, fin = integ.solve_segment(_field, carry, 4)
+    assert np.asarray(fin).tolist() == [True, True, True]
+    np.testing.assert_array_equal(np.asarray(carry.z[1]), np.ones(4))
+    assert np.asarray(carry.k).tolist() == [2, 0, 3]
+
+
+# ---------------------------------------------------- compile accounting ----
+
+def test_one_kernel_trace_per_shape_seg_cell_across_refills():
+    """ACCEPTANCE: a full streaming replay — admissions, retirements,
+    partial occupancy, every refill pattern the trace produces — traces
+    the fused kernel exactly ONCE per (shape, seg) cell."""
+    xs = heterogeneous_requests(24, 8, seed=2)
+    trace = poisson_trace(xs, rate=0.3, seed=4)
+    ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, fused=True)
+    sched = InflightScheduler(_toy_model(fused=True), ecfg, slots=4, seg=2)
+    before = TRACE_COUNTS["fused_rk_update"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        rep = replay_scheduler(sched, trace)
+    assert len(rep.records) == 24
+    assert TRACE_COUNTS["fused_rk_update"] == before + 1, (
+        "occupancy/refill pattern leaked into the segment jit cell")
+    # a second shape opens a second (shape, seg) cell — exactly one more
+    sched.run(np.zeros((3, 5), np.float32) - 2.0)
+    assert TRACE_COUNTS["fused_rk_update"] == before + 2
+
+
+# -------------------------------------------------- scheduler vs engine ----
+
+def test_scheduler_outputs_and_nfe_match_engine():
+    """Same controller + buckets through both loops: request-for-request
+    equal K, equal NFE accounting, numerically matching outputs."""
+    xs = heterogeneous_requests(18, 8, seed=1)
+    ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, max_batch=6)
+    res_e = MultiRateEngine(_toy_model(), ecfg).run(xs)
+    res_s = InflightScheduler(_toy_model(), ecfg, slots=6, seg=2).run(xs)
+    assert [r.uid for r in res_s] == [r.uid for r in res_e]
+    for a, b in zip(res_e, res_s):
+        assert (a.K, a.nfe) == (b.K, b.nfe)
+        np.testing.assert_allclose(a.outputs, b.outputs, rtol=1e-6,
+                                   atol=1e-6)
+
+
+def test_scheduler_fixed_controller_and_hyper_solver_paths():
+    ecfg = EngineConfig(buckets=(4,), controller="fixed", fixed_K=4)
+    res = InflightScheduler(_toy_model(), ecfg, slots=3, seg=2).run(
+        heterogeneous_requests(5, 6, seed=3))
+    assert all(r.K == 4 and r.nfe == 4 for r in res)
+
+    hyper = EngineConfig(buckets=(2, 4, 8), tol=1e-1, solver="hyper_euler")
+    sched = InflightScheduler(_toy_model(g=lambda e, s, z, dz: 0.3 * z),
+                              hyper, slots=4, seg=2)
+    res = sched.run(heterogeneous_requests(6, 6, seed=4))
+    assert type(sched.controller).__name__ == "HypersolverResidualController"
+    assert all(r.nfe == r.K for r in res)  # probe fully reused
+
+    with pytest.raises(ValueError):
+        InflightScheduler(_toy_model(), hyper)  # hyper solver needs g
+
+
+def test_easy_request_escapes_a_busy_pool_early():
+    """THE motivating property: a K=2 request admitted while a K=16
+    request is mid-flight exits after its own segments instead of
+    waiting out the long request (the drain engine cannot do this when
+    both land in one batch)."""
+    ecfg = EngineConfig(buckets=(2, 16), tol=1e-2, max_batch=2)
+    sched = InflightScheduler(_toy_model(), ecfg, slots=2, seg=2)
+    hard = np.full((6,), 3.0, np.float32)
+    easy = np.full((6,), -2.0, np.float32)
+    uid_hard = sched.submit(hard)
+    done = sched.step()           # hard admitted, in flight
+    assert not done
+    uid_easy = sched.submit(easy)
+    finished = {}
+    while sched.pending:
+        for c in sched.step():
+            finished[c.uid] = c
+    assert finished[uid_hard].K == 16 and finished[uid_easy].K == 2
+    assert finished[uid_easy].t_done < finished[uid_hard].t_done
+    # and the drain engine, forced to pack them together, cannot:
+    eng = MultiRateEngine(_toy_model(), ecfg)
+    eng.submit(hard), eng.submit(easy)
+    eng.step()
+    assert eng.last_report.batches == 1
+    assert eng.last_report.finish_offset[1] == eng.last_report.finish_offset[2]
+
+
+def test_submit_future_t_refused_while_busy_allowed_when_idle():
+    """A future-t submit idle-jumps the clock only when nothing is in
+    flight; with work pending it is refused — jumping mid-flight would
+    bill in-flight requests for time no segment ran."""
+    ecfg = EngineConfig(buckets=(2, 4), tol=1e-2)
+    sched = InflightScheduler(_toy_model(), ecfg, slots=2, seg=1)
+    sched.submit(np.full((4,), 3.0, np.float32), t=5.0)  # idle: jump
+    assert sched.now == 5.0
+    sched.step()
+    assert sched.pending  # K=4 hard request still mid-flight at seg=1
+    with pytest.raises(ValueError, match="misattribute"):
+        sched.submit(np.full((4,), -2.0, np.float32), t=sched.now + 100.0)
+    while sched.pending:
+        sched.step()
+    assert sched.now < 100.0
+
+
+def test_scheduler_handles_mixed_shapes_and_queue_overflow():
+    """More requests than slots queue up and drain FIFO per shape; a
+    second shape gets its own pool without blocking the first."""
+    ecfg = EngineConfig(buckets=(2, 4), tol=1e-2)
+    sched = InflightScheduler(_toy_model(), ecfg, slots=2, seg=2)
+    uids_a = [sched.submit(np.full((3,), -2.0, np.float32))
+              for _ in range(5)]
+    uid_b = sched.submit(np.full((7,), -2.0, np.float32))
+    results = {}
+    while sched.pending:
+        for c in sched.step():
+            results[c.uid] = c
+    assert sorted(results) == sorted(uids_a + [uid_b])
+    assert results[uid_b].outputs.shape == (7,)
+    # FIFO within a shape: earlier submissions never finish after later ones
+    admits = [results[u].t_admit for u in uids_a]
+    assert admits == sorted(admits)
+
+
+def test_scheduler_same_shape_mixed_dtypes_get_separate_pools():
+    """Same-shape requests of a different dtype open their own pool
+    instead of silently casting into the first admission's storage —
+    the scheduler's explicit version of jit's dtype retrace boundary."""
+    ecfg = EngineConfig(buckets=(2, 4), tol=1e-2)
+    sched = InflightScheduler(_toy_model(), ecfg, slots=2, seg=2)
+    u32 = sched.submit(np.full((4,), -2.0, np.float32))
+    u64 = sched.submit(np.full((4,), -2.25, np.float64))
+    results = {}
+    while sched.pending:
+        for c in sched.step():
+            results[c.uid] = c
+    assert len(sched._pools) == 2
+    # fractional float64 value survived (no truncation through a latched
+    # pool dtype); outputs match the engine's on the same lone request
+    res_e = MultiRateEngine(_toy_model(), ecfg).run(
+        np.full((1, 4), -2.25, np.float64))
+    np.testing.assert_allclose(np.asarray(results[u64].outputs, np.float64),
+                               np.asarray(res_e[0].outputs, np.float64),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------- workloads ----
+
+def test_trace_generators_are_seeded_and_ordered():
+    xs = heterogeneous_requests(12, 4, seed=0)
+    t1 = poisson_trace(xs, rate=0.5, seed=7)
+    t2 = poisson_trace(xs, rate=0.5, seed=7)
+    assert [a.t for a in t1] == [a.t for a in t2]
+    assert all(a.t <= b.t for a, b in zip(t1, t1[1:]))
+    tb = bursty_trace(xs, burst=4, gap=10.0, seed=7)
+    assert len(tb) == 12
+    assert len({round(a.t, 6) for a in tb}) == 3  # 3 bursts, zero `within`
+    with pytest.raises(ValueError):
+        poisson_trace(xs, rate=0.0)
+
+
+def test_heterogeneous_requests_difficulty_split():
+    xs = heterogeneous_requests(10, 4, seed=0, interleave=False)
+    assert xs.shape == (10, 4) and xs.dtype == np.float32
+    assert xs[:5].mean() < -1.5 < 1.5 < xs[5:].mean()
+
+
+def test_replay_accounting_invariants():
+    """Both replays conserve requests and keep a sane time ordering:
+    submit <= admit <= done per record; waste = total - useful >= 0."""
+    xs = heterogeneous_requests(16, 6, seed=5)
+    trace = poisson_trace(xs, rate=0.3, seed=6)
+    ecfg = EngineConfig(buckets=(2, 4, 8), tol=5e-3, max_batch=4)
+    rep_e = replay_engine(MultiRateEngine(_toy_model(), ecfg), trace)
+    rep_s = replay_scheduler(
+        InflightScheduler(_toy_model(), ecfg, slots=4, seg=2), trace)
+    for rep in (rep_e, rep_s):
+        assert len(rep.records) == 16
+        for r in rep.records:
+            assert r.t_submit <= r.t_admit <= r.t_done
+        assert rep.waste_steps >= 0
+        assert rep.useful_steps == sum(r.K for r in rep.records)
+        stats = latency_stats(rep)
+        for key in ("p50_latency", "p99_latency", "p99_queue_wait",
+                    "throughput", "waste_steps", "waste_frac"):
+            assert key in stats
+        assert stats["p50_latency"] <= stats["p99_latency"]
+    # identical traffic + policy -> identical outputs across the loops
+    out_e = {r.uid: r.outputs for r in rep_e.records}
+    for r in rep_s.records:
+        np.testing.assert_allclose(r.outputs, out_e[r.uid], rtol=1e-6,
+                                   atol=1e-6)
+
+
+# --------------------------------------------------------- BENCH schema ----
+
+def _load_bench_run():
+    if REPO_ROOT not in sys.path:
+        sys.path.insert(0, REPO_ROOT)
+    import benchmarks.run as bench_run
+    return bench_run
+
+
+def test_bench_schema_check_passes_on_committed_files():
+    """benchmarks/run.py --check (the tier-1 CI gate) passes on the
+    committed BENCH_*.json trajectory files."""
+    bench_run = _load_bench_run()
+    assert bench_run.check_bench_files(REPO_ROOT) == []
+
+
+def test_bench_schema_check_catches_malformed_files(tmp_path):
+    bench_run = _load_bench_run()
+    errs = bench_run.check_bench_files(str(tmp_path))
+    assert len(errs) == len(bench_run.BENCH_REQUIRED)  # all missing
+    (tmp_path / "BENCH_kernels.json").write_text("{not json")
+    (tmp_path / "BENCH_serve.json").write_text("[]")
+    (tmp_path / "BENCH_scheduler.json").write_text(
+        '[{"bench": "scheduler", "p99_latency": 1, "waste_steps": 0}]')
+    errs = bench_run.check_bench_files(str(tmp_path))
+    assert any("malformed" in e for e in errs)
+    assert any("non-empty" in e for e in errs)
+    assert any("verdict" in e for e in errs)
+    # a corrupted scheduler file is an error STRING, not a crash
+    (tmp_path / "BENCH_scheduler.json").write_text("{not json")
+    errs = bench_run.check_bench_files(str(tmp_path))
+    assert any("BENCH_scheduler.json" in e and "malformed" in e
+               for e in errs)
+
+
+# ------------------------------------------------------- tier-2 sweep ----
+
+@pytest.mark.slow
+def test_scheduler_seg_slots_sweep_parity_and_latency():
+    """Tier-2: across (seg, slots) configs on a longer Poisson trace, the
+    scheduler keeps exact policy parity with the engine and its mean
+    queue wait stays at-or-below the drain loop's."""
+    xs = heterogeneous_requests(64, 8, seed=8)
+    trace = poisson_trace(xs, rate=0.25, seed=9)
+    ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, max_batch=8,
+                        fused=True)
+    rep_e = replay_engine(MultiRateEngine(_toy_model(fused=True), ecfg),
+                          trace)
+    out_e = {r.uid: r for r in rep_e.records}
+    wait_e = np.mean([r.queue_wait for r in rep_e.records])
+    for seg in (1, 2, 4):
+        for slots in (4, 8):
+            sched = InflightScheduler(_toy_model(fused=True), ecfg,
+                                      slots=slots, seg=seg)
+            rep_s = replay_scheduler(sched, trace)
+            assert len(rep_s.records) == 64
+            for r in rep_s.records:
+                assert r.K == out_e[r.uid].K
+                np.testing.assert_allclose(r.outputs, out_e[r.uid].outputs,
+                                           rtol=1e-6, atol=1e-6)
+            if slots == 8:
+                wait_s = np.mean([r.queue_wait for r in rep_s.records])
+                assert wait_s <= wait_e, (seg, slots, wait_s, wait_e)
