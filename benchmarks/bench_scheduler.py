@@ -19,21 +19,31 @@ fine-mesh reference is equal BY CONSTRUCTION (asserted per trace), and
 the comparison isolates scheduling: queue wait, p50/p99 latency,
 throughput, slot occupancy, masked-step waste.
 
+A second section (``sharded_rows``, run under 4 forced host devices in a
+subprocess) pits the single-device slot pool against the slot-axis-
+sharded pool (``InflightScheduler(mesh=)``) on hot Poisson traces past
+one pool's capacity: same policy, same agreement, n-fold the slots at
+the same sequential cost per segment.
+
 The JSON written to BENCH_scheduler.json carries one row per
 (loop, trace, config) plus a ``verdict`` row: ``inflight_wins_p99`` is
 True when the scheduler beats the engine's p99 latency at equal agreement
-on at least one seeded Poisson trace — the tracked serving-latency
-scoreboard (benchmarks/run.py --check enforces the row's presence).
+on at least one seeded Poisson trace, and ``sharded_pool_ok`` is True
+when the multi-device pool holds throughput at-or-above the single-device
+pool at equal agreement on every hot trace — the tracked serving
+scoreboards (benchmarks/run.py --check enforces both).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 if __name__ == "__main__":  # runnable as a script from anywhere
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, REPO_ROOT)
 
 import jax
 import jax.numpy as jnp
@@ -109,12 +119,9 @@ def run_trace(trace, xs, ecfg, solver, slots, seg, workload):
     sched = InflightScheduler(toy_classifier(solver), ecfg, slots=slots,
                               seg=seg)
     rep_s = replay_scheduler(sched, trace)
-    occupancy = (sched.total_occupied_steps / sched.total_slot_steps
-                 if sched.total_slot_steps else 0.0)
-    row_s = latency_stats(rep_s)
+    row_s = latency_stats(rep_s)   # occupancy rides in the shared summary
     row_s.update(bench="scheduler", mode="inflight", trace=workload,
-                 solver=solver, slots=slots, seg=seg,
-                 occupancy=round(occupancy, 4),
+                 solver=solver, slots=slots, seg=seg, devices=1,
                  agreement=round(_agreement(rep_s.records, ref_top), 4))
 
     # equal-K, numerically matching outputs: agreement must tie exactly
@@ -122,7 +129,98 @@ def run_trace(trace, xs, ecfg, solver, slots, seg, workload):
     return row_e, row_s
 
 
+# ------------------------------------------------- multi-device section ----
+
+def sharded_rows(budget: str = "small", n_devices: int = 4):
+    """Single- vs multi-device slot pool on identical hot Poisson traces.
+
+    Requires ``n_devices`` visible jax devices — ``main()`` runs this in a
+    subprocess with a forced host device count (the same pattern as the
+    debug-mesh tests), never in the importing process. The comparison the
+    ROADMAP's slot-sharding item calls for: a pool capped at what one chip
+    holds (``slots_per_dev``) vs the sharded pool holding
+    ``slots_per_dev * n_devices`` rows at the SAME sequential cost per
+    segment (the slot axis is the hardware-parallel one) — under load the
+    single pool queues and the sharded pool keeps admitting."""
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+
+    assert jax.device_count() >= n_devices, (
+        f"sharded_rows needs {n_devices} devices, found "
+        f"{jax.device_count()} — run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    n = {"tiny": 24, "small": 64, "full": 192}.get(budget, 64)
+    mesh = make_serving_mesh(n_devices)
+    ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, max_batch=8,
+                        solver="euler", fused=True)
+    slots_per_dev, seg = 8, 2
+    pairs = []
+    # hot Poisson traces: rate chosen past the single pool's capacity
+    # (~slots_per_dev * seg steps per stages*seg cost, discounted by
+    # probes + masked waste) so queueing separates the two pools
+    for seed in (3, 11):
+        xs = heterogeneous_requests(n, D_FEAT, seed=seed)
+        trace = poisson_trace(xs, rate=1.5, seed=seed + 100)
+        ref_top = reference_argmax(toy_classifier("euler"), xs)
+        pair = []
+        for devices, m in ((1, None), (n_devices, mesh)):
+            sched = InflightScheduler(
+                toy_classifier("euler"), ecfg,
+                slots=slots_per_dev * devices, seg=seg, mesh=m)
+            rep = replay_scheduler(sched, trace)
+            row = latency_stats(rep)
+            row.update(bench="scheduler", mode="inflight",
+                       trace=f"poisson_hot_seed{seed}", solver="euler",
+                       slots=slots_per_dev * devices, seg=seg,
+                       devices=devices,
+                       agreement=round(_agreement(rep.records, ref_top),
+                                       4))
+            pair.append(row)
+        # same controller + buckets through both pools: equal agreement
+        # is BY CONSTRUCTION, so the comparison isolates pool capacity
+        assert pair[0]["agreement"] == pair[1]["agreement"], pair
+        pairs.append(pair)
+    return pairs   # explicit (single, sharded) pairs — never re-zipped
+
+
+def _start_sharded_section(budget: str):
+    """Launch ``sharded_rows`` under a forced 4-device CPU host in a
+    subprocess (jax device topology is frozen at first init, so the
+    importing process cannot grow devices itself). Started BEFORE the
+    in-process trace loop — the two share nothing — and joined by
+    ``_join_sharded_section``."""
+    script = (
+        "import os, json, sys\n"
+        "os.environ['XLA_FLAGS'] = "
+        "'--xla_force_host_platform_device_count=4'\n"
+        f"sys.path.insert(0, {REPO_ROOT!r})\n"
+        "from benchmarks.bench_scheduler import sharded_rows\n"
+        f"print('SHARDED_ROWS=' + json.dumps(sharded_rows({budget!r}), "
+        "default=str))\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.Popen([sys.executable, "-c", script], env=env,
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True,
+                            cwd=REPO_ROOT)
+
+
+def _join_sharded_section(proc):
+    stdout, stderr = proc.communicate(timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError("sharded bench subprocess failed:\n"
+                           + (stdout + stderr)[-4000:])
+    line = [l for l in stdout.splitlines()
+            if l.startswith("SHARDED_ROWS=")][-1]
+    return json.loads(line[len("SHARDED_ROWS="):])
+
+
 def main(budget: str = "small", out_path: str = OUT_PATH):
+    # the multi-device section (4 forced host devices, subprocess) shares
+    # nothing with the in-process loops — overlap it with them
+    sh_proc = _start_sharded_section(budget)
     n = {"tiny": 32, "small": 96, "full": 256}.get(budget, 96)
     solver = "euler"
     ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, max_batch=8,
@@ -154,6 +252,10 @@ def main(budget: str = "small", out_path: str = OUT_PATH):
     pairs.append(run_trace(trace, xs, hyper_ecfg, "hyper_euler", slots,
                            seg, "poisson_hyper"))
 
+    # multi-device slot pool vs one chip, identical hot traces (4 forced
+    # host devices in a subprocess — see sharded_rows)
+    sh_pairs = _join_sharded_section(sh_proc)
+
     # verdict: does in-flight beat drain p99 at equal agreement on some
     # seeded Poisson trace? (explicit pairs — no positional row coupling)
     wins = []
@@ -168,10 +270,27 @@ def main(budget: str = "small", out_path: str = OUT_PATH):
                 "p99_inflight": row_s["p99_latency"],
                 "agreement": row_s["agreement"],
             })
-    rows = [r for pair in pairs for r in pair]
+    # sharded verdict: the multi-device pool must keep throughput at or
+    # above the single-device pool at equal agreement on EVERY hot trace
+    sh_wins, sh_ok = [], True
+    for single, multi in sh_pairs:
+        ok = (multi["agreement"] >= single["agreement"]
+              and multi["throughput"] >= single["throughput"])
+        sh_ok = sh_ok and ok
+        sh_wins.append({
+            "trace": multi["trace"], "devices": multi["devices"],
+            "throughput_single": single["throughput"],
+            "throughput_sharded": multi["throughput"],
+            "p99_single": single["p99_latency"],
+            "p99_sharded": multi["p99_latency"],
+            "agreement": multi["agreement"], "ok": ok,
+        })
+    rows = [r for pair in pairs for r in pair] \
+        + [r for pair in sh_pairs for r in pair]
     rows.append({
         "bench": "scheduler", "mode": "verdict",
         "inflight_wins_p99": bool(wins), "witnesses": wins[:4],
+        "sharded_pool_ok": bool(sh_ok), "sharded_witnesses": sh_wins[:4],
     })
     with open(out_path, "w") as fh:
         json.dump(rows, fh, indent=1, default=str)

@@ -52,7 +52,9 @@ REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_REQUIRED = {
     "BENCH_kernels.json": ("memory_passes_fused", "hbm_bytes_fused"),
     "BENCH_serve.json": ("mean_nfe", "mode"),
-    "BENCH_scheduler.json": ("p99_latency", "waste_steps"),
+    # 'devices' pins the multi-device slot-pool section (single- vs
+    # sharded-pool rows, bench_scheduler.sharded_rows)
+    "BENCH_scheduler.json": ("p99_latency", "waste_steps", "devices"),
 }
 
 
@@ -92,9 +94,16 @@ def check_bench_files(root: str = REPO_ROOT) -> list:
             if not verdicts:
                 errors.append(f"{name}: missing the verdict row "
                               "(inflight_wins_p99 scoreboard)")
-            elif "inflight_wins_p99" not in verdicts[0]:
-                errors.append(f"{name}: verdict row lacks "
-                              "'inflight_wins_p99'")
+            else:
+                for key in ("inflight_wins_p99", "sharded_pool_ok"):
+                    if key not in verdicts[0]:
+                        errors.append(f"{name}: verdict row lacks "
+                                      f"{key!r}")
+            if not any(isinstance(r, dict) and r.get("devices", 0) > 1
+                       for r in rows):
+                errors.append(f"{name}: no multi-device slot-pool row "
+                              "(devices > 1) — bench_scheduler's sharded "
+                              "section is missing")
     return errors
 
 

@@ -66,8 +66,12 @@ Controller/engine architecture (error-controlled multi-rate serving)::
           |                 per-sample-eps fused solves
     launch/scheduler.py   InflightScheduler: slot-pool continuous batching
           |                 over ``solve_segment`` (resumable SegmentCarry,
-          |                 admit/retire between segments)
-    launch/serve.py       CLI only (arch/solver/--g-ckpt/--inflight flags)
+          |                 admit/retire between segments); mesh= shards
+          |                 the SLOT axis (launch/mesh.py sharded_segment)
+    launch/serve.py       CLI only (arch/solver/--g-ckpt/--inflight/--mesh)
+
+User-facing docs: README.md (quickstart), docs/architecture.md (this
+diagram in prose), docs/serving.md (operator guide).
 """
 from __future__ import annotations
 
@@ -224,6 +228,12 @@ class SegmentCarry(NamedTuple):
     freeze mask keeps its rows inert at zero bookkeeping cost —
     occupancy is data, never a shape, which is what keeps one
     ``(shape, seg)`` compilation serving every admission pattern.
+
+    Every field is SLOT-MAJOR (leading axis B), deliberately: the carry
+    splits row-wise over a device mesh (``solve_segment(mesh=)`` /
+    ``launch/mesh.py::sharded_segment``), so a multi-device slot pool is
+    the same pytree sharded — nothing in the layout distinguishes one
+    chip's pool from a shard of a bigger one.
     """
 
     z: Pytree                       # per-slot state, leading slot axis B
@@ -497,7 +507,7 @@ class Integrator:
         return with_initial(z0, with_initial(z1, ys))
 
     def solve_segment(self, f, carry: SegmentCarry, seg: int, *,
-                      s0=0.0):
+                      s0=0.0, mesh=None, slot_axis: str = "data"):
         """Advance every slot of ``carry`` by ``seg`` depth steps and
         return ``(carry', finished)`` — the resumable core of in-flight
         continuous batching (launch/scheduler.py).
@@ -523,7 +533,23 @@ class Integrator:
         cell); ``s0`` is the shared span origin. A slot admitted with a
         probe ``first_stage`` row consumes it on its ``k == 0`` step
         only; the blend costs no extra vector-field evaluation (the
-        batch-wide ``f`` call is the one ``step`` would make anyway)."""
+        batch-wide ``f`` call is the one ``step`` would make anyway).
+
+        ``mesh`` shards the SLOT axis the way ``solve(mesh=)`` shards the
+        batch axis: every ``SegmentCarry`` field is slot-major, so the
+        carry splits row-wise over the mesh's ``slot_axis`` via
+        ``shard_map`` and the ``seg``-step depth scan runs local to each
+        shard — slots share nothing (occupancy, freeze masks, and step
+        sizes are all per-row data), so no collective is ever emitted and
+        one ``(shape, seg, mesh)`` compilation (one fused-kernel trace)
+        still serves every refill pattern. The slot count must divide the
+        axis size. ``f`` must be slot-local: anything it closes over
+        (model params) is replicated; per-slot conditioning must shard
+        WITH the carry — use ``launch/mesh.py::sharded_segment``, which
+        threads the conditioning rows through the same shard_map."""
+        if mesh is not None:
+            return self._solve_segment_sharded(f, carry, seg, s0, mesh,
+                                               slot_axis)
         z, k, Ks, eps, fs = carry
         k = jnp.asarray(k, jnp.int32)
         Ks = jnp.asarray(Ks, jnp.int32)
@@ -548,6 +574,53 @@ class Integrator:
 
         (z, k), _ = jax.lax.scan(body, (z, k), None, length=int(seg))
         return SegmentCarry(z, k, Ks, eps, fs), k >= Ks
+
+    def _solve_segment_sharded(self, f, carry, seg, s0, mesh, slot_axis,
+                               *, field_of=None, cond=None):
+        """Slot-parallel segment advance: shard every carry field over
+        ``slot_axis`` and run the local ``solve_segment`` per shard. Only
+        the fields the segment mutates (z, k) cross back through the
+        shard_map boundary — Ks/eps/first_stage pass through unchanged.
+
+        With ``field_of``/``cond`` (launch/mesh.py::sharded_segment),
+        the per-slot conditioning rows ``cond`` shard WITH the carry and
+        each shard's field is rebuilt as ``field_of(cond_local)``; ``f``
+        is ignored. Both entry points share this one plumbing so the
+        divisibility policy and the spec layout cannot diverge."""
+        from jax.experimental.shard_map import shard_map
+        P = jax.sharding.PartitionSpec
+        tmap = jax.tree_util.tree_map
+        bspec = P(slot_axis)
+        n = mesh.shape[slot_axis]
+        B = carry.k.shape[0]
+        if B % n:
+            raise ValueError(
+                f"slot count {B} does not divide the '{slot_axis}' mesh "
+                f"axis ({n}); size the pool as a multiple of the axis "
+                "(launch/scheduler.py slots=)")
+        z, k, Ks, eps, fs = carry
+        threaded = cond is not None
+        args = ([cond] if threaded else []) + [z, k, Ks, eps]
+        in_specs = ([bspec] if threaded else []) + \
+            [tmap(lambda _: bspec, z), bspec, bspec, bspec]
+        if fs is not None:
+            args.append(fs)
+            in_specs.append(tmap(lambda _: bspec, fs))
+
+        def body(*ops):
+            if threaded:
+                cond_, *ops = ops
+            z_, k_, Ks_, eps_, *fs_ = ops
+            local = SegmentCarry(z_, k_, Ks_, eps_,
+                                 fs_[0] if fs_ else None)
+            f_local = field_of(cond_) if threaded else f
+            out, fin = self.solve_segment(f_local, local, seg, s0=s0)
+            return out.z, out.k, fin
+
+        out_specs = (tmap(lambda _: bspec, z), bspec, bspec)
+        z2, k2, fin = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                                out_specs=out_specs, check_rep=False)(*args)
+        return SegmentCarry(z2, k2, Ks, eps, fs), fin
 
     def _solve_controlled(self, f, z0, grid, controller, return_traj,
                           checkpoint):

@@ -24,6 +24,21 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_serving_mesh(n_devices: int):
+    """Pure data-parallel serving mesh: ``n_devices`` chips on one 'data'
+    axis — the axis the in-flight slot pool shards over (there is no model
+    axis at inference; the depth scan is local per slot). This is what
+    ``launch/serve.py --mesh N`` builds."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if n_devices > jax.device_count():
+        raise ValueError(
+            f"--mesh {n_devices} asks for more devices than visible "
+            f"({jax.device_count()}); on CPU force virtual devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    return jax.make_mesh((n_devices,), ("data",))
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes the global batch dimension shards over."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
@@ -46,7 +61,8 @@ def sharded_solve(integ, f, z0, grid, *, mesh, **solve_kwargs):
 
     Thin policy layer over ``integ.solve(mesh=...)``: picks the batch axis
     from the mesh and checks divisibility up front (shard_map's own error
-    is about block shapes, not requests)."""
+    is about block shapes, not requests). The slot-axis sibling for the
+    in-flight scheduler's segment solve is ``sharded_segment`` below."""
     import jax.numpy as jnp
     axis = "data"
     B = jax.tree_util.tree_leaves(z0)[0].shape[0]
@@ -60,3 +76,29 @@ def sharded_solve(integ, f, z0, grid, *, mesh, **solve_kwargs):
                          f"ndim={jnp.ndim(grid.eps)}")
     return integ.solve(f, z0, grid, mesh=mesh, batch_axis=axis,
                        **solve_kwargs)
+
+
+def sharded_segment(integ, field_of, xs, carry, seg, *, mesh, s0=0.0,
+                    slot_axis: str = "data"):
+    """Slot-axis-sharded segment advance WITH per-slot conditioning: the
+    multi-device twin of ``Integrator.solve_segment(mesh=)`` for fields
+    that condition on the request input (``field_of(x)`` closures —
+    launch/engine.py DepthModel adapters).
+
+    ``Integrator.solve_segment(mesh=)`` shards the SegmentCarry rows but
+    treats whatever ``f`` closes over as replicated — correct for model
+    params, wrong for per-slot conditioning (a field closed over the FULL
+    ``xs`` rows would see B conditioning rows against B/n state rows
+    inside a shard). This helper threads ``xs`` through the same
+    ``shard_map``, so ``field_of`` is rebuilt per shard from exactly its
+    slots' conditioning rows. Returns ``(carry', finished)`` like
+    ``solve_segment``; everything stays slot-major and collective-free.
+
+    Thin wrapper over the one shard_map plumbing in
+    ``Integrator._solve_segment_sharded`` (shared with
+    ``solve_segment(mesh=)``, so the divisibility policy — a remedy-
+    naming error up front, like ``sharded_solve`` — and the spec layout
+    cannot diverge between the two entry points)."""
+    return integ._solve_segment_sharded(
+        None, carry, seg, s0, mesh, slot_axis, field_of=field_of,
+        cond=xs)

@@ -41,6 +41,23 @@ requests between *depth segments* of the ODE solve. The pieces:
     request exits after its own ~K/seg segments instead of waiting out
     the batch.
 
+Multi-device slot pools
+-----------------------
+
+Passing ``mesh=`` shards the SLOT axis over the mesh's data axis via
+``shard_map`` (``Integrator.solve_segment(mesh=)`` /
+``launch/mesh.py::sharded_segment``), the way ``Integrator.solve(mesh=)``
+shards the batch axis: each device owns ``slots / n_devices`` rows of the
+carry, the depth scan stays local, and no collective is ever emitted —
+slots share nothing. Admission remains ONE global FIFO queue feeding the
+global pool width; retire/refill between segments operates on the
+gathered ``k``/``Ks`` host rows exactly as on one device. Because
+occupancy is still data, one ``(shape, seg, mesh)`` jit cell (one
+fused-kernel trace) serves every refill pattern per device. On the
+virtual clock a segment's cost is batch-width-free, so sharding buys
+capacity: n devices hold n-fold the slots at the same sequential cost
+per tick.
+
 Virtual-cost clock
 ------------------
 
@@ -165,12 +182,29 @@ class _SlotPool:
             def embed(xs):
                 return m.embed(xs)
 
-            @jax.jit
-            def segment(xs, z, k, Ks, eps, fs):
-                carry = SegmentCarry(z, k, Ks, eps, fs)
-                carry, fin = integ.solve_segment(
-                    m.field_of(xs), carry, seg, s0=s0)
-                return carry.z, carry.k, fin
+            mesh = self.sched.mesh
+            if mesh is None:
+                @jax.jit
+                def segment(xs, z, k, Ks, eps, fs):
+                    carry = SegmentCarry(z, k, Ks, eps, fs)
+                    carry, fin = integ.solve_segment(
+                        m.field_of(xs), carry, seg, s0=s0)
+                    return carry.z, carry.k, fin
+            else:
+                # multi-device pool: the carry AND the per-slot
+                # conditioning rows shard over the mesh's slot axis; the
+                # depth scan stays local per shard (sharded_segment), so
+                # this is still ONE (shape, seg, mesh) jit cell — one
+                # fused-kernel trace — across every refill pattern.
+                from repro.launch.mesh import sharded_segment
+
+                @jax.jit
+                def segment(xs, z, k, Ks, eps, fs):
+                    carry = SegmentCarry(z, k, Ks, eps, fs)
+                    carry, fin = sharded_segment(
+                        integ, m.field_of, xs, carry, seg, mesh=mesh,
+                        s0=s0, slot_axis=self.sched.slot_axis)
+                    return carry.z, carry.k, fin
 
             @jax.jit
             def readout(xs, z):
@@ -302,17 +336,38 @@ class InflightScheduler:
     """Continuous-batching serving loop: submit as traffic arrives, call
     ``step()`` repeatedly; each step admits into free slots and advances
     every busy pool by one segment. See the module docstring for the
-    slot/segment model and the virtual-cost clock."""
+    slot/segment model and the virtual-cost clock.
+
+    ``mesh`` grows the pool past one chip: ``slots`` is the GLOBAL pool
+    width, sharded row-wise over the mesh's ``slot_axis`` (per-device
+    sub-pools of ``slots / axis_size`` rows) while admission stays one
+    global FIFO queue. Between segments, retire/refill operates on the
+    gathered per-slot ``k``/``Ks`` rows exactly as on one device — slot
+    state is data, so the host never needs to know which device holds
+    which slot — and the probe path is unchanged (one pool-width probe
+    cell on the default device). ``slots`` must be a multiple of the
+    axis size; checked here with a remedy-naming error."""
 
     def __init__(self, model: DepthModel,
                  engine_cfg: Optional[EngineConfig] = None,
-                 *, slots: int = 4, seg: int = 2):
+                 *, slots: int = 4, seg: int = 2, mesh=None,
+                 slot_axis: str = "data"):
         engine_cfg = engine_cfg or EngineConfig()
         model = prepare_model(model, engine_cfg)
         if seg < 1:
             raise ValueError(f"seg must be >= 1, got {seg}")
         if slots < 1:
             raise ValueError(f"slots must be >= 1, got {slots}")
+        if mesh is not None:
+            n = mesh.shape[slot_axis]
+            if slots % n:
+                raise ValueError(
+                    f"slots={slots} does not divide the '{slot_axis}' "
+                    f"mesh axis ({n}); the pool shards row-wise — size "
+                    "slots as a multiple of the axis (e.g. "
+                    f"slots={n * max(1, slots // n)})")
+        self.mesh = mesh
+        self.slot_axis = slot_axis
         self.model = model
         self.ecfg = engine_cfg
         self.slots = int(slots)

@@ -24,6 +24,11 @@ between segments. --arrival-trace poisson|bursty replays a seeded
 streaming arrival trace (--arrival-rate requests per cost unit) through
 the scheduler and reports p50/p99 latency + queue wait + masked-step
 waste (launch/workload.py); ``none`` submits the whole batch at once.
+--mesh N shards the slot pool over N devices ('data' axis, --slots
+global rows split row-wise; launch/mesh.py::make_serving_mesh) — one
+admission queue, per-device sub-pools, no collectives.
+
+Full flag reference with worked examples: docs/serving.md.
 """
 from __future__ import annotations
 
@@ -83,7 +88,19 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=0.25,
                     help="poisson arrival rate / bursty burst pacing, in "
                          "requests per virtual cost unit")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard the slot pool over N devices (--inflight "
+                         "only): --slots is the GLOBAL pool width and must "
+                         "be a multiple of N; on CPU force virtual devices "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N")
     args = ap.parse_args()
+    if args.mesh and not args.inflight:
+        # same policy as --g-ckpt: a silently ignored flag would let a
+        # run labeled multi-device report single-device numbers
+        raise SystemExit("--mesh shards the in-flight slot pool; pass "
+                         "--inflight with it (the drain engine has no "
+                         "slot pool to shard)")
 
     cfg = get(args.arch)
     if args.reduced:
@@ -137,8 +154,12 @@ def main():
         if args.arrival_trace != "none" and args.arrival_rate <= 0:
             raise SystemExit("--arrival-rate must be > 0 for "
                              f"--arrival-trace {args.arrival_trace}")
+        mesh = None
+        if args.mesh:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(args.mesh)
         sched = InflightScheduler(model, ecfg, slots=args.slots,
-                                  seg=args.seg)
+                                  seg=args.seg, mesh=mesh)
         xs = np.asarray(prompt)
         t0 = time.time()
         if args.arrival_trace == "none":

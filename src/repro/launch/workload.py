@@ -111,7 +111,12 @@ class RequestRecord:
 
 @dataclasses.dataclass(frozen=True)
 class TraceReport:
-    """One trace replay: per-request records + aggregate work accounting."""
+    """One trace replay: per-request records + aggregate work accounting.
+
+    ``occupied_steps`` counts slot/sample-steps that belonged to an
+    admitted request at segment start (the in-flight scheduler's pool
+    utilization; for the drain engine every scanned row was admitted, so
+    it equals ``total_steps``)."""
 
     records: Tuple[RequestRecord, ...]
     total_cost: float        # sequential evals spent, arrivals -> drained
@@ -119,10 +124,17 @@ class TraceReport:
     useful_steps: int        # sample-steps that advanced a live request
     total_steps: int         # sample-steps computed (incl. frozen/empty)
     makespan: float          # first arrival -> last completion
+    occupied_steps: int = 0  # slot-steps owned by an admitted request
 
     @property
     def waste_steps(self) -> int:
         return self.total_steps - self.useful_steps
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of computed slot-steps owned by an admitted request."""
+        return (self.occupied_steps / self.total_steps
+                if self.total_steps else 0.0)
 
 
 def latency_stats(report: TraceReport) -> Dict[str, float]:
@@ -135,7 +147,8 @@ def latency_stats(report: TraceReport) -> Dict[str, float]:
                 "p99_queue_wait": 0.0, "mean_nfe": 0.0, "throughput": 0.0,
                 "total_cost": round(report.total_cost, 1),
                 "probe_cost": round(report.probe_cost, 1),
-                "useful_steps": 0, "waste_steps": 0, "waste_frac": 0.0}
+                "useful_steps": 0, "waste_steps": 0, "waste_frac": 0.0,
+                "occupancy": 0.0}
     lat = np.asarray([r.latency for r in report.records])
     wait = np.asarray([r.queue_wait for r in report.records])
     nfe = np.asarray([r.nfe for r in report.records])
@@ -157,6 +170,7 @@ def latency_stats(report: TraceReport) -> Dict[str, float]:
         "useful_steps": int(report.useful_steps),
         "waste_steps": int(report.waste_steps),
         "waste_frac": round(waste_frac, 4),
+        "occupancy": round(report.occupancy, 4),
     }
 
 
@@ -197,9 +211,12 @@ def replay_engine(engine, trace: Sequence[Arrival]) -> TraceReport:
                 outputs=c.outputs))
     t0 = trace[0].t if trace else 0.0
     t_end = max((r.t_done for r in records), default=t0)
+    # every scanned row of a drain was an admitted request, so the
+    # engine's occupancy is total_steps by construction
     return TraceReport(records=tuple(records), total_cost=total_cost,
                        probe_cost=probe_cost, useful_steps=useful,
-                       total_steps=total, makespan=t_end - t0)
+                       total_steps=total, makespan=t_end - t0,
+                       occupied_steps=total)
 
 
 def replay_scheduler(sched, trace: Sequence[Arrival]) -> TraceReport:
@@ -227,4 +244,5 @@ def replay_scheduler(sched, trace: Sequence[Arrival]) -> TraceReport:
         records=tuple(records), total_cost=sched.total_cost,
         probe_cost=sched.total_probe_cost,
         useful_steps=sched.total_useful_steps,
-        total_steps=sched.total_slot_steps, makespan=t_end - t0)
+        total_steps=sched.total_slot_steps, makespan=t_end - t0,
+        occupied_steps=sched.total_occupied_steps)

@@ -1,0 +1,165 @@
+"""Docs link-and-freshness gate (tier-1): docs rot fails CI.
+
+Three kinds of pin over README.md + docs/*.md:
+
+  * python snippets actually run / their ``repro`` imports resolve —
+    the README quickstart is executed, not pattern-matched;
+  * every path-like cross-reference (``launch/scheduler.py``,
+    ``docs/serving.md``, ``BENCH_*.json``) names a file that exists;
+  * the flag tables in docs/serving.md and the argparse surface of
+    ``launch/serve.py`` agree in BOTH directions — a flag added to the
+    CLI without docs, or documented without existing, is a failure.
+"""
+import importlib
+import os
+import re
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+README = os.path.join(REPO_ROOT, "README.md")
+DOCS_DIR = os.path.join(REPO_ROOT, "docs")
+SERVE_PY = os.path.join(REPO_ROOT, "src", "repro", "launch", "serve.py")
+
+
+def _doc_files():
+    docs = [README] + sorted(
+        os.path.join(DOCS_DIR, f) for f in os.listdir(DOCS_DIR)
+        if f.endswith(".md"))
+    assert len(docs) >= 3, "README.md + docs/{architecture,serving}.md"
+    return docs
+
+
+def _read(path):
+    with open(path) as fh:
+        return fh.read()
+
+
+def _fenced(text, lang):
+    """Fenced code blocks tagged ``lang``."""
+    return re.findall(rf"```{lang}\n(.*?)```", text, re.DOTALL)
+
+
+# ------------------------------------------------------ snippets run ----
+
+def test_readme_quickstart_executes():
+    """Every ```python block in the README is a RUNNABLE snippet —
+    executed here in one shared namespace, so a renamed symbol or a
+    changed signature fails CI, not a reader."""
+    blocks = _fenced(_read(README), "python")
+    assert blocks, "README lost its python quickstart"
+    ns = {}
+    for block in blocks:
+        exec(compile(block, README, "exec"), ns)  # noqa: S102
+
+
+@pytest.mark.parametrize("path", _doc_files(),
+                         ids=[os.path.basename(p) for p in _doc_files()])
+def test_snippet_imports_resolve(path):
+    """``from repro.x import y`` / ``import repro.x`` lines inside any
+    python snippet must resolve against the live package."""
+    for block in _fenced(_read(path), "python"):
+        for line in block.splitlines():
+            m = re.match(r"\s*from\s+(repro[\w.]*)\s+import\s+(.+)", line)
+            if m:
+                mod = importlib.import_module(m.group(1))
+                for name in m.group(2).split(","):
+                    name = name.strip().split(" as ")[0].strip("()")
+                    if name:
+                        assert hasattr(mod, name), (path, line)
+                continue
+            m = re.match(r"\s*import\s+(repro[\w.]*)", line)
+            if m:
+                importlib.import_module(m.group(1))
+
+
+def test_dotted_module_references_import():
+    """Backticked/CLI module paths (``repro.launch.serve``,
+    ``benchmarks.run``) must import — a moved module invalidates every
+    command line that names it."""
+    if REPO_ROOT not in sys.path:
+        sys.path.insert(0, REPO_ROOT)
+    for path in _doc_files():
+        text = _read(path)
+        for mod in set(re.findall(r"\b(repro(?:\.[a-z_0-9]+)+)\b", text)):
+            importlib.import_module(mod)
+        for mod in set(re.findall(r"\b(benchmarks\.[a-z_0-9]+)\b", text)):
+            importlib.import_module(mod)
+
+
+# ----------------------------------------------------- path freshness ----
+
+# path-like tokens are checked when they contain a separator (bare file
+# names like ``ops.py`` carry no unambiguous location); resolution tries
+# the repo root, src/, and src/repro/ prefixes
+_PATH_RE = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|md|json)\b")
+
+
+def _resolves(ref):
+    for base in ("", "src", os.path.join("src", "repro")):
+        if os.path.exists(os.path.join(REPO_ROOT, base, ref)):
+            return True
+    return False
+
+
+@pytest.mark.parametrize("path", _doc_files(),
+                         ids=[os.path.basename(p) for p in _doc_files()])
+def test_path_references_exist(path):
+    text = _read(path)
+    missing = []
+    for ref in set(_PATH_RE.findall(text)):
+        ref = ref.split("::")[0]
+        if "/" not in ref or "*" in ref:
+            continue
+        if not _resolves(ref):
+            missing.append(ref)
+    assert not missing, (
+        f"{os.path.basename(path)} references files that do not exist "
+        f"(moved/renamed without a docs update?): {sorted(missing)}")
+
+
+def test_bench_wildcard_targets_exist():
+    """``BENCH_*.json`` in the docs is a real glob at the repo root."""
+    import glob
+    assert glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json"))
+
+
+# ------------------------------------------------------ flag freshness ----
+
+# flags that are legitimately not launch/serve.py's (other CLIs, env)
+_FLAG_ALLOW = {
+    "--check", "--budget", "--only",           # benchmarks/run.py
+    "--out",                                   # bench_* scripts
+    "--xla_force_host_platform_device_count",  # XLA_FLAGS env
+}
+
+
+def _serve_flags():
+    flags = set(re.findall(r'add_argument\(\s*"(--[a-z][a-z0-9-]*)"',
+                           _read(SERVE_PY)))
+    assert flags, "could not parse launch/serve.py's argparse surface"
+    return flags
+
+
+def test_documented_flags_exist():
+    """Every ``--flag`` token in README/docs names a real CLI flag."""
+    declared = _serve_flags() | _FLAG_ALLOW
+    for path in _doc_files():
+        used = set(re.findall(r"--[a-z][a-z0-9_-]*", _read(path)))
+        unknown = {u for u in used
+                   if not any(u == d or u.startswith(d + "=")
+                              for d in declared)}
+        assert not unknown, (
+            f"{os.path.basename(path)} documents flags that no CLI "
+            f"declares: {sorted(unknown)}")
+
+
+def test_serve_flags_are_documented():
+    """The reverse direction: every flag launch/serve.py declares must
+    appear in docs/serving.md (the operator guide is complete)."""
+    serving = _read(os.path.join(DOCS_DIR, "serving.md"))
+    undocumented = {f for f in _serve_flags() if f"`{f}`" not in serving}
+    assert not undocumented, (
+        "launch/serve.py flags missing from docs/serving.md: "
+        f"{sorted(undocumented)}")

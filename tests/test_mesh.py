@@ -57,6 +57,59 @@ def test_sharded_solve_rejects_bad_eps_rank():
         sharded_solve(integ, _field, z0, bad, mesh=_StubMesh(n_data=3))
 
 
+def test_solve_segment_rejects_indivisible_slot_count():
+    """PINNED (mirroring the batch-axis decision): a slot pool the mesh
+    axis cannot split row-wise is a CLEAR ERROR naming the remedy, raised
+    before any shard_map/device work happens."""
+    from repro.core import make_segment_carry
+
+    integ = Integrator(get_tableau("euler"))
+    carry = make_segment_carry(jnp.ones((8, 4)), jnp.full((8,), 2),
+                               (0.0, 1.0))  # 8 slots % 3 != 0
+    with pytest.raises(ValueError, match="does not divide"):
+        integ.solve_segment(_field, carry, 2, mesh=_StubMesh(n_data=3))
+
+
+def test_sharded_segment_rejects_indivisible_slot_count():
+    """The conditioning-threading helper hits the same pre-dispatch check."""
+    from repro.core import make_segment_carry
+    from repro.launch.mesh import sharded_segment
+
+    integ = Integrator(get_tableau("euler"))
+    carry = make_segment_carry(jnp.ones((5, 4)), jnp.full((5,), 2),
+                               (0.0, 1.0))
+    with pytest.raises(ValueError, match="does not divide"):
+        sharded_segment(integ, lambda x: _field, jnp.ones((5, 4)), carry,
+                        2, mesh=_StubMesh(n_data=2))
+
+
+def test_inflight_scheduler_rejects_indivisible_slots():
+    """InflightScheduler(mesh=) validates the GLOBAL pool width against
+    the slot axis at construction — before any queue state exists."""
+    from repro.launch.engine import DepthModel, EngineConfig
+    from repro.launch.scheduler import InflightScheduler
+
+    model = DepthModel(embed=lambda x: x, field_of=lambda x: _field,
+                       readout=lambda x, zT: zT,
+                       integ=Integrator(get_tableau("euler")))
+    with pytest.raises(ValueError, match="does not divide"):
+        InflightScheduler(model, EngineConfig(), slots=5, seg=2,
+                          mesh=_StubMesh(n_data=3))
+
+
+def test_make_serving_mesh_rejects_oversubscription():
+    """--mesh N beyond the visible device count is a clear error naming
+    the XLA_FLAGS remedy, not an opaque make_mesh failure."""
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+
+    with pytest.raises(ValueError, match="XLA_FLAGS"):
+        make_serving_mesh(jax.device_count() + 1)
+    with pytest.raises(ValueError, match=">= 1"):
+        make_serving_mesh(0)
+
+
 def test_batch_axes_policy():
     assert batch_axes(_StubMesh()) == ("data",)
 

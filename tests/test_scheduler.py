@@ -4,14 +4,21 @@
 (launch/workload.py), and the BENCH schema gate (benchmarks/run.py
 --check).
 
-The two acceptance pins:
+The acceptance pins:
   * segment-by-segment == one ``solve_multirate`` call (fp32 allclose),
     mixed-K, with and without a hypersolver correction;
   * ONE fused-kernel trace per (shape, seg) cell across every
-    occupancy/refill pattern a streaming trace produces.
+    occupancy/refill pattern a streaming trace produces;
+  * the slot-axis-sharded pool (``solve_segment(mesh=)`` /
+    ``InflightScheduler(mesh=)``) reproduces the single-device results
+    bit-for-bit on a forced 4-device CPU mesh, still one kernel trace
+    per (shape, seg, mesh) cell (subprocess — the main test process
+    keeps one device).
 """
 import os
+import subprocess
 import sys
+import textwrap
 import warnings
 
 import jax
@@ -258,6 +265,120 @@ def test_scheduler_same_shape_mixed_dtypes_get_separate_pools():
     np.testing.assert_allclose(np.asarray(results[u64].outputs, np.float64),
                                np.asarray(res_e[0].outputs, np.float64),
                                rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------- sharded slot pools ----
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import warnings
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import Integrator, get_tableau, make_segment_carry
+    from repro.kernels.hyper_step.ops import TRACE_COUNTS
+    from repro.launch.engine import DepthModel, EngineConfig
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.scheduler import InflightScheduler
+    from repro.launch.workload import (
+        heterogeneous_requests, latency_stats, poisson_trace,
+        replay_scheduler,
+    )
+
+    assert jax.device_count() == 4, jax.device_count()
+    mesh = make_serving_mesh(4)
+    f = lambda s, z: -z * jax.nn.softplus(jnp.mean(z, -1, keepdims=True))
+    G = lambda eps, s, z, dz: 0.25 * z + 0.1 * dz
+
+    # ACCEPTANCE: solve_segment(mesh=) segment-by-segment == one
+    # solve_multirate call, fp32, with and without a correction
+    for g in (None, G):
+        integ = Integrator(get_tableau("heun"), g=g, fused=True)
+        z0 = jax.random.normal(jax.random.PRNGKey(0), (8, 17))
+        Ks = jnp.asarray([1, 2, 5, 8, 3, 4, 8, 2], jnp.int32)
+        fs = f(0.0, z0)
+        ref = integ.solve_multirate(f, z0, (0.0, 1.0), Ks, 8,
+                                    first_stage=fs)
+        carry = make_segment_carry(z0, Ks, (0.0, 1.0), first_stage=fs)
+        fin = None
+        for _ in range(4):
+            carry, fin = integ.solve_segment(f, carry, 2, mesh=mesh)
+        assert bool(jnp.all(fin))
+        np.testing.assert_allclose(np.asarray(carry.z), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+    print("SHARDED_SEGMENT_PARITY_OK")
+
+    # a slot count the mesh axis cannot split raises the clear error
+    bad = make_segment_carry(jnp.ones((6, 4)), jnp.asarray([2] * 6),
+                             (0.0, 1.0))
+    try:
+        Integrator(get_tableau("euler")).solve_segment(f, bad, 2,
+                                                       mesh=mesh)
+    except ValueError as e:
+        assert "does not divide" in str(e), e
+        print("SHARDED_SEGMENT_DIVISIBILITY_OK")
+
+    # sharded pool replay == single-device pool replay, request for
+    # request, and ONE fused-kernel trace for the (shape, seg, mesh)
+    # cell across every refill pattern the trace produces
+    def field_of(x):
+        k = jax.nn.softplus(jnp.mean(x, axis=-1, keepdims=True))
+        return lambda s, z: -z * k
+
+    def model():
+        return DepthModel(
+            embed=lambda x: x + 0.0, field_of=field_of,
+            readout=lambda x, zT: zT,
+            integ=Integrator(get_tableau("euler"), fused=True))
+
+    ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, fused=True)
+    xs = heterogeneous_requests(24, 8, seed=2)
+    trace = poisson_trace(xs, rate=0.5, seed=4)
+    rep_1 = replay_scheduler(
+        InflightScheduler(model(), ecfg, slots=8, seg=2), trace)
+    before = TRACE_COUNTS["fused_rk_update"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        rep_4 = replay_scheduler(
+            InflightScheduler(model(), ecfg, slots=8, seg=2, mesh=mesh),
+            trace)
+    assert TRACE_COUNTS["fused_rk_update"] == before + 1, (
+        "refill pattern leaked into the sharded (shape, seg, mesh) cell")
+    assert len(rep_4.records) == 24
+    out_1 = {r.uid: r for r in rep_1.records}
+    for r in rep_4.records:
+        assert r.K == out_1[r.uid].K
+        assert r.nfe == out_1[r.uid].nfe
+        np.testing.assert_allclose(r.outputs, out_1[r.uid].outputs,
+                                   rtol=1e-6, atol=1e-6)
+    # equal global slots -> the virtual clock ticks identically
+    s1, s4 = latency_stats(rep_1), latency_stats(rep_4)
+    assert s1 == s4, (s1, s4)
+    print("SHARDED_POOL_REPLAY_OK")
+""")
+
+
+def test_sharded_slot_pool_debug_mesh_subprocess():
+    """ACCEPTANCE: on a forced 4-device CPU mesh, ``solve_segment(mesh=)``
+    keeps exact parity with ``solve_multirate``, the sharded scheduler
+    reproduces the single-device replay request-for-request, one kernel
+    trace serves the (shape, seg, mesh) cell across refills, and the
+    indivisible slot count raises the clear error (subprocess — the main
+    test process keeps one device)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600,
+                          cwd=REPO_ROOT)
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, out[-4000:]
+    for marker in ("SHARDED_SEGMENT_PARITY_OK",
+                   "SHARDED_SEGMENT_DIVISIBILITY_OK",
+                   "SHARDED_POOL_REPLAY_OK"):
+        assert marker in out, (marker, out[-4000:])
 
 
 # ---------------------------------------------------------- workloads ----
