@@ -25,6 +25,13 @@ sharded pool (``InflightScheduler(mesh=)``) on hot Poisson traces past
 one pool's capacity: same policy, same agreement, n-fold the slots at
 the same sequential cost per segment.
 
+A third section (``oracle_rows``) replays the same workload on the
+roofline cost oracle (``launch/oracle.py``): completions priced in
+predicted device-us of a qwen3_8b decode cell instead of sequential
+field evals, plus the scheduler-knob autotune verdicts
+(``launch/autotune.py``, persisted to ``artifacts/tuned/``). Every row
+carries ``cost_unit`` so the two clocks are never cross-compared.
+
 The JSON written to BENCH_scheduler.json carries one row per
 (loop, trace, config) plus a ``verdict`` row: ``inflight_wins_p99`` is
 True when the scheduler beats the engine's p99 latency at equal agreement
@@ -49,45 +56,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FixedGrid, Integrator, get_tableau
+from repro.core import FixedGrid, Integrator
 from repro.launch.engine import DepthModel, EngineConfig, MultiRateEngine
 from repro.launch.scheduler import InflightScheduler
 from repro.launch.workload import (
     bursty_trace, heterogeneous_requests, latency_stats, poisson_trace,
-    replay_engine, replay_scheduler,
+    replay_engine, replay_scheduler, toy_classifier,
 )
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_scheduler.json")
 
-D_FEAT = 32
+D_FEAT = 32          # toy_classifier's input width (launch/workload.py)
 N_CLASSES = 10
-
-
-def toy_classifier(solver: str = "euler", fused: bool = True) -> DepthModel:
-    """Deterministic toy servable classifier: stiffness (difficulty) is
-    driven by the input mean through a softplus, the readout is a fixed
-    seeded linear head — heavy enough to have a real pareto, light enough
-    to replay hundreds of requests in seconds."""
-    W = np.asarray(jax.random.normal(jax.random.PRNGKey(7),
-                                     (D_FEAT, N_CLASSES)) / np.sqrt(D_FEAT))
-
-    def field_of(x):
-        k = jax.nn.softplus(jnp.mean(x, axis=-1, keepdims=True))
-        return lambda s, z: -z * k
-
-    g = None
-    if solver.startswith("hyper_"):
-        # toy low-order defect model, enough to exercise the residual
-        # controller + fused correction path end to end
-        g = lambda eps, s, z, dz: 0.3 * z + 0.1 * dz
-    base = solver[len("hyper_"):] if solver.startswith("hyper_") else solver
-    return DepthModel(
-        embed=lambda x: x + 0.0,
-        field_of=field_of,
-        readout=lambda x, zT: zT @ jnp.asarray(W),
-        integ=Integrator(tableau=get_tableau(base), g=g, fused=fused),
-    )
 
 
 def reference_argmax(model: DepthModel, xs: np.ndarray) -> np.ndarray:
@@ -184,6 +165,62 @@ def sharded_rows(budget: str = "small", n_devices: int = 4):
     return pairs   # explicit (single, sharded) pairs — never re-zipped
 
 
+# ------------------------------------------------ roofline-oracle section ----
+
+def oracle_rows(budget: str = "small"):
+    """The roofline-oracle clock section: the same toy workload replayed
+    through BOTH loops with completions stamped in predicted device-us
+    (``launch/oracle.py::RooflineOracle`` pricing a qwen3_8b decode
+    cell), plus the per-cell scheduler-knob autotune verdicts
+    (``launch/autotune.py``) whose chosen configs persist to
+    ``artifacts/tuned/`` — ``benchmarks/run.py --check`` fails if those
+    files drift from the verdict rows here."""
+    from repro.configs import get
+    from repro.launch.autotune import TUNE_CELLS, autotune_cell, save_tuned
+    from repro.launch.oracle import RooflineOracle
+
+    n = {"tiny": 16, "small": 48, "full": 128}.get(budget, 48)
+    solver = "euler"
+    ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, max_batch=8,
+                        solver=solver, fused=True)
+    slots, seg = 8, 2
+    oracle = RooflineOracle(get("qwen3_8b"), ctx=4096)
+    # same relative load as the sequential poisson_seed3 trace: the rate
+    # converts from per-field-eval to per-device-us via the pool's step
+    # price, so the two sections stress the loops identically and only
+    # the clock differs
+    rate = 0.25 / oracle.step_time(slots)
+    xs = heterogeneous_requests(n, D_FEAT, seed=3)
+    trace = poisson_trace(xs, rate=rate, seed=103)
+    ref_top = reference_argmax(toy_classifier(solver), xs)
+
+    eng = MultiRateEngine(toy_classifier(solver), ecfg, oracle=oracle)
+    rep_e = replay_engine(eng, trace)
+    row_e = latency_stats(rep_e)
+    row_e.update(bench="scheduler", mode="engine", trace="poisson_oracle",
+                 clock="roofline", solver=solver, max_batch=ecfg.max_batch,
+                 agreement=round(_agreement(rep_e.records, ref_top), 4))
+
+    sched = InflightScheduler(toy_classifier(solver), ecfg, slots=slots,
+                              seg=seg, oracle=oracle)
+    rep_s = replay_scheduler(sched, trace)
+    row_s = latency_stats(rep_s)
+    row_s.update(bench="scheduler", mode="inflight", trace="poisson_oracle",
+                 clock="roofline", solver=solver, slots=slots, seg=seg,
+                 devices=1,
+                 agreement=round(_agreement(rep_s.records, ref_top), 4))
+    assert row_e["agreement"] == row_s["agreement"], (row_e, row_s)
+
+    # knob autotune per serving cell; the full hillclimb log lives in
+    # artifacts/tuned/<cell>.json, the BENCH row carries the verdict
+    tuner_rows = []
+    for spec in TUNE_CELLS:
+        res = autotune_cell(spec, budget=budget)
+        save_tuned(res, os.path.join(REPO_ROOT, "artifacts", "tuned"))
+        tuner_rows.append({k: v for k, v in res.items() if k != "log"})
+    return [row_e, row_s] + tuner_rows
+
+
 def _start_sharded_section(budget: str):
     """Launch ``sharded_rows`` under a forced 4-device CPU host in a
     subprocess (jax device topology is frozen at first init, so the
@@ -252,6 +289,9 @@ def main(budget: str = "small", out_path: str = OUT_PATH):
     pairs.append(run_trace(trace, xs, hyper_ecfg, "hyper_euler", slots,
                            seg, "poisson_hyper"))
 
+    # roofline-oracle clock section + scheduler-knob autotune verdicts
+    o_rows = oracle_rows(budget)
+
     # multi-device slot pool vs one chip, identical hot traces (4 forced
     # host devices in a subprocess — see sharded_rows)
     sh_pairs = _join_sharded_section(sh_proc)
@@ -286,6 +326,7 @@ def main(budget: str = "small", out_path: str = OUT_PATH):
             "agreement": multi["agreement"], "ok": ok,
         })
     rows = [r for pair in pairs for r in pair] \
+        + o_rows \
         + [r for pair in sh_pairs for r in pair]
     rows.append({
         "bench": "scheduler", "mode": "verdict",

@@ -53,8 +53,10 @@ BENCH_REQUIRED = {
     "BENCH_kernels.json": ("memory_passes_fused", "hbm_bytes_fused"),
     "BENCH_serve.json": ("mean_nfe", "mode"),
     # 'devices' pins the multi-device slot-pool section (single- vs
-    # sharded-pool rows, bench_scheduler.sharded_rows)
-    "BENCH_scheduler.json": ("p99_latency", "waste_steps", "devices"),
+    # sharded-pool rows, bench_scheduler.sharded_rows); 'cost_unit' pins
+    # the clock tag every replay row must carry since the oracle refactor
+    "BENCH_scheduler.json": ("p99_latency", "waste_steps", "devices",
+                             "cost_unit"),
 }
 
 
@@ -104,6 +106,49 @@ def check_bench_files(root: str = REPO_ROOT) -> list:
                 errors.append(f"{name}: no multi-device slot-pool row "
                               "(devices > 1) — bench_scheduler's sharded "
                               "section is missing")
+            errors.extend(_check_oracle_section(name, rows, root))
+    return errors
+
+
+def _check_oracle_section(name: str, rows: list, root: str) -> list:
+    """Scheduler-bench oracle-section invariants: a roofline-clock row
+    must exist (cost_unit='device_us'), tuner verdict rows must exist,
+    and each tuner row's chosen knobs must match the persisted config in
+    artifacts/tuned/<cell>.json — a stale tuned config (someone re-ran
+    the autotuner without regenerating the bench, or vice versa) fails
+    here instead of silently shipping two disagreeing verdicts."""
+    errors = []
+    if not any(isinstance(r, dict) and r.get("cost_unit") == "device_us"
+               for r in rows):
+        errors.append(f"{name}: no roofline-oracle row "
+                      "(cost_unit='device_us') — bench_scheduler's "
+                      "oracle section is missing")
+    tuner_rows = [r for r in rows if isinstance(r, dict)
+                  and r.get("mode") == "tuner"]
+    if not tuner_rows:
+        errors.append(f"{name}: no tuner verdict rows (mode='tuner') — "
+                      "run python -m repro.launch.autotune or regenerate "
+                      "the bench")
+    for r in tuner_rows:
+        cell = r.get("cell", "?")
+        path = os.path.join(root, "artifacts", "tuned", f"{cell}.json")
+        if not os.path.exists(path):
+            errors.append(f"{name}: tuner row {cell!r} has no persisted "
+                          f"config at artifacts/tuned/{cell}.json")
+            continue
+        try:
+            with open(path) as fh:
+                tuned = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"artifacts/tuned/{cell}.json: unreadable/"
+                          f"malformed JSON ({e})")
+            continue
+        if tuned.get("chosen") != r.get("chosen"):
+            errors.append(
+                f"artifacts/tuned/{cell}.json is stale relative to the "
+                f"tuner verdict in {name}: chosen {tuned.get('chosen')} "
+                f"vs {r.get('chosen')} — re-run the autotune sweep and "
+                "regenerate the bench together")
     return errors
 
 

@@ -254,12 +254,14 @@ def probe_net_nfe(controller) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class StepReport:
-    """Virtual-cost accounting for one engine drain, in SEQUENTIAL
-    vector-field evaluations (the unit a batch-parallel accelerator
-    serializes on): a K-step scan of an s-stage tableau costs s*K
-    regardless of batch width, a probe costs its probe_nfe. The trace
-    replayer (launch/workload.py) uses this to compare the drain loop
-    and the in-flight scheduler on identical arrival traces.
+    """Virtual-cost accounting for one engine drain, priced by the
+    engine's cost oracle (``launch/oracle.py``). Under the default
+    ``SequentialEvalOracle`` the unit is SEQUENTIAL vector-field
+    evaluations (the unit a batch-parallel accelerator serializes on):
+    a K-step scan of an s-stage tableau costs s*K regardless of batch
+    width, a probe costs its probe_nfe. The trace replayer
+    (launch/workload.py) uses this to compare the drain loop and the
+    in-flight scheduler on identical arrival traces.
 
     ``finish_offset`` maps uid -> cost offset (from drain start) at which
     its batch's solve completed — requests in the first bucket batch of a
@@ -300,10 +302,13 @@ class MultiRateEngine:
     and per (shape, K) for bucket solves, so a steady-state traffic mix
     compiles once per cell."""
 
-    def __init__(self, model: DepthModel, engine_cfg: EngineConfig):
+    def __init__(self, model: DepthModel, engine_cfg: EngineConfig,
+                 oracle=None):
+        from repro.launch.oracle import SequentialEvalOracle
         self.model = prepare_model(model, engine_cfg)
         self.ecfg = engine_cfg
         self.controller = make_controller(self.model.integ, self.ecfg)
+        self.oracle = oracle or SequentialEvalOracle()
         self._queue: deque = deque()
         self._uid = 0
         self._probe_fns: Dict[Tuple, Any] = {}
@@ -413,7 +418,9 @@ class MultiRateEngine:
                     jnp.asarray(xs))
                 Ks_raw = np.asarray(Ks_dev)
                 errs = np.asarray(err_dev)
-                p = float(getattr(self.controller, "probe_nfe", 0))
+                p = self.oracle.probe_cost(
+                    shape, len(reqs),
+                    getattr(self.controller, "probe_nfe", 0))
                 probe_cost += p
                 cost += p
             Ks = snap_to_buckets(Ks_raw, self.ecfg.buckets)
@@ -439,7 +446,8 @@ class MultiRateEngine:
                     self._solve_fn(shape, k_max)(
                         jnp.asarray(xs[sel]), take(z0, sel),
                         take(dz0, sel), jnp.asarray(Ks[sel], jnp.int32)))
-                cost += stages * k_max
+                cost += self.oracle.solve_cost(shape, k_max, len(sel),
+                                               stages)
                 useful += int(Ks[sel].sum())
                 total += len(sel) * k_max
                 batches += 1

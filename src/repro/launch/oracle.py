@@ -1,0 +1,155 @@
+"""Pluggable serving cost oracles: what a probe, a pool segment, and a
+drain solve cost on the virtual clock.
+
+Both serving loops (``launch/engine.py``'s drain ``MultiRateEngine`` and
+``launch/scheduler.py``'s in-flight ``InflightScheduler``) stamp
+completions and ledgers through ONE of these oracles instead of inlining
+cost arithmetic:
+
+  * ``SequentialEvalOracle`` — the repo's original virtual clock, kept as
+    the default so every BENCH baseline stays comparable: one cost unit
+    per SEQUENTIAL vector-field evaluation (a K-step scan of an s-stage
+    tableau costs ``s*K``, a probe costs its ``probe_nfe``). Batch width
+    is FREE on this clock — it is the axis an accelerator parallelizes —
+    which is exactly the proxy's blind spot: under it an infinitely wide
+    slot pool is costless.
+  * ``RooflineOracle`` — the same three events priced in predicted
+    device-MICROseconds via the analytic roofline model
+    (``roofline/costmodel.py::cell_cost``): one vector-field evaluation
+    (= one depth group's forward) of a ``width``-row pool is a decode
+    roofline cell at ``depth_fraction = 1/n_groups`` (weights and caches
+    of the other groups never load), taking the dominant of
+    compute/HBM/collective time with no overlap assumed. Width is no
+    longer free — weight reads amortize SUBLINEARLY across rows — so
+    packing/seg/slot decisions become a real tradeoff the scheduler-knob
+    autotuner (``launch/autotune.py``) can optimize.
+
+The oracle's ``unit`` tag rides into every ``TraceReport`` /
+``latency_stats`` row (``cost_unit``), so BENCH files are explicit about
+which clock produced which section. Only time-like fields change units
+(cost, latency, queue wait, throughput); step COUNTS (useful/total/waste
+slot-steps, occupancy) are clock-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.roofline.costmodel import Mesh2D, cell_cost
+
+
+@runtime_checkable
+class CostOracle(Protocol):
+    """What a serving loop asks its clock. ``shape`` is the per-request
+    input shape (a pool/batch cell key); ``width`` the number of rows the
+    priced program runs over; ``stages`` the tableau's stage count."""
+
+    unit: str
+
+    def probe_cost(self, shape: Tuple[int, ...], width: int,
+                   probe_nfe: int) -> float:
+        """One admission probe over ``width`` rows (``probe_nfe`` field
+        evaluations)."""
+        ...
+
+    def segment_cost(self, shape: Tuple[int, ...], seg: int, slots: int,
+                     stages: int) -> float:
+        """One ``seg``-step advance of a ``slots``-row slot pool."""
+        ...
+
+    def solve_cost(self, shape: Tuple[int, ...], k_max: int, width: int,
+                   stages: int) -> float:
+        """One drain batch of ``width`` rows scanned to ``k_max``."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class SequentialEvalOracle:
+    """The original sequential-field-eval clock (see ``engine.StepReport``):
+    cost counts sequential vector-field evaluations, batch-width free.
+    The DEFAULT oracle — both serving loops construct it when none is
+    passed, so the refactor is a pure relabel of the old inline
+    arithmetic (pinned bit-for-bit in tests/test_scheduler.py)."""
+
+    unit: str = "sequential_evals"
+
+    def probe_cost(self, shape, width: int, probe_nfe: int) -> float:
+        return float(probe_nfe)
+
+    def segment_cost(self, shape, seg: int, slots: int,
+                     stages: int) -> float:
+        return float(stages * seg)
+
+    def solve_cost(self, shape, k_max: int, width: int,
+                   stages: int) -> float:
+        return float(stages * k_max)
+
+
+class RooflineOracle:
+    """Price serving events in predicted device-us via ``cell_cost``.
+
+    ``cfg`` is the arch whose depth field is being served (the serve CLI
+    passes its ``--arch``); ``ctx`` the decode context length of the
+    priced cell; ``mesh`` the roofline mesh (default: one device);
+    ``n_groups`` the number of depth groups one field evaluation covers
+    (default: ``models/lm.py::group_layout``). ``step_time`` memoizes per
+    pool width — the scheduler prices every segment of a (shape, seg,
+    slots) cell from one cached cell evaluation."""
+
+    unit = "device_us"
+
+    def __init__(self, cfg: ArchConfig, *, ctx: int = 4096,
+                 mesh: Optional[Mesh2D] = None,
+                 n_groups: Optional[int] = None):
+        if n_groups is None:
+            from repro.models.lm import group_layout
+            _, n_groups, _ = group_layout(cfg)
+        self.cfg = cfg
+        self.ctx = int(ctx)
+        self.mesh = mesh or Mesh2D(1, 1, 1)
+        self.n_groups = max(int(n_groups), 1)
+        self._step_us: Dict[int, float] = {}
+
+    def step_time(self, width: int) -> float:
+        """Predicted device-us of ONE vector-field evaluation over
+        ``width`` rows: the dominant roofline term of a decode cell at
+        ``depth_fraction = 1/n_groups`` (no overlap assumed). Increasing
+        in width but sublinear — the per-group weight read is shared by
+        every row, which is what makes wider pools worth paying for."""
+        width = max(int(width), 1)
+        if width not in self._step_us:
+            spec = ShapeSpec(name=f"oracle_decode{self.ctx}_b{width}",
+                             kind="decode", seq_len=self.ctx,
+                             global_batch=width)
+            t = cell_cost(self.cfg, spec, self.mesh,
+                          depth_fraction=1.0 / self.n_groups)
+            self._step_us[width] = 1e6 * max(
+                t.t_compute, t.t_memory, t.t_collective)
+        return self._step_us[width]
+
+    def probe_cost(self, shape, width: int, probe_nfe: int) -> float:
+        return probe_nfe * self.step_time(width)
+
+    def segment_cost(self, shape, seg: int, slots: int,
+                     stages: int) -> float:
+        return stages * seg * self.step_time(slots)
+
+    def solve_cost(self, shape, k_max: int, width: int,
+                   stages: int) -> float:
+        return stages * k_max * self.step_time(width)
+
+
+def make_oracle(name: str, cfg: Optional[ArchConfig] = None, *,
+                ctx: int = 4096) -> CostOracle:
+    """CLI-facing factory (``launch/serve.py --cost-oracle``)."""
+    if name == "sequential":
+        return SequentialEvalOracle()
+    if name == "roofline":
+        if cfg is None:
+            raise ValueError(
+                "the roofline oracle prices a specific architecture: "
+                "pass the served ArchConfig")
+        return RooflineOracle(cfg, ctx=ctx)
+    raise ValueError(f"unknown cost oracle {name!r} "
+                     "(expected 'sequential' or 'roofline')")

@@ -61,14 +61,21 @@ per tick.
 Virtual-cost clock
 ------------------
 
-The scheduler keeps a virtual clock (``self.now``) in the same unit as
-``engine.StepReport``: SEQUENTIAL vector-field evaluations (batch-width
-free — the axis an accelerator parallelizes). One segment costs
-``tableau.stages * seg``; an admission probe costs the controller's
-``probe_nfe``. Completions are stamped at the end of the tick that
-retired them. ``launch/workload.py`` replays identical arrival traces
-against this clock and the drain engine's, producing comparable queue
-wait / latency / waste numbers.
+The scheduler keeps a virtual clock (``self.now``) priced by a pluggable
+cost oracle (``launch/oracle.py``). The default ``SequentialEvalOracle``
+is the same unit as ``engine.StepReport``: SEQUENTIAL vector-field
+evaluations (batch-width free — the axis an accelerator parallelizes),
+where one segment costs ``tableau.stages * seg`` and an admission probe
+costs the controller's ``probe_nfe``; ``RooflineOracle`` prices the same
+events in predicted device-us via the analytic roofline model, making
+pool width a real cost axis. Completions are stamped at the end of the
+tick that retired them with only THEIR pool's probe + segment cost —
+pools are concurrent cells (the PR-5 sharding semantics), so one pool's
+segment never inflates another pool's latency, while ``total_cost``
+still sums every pool's work as a resource ledger.
+``launch/workload.py`` replays identical arrival traces against this
+clock and the drain engine's, producing comparable queue wait / latency
+/ waste numbers.
 
 Choosing ``seg``: small ``seg`` = fast admission and low masked waste but
 more per-segment host round-trips; large ``seg`` degenerates toward the
@@ -91,6 +98,7 @@ from repro.launch.engine import (
     DepthModel, EngineConfig, Request, make_controller, prepare_model,
     probe_net_nfe, snap_to_buckets,
 )
+from repro.launch.oracle import CostOracle, SequentialEvalOracle
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,7 +262,11 @@ class _SlotPool:
             Ks_dev, err_dev, z0, dz0 = probe_fn(jnp.asarray(xs_pad))
             Ks_raw = np.asarray(Ks_dev)[:len(reqs)]
             errs = np.asarray(err_dev)[:len(reqs)]
-            probe_cost = float(getattr(sched.controller, "probe_nfe", 0))
+            # the probe is padded to pool width, so the oracle prices a
+            # pool-width program regardless of how many rows refilled
+            probe_cost = sched.oracle.probe_cost(
+                self.shape, sched.slots,
+                getattr(sched.controller, "probe_nfe", 0))
         Ks = snap_to_buckets(Ks_raw, sched.ecfg.buckets)
 
         # scatter: host rows directly, device pytrees leaf-wise. On the
@@ -351,7 +363,8 @@ class InflightScheduler:
     def __init__(self, model: DepthModel,
                  engine_cfg: Optional[EngineConfig] = None,
                  *, slots: int = 4, seg: int = 2, mesh=None,
-                 slot_axis: str = "data"):
+                 slot_axis: str = "data",
+                 oracle: Optional[CostOracle] = None):
         engine_cfg = engine_cfg or EngineConfig()
         model = prepare_model(model, engine_cfg)
         if seg < 1:
@@ -373,6 +386,7 @@ class InflightScheduler:
         self.slots = int(slots)
         self.seg = int(seg)
         self.controller = make_controller(model.integ, engine_cfg)
+        self.oracle: CostOracle = oracle or SequentialEvalOracle()
         self.stages = model.integ.tableau.stages
         self.now = 0.0
         self.ticks = 0
@@ -444,10 +458,17 @@ class InflightScheduler:
         """One scheduling round: (1) refill free slots from the queue
         (probe-on-admission), (2) advance every busy pool by one segment,
         (3) retire finished slots. Advances the virtual clock by the
-        tick's cost; completions are stamped at end-of-tick."""
+        tick's summed cost (the resource ledger); completions are stamped
+        at end-of-tick with only THEIR pool's probe + segment cost —
+        pools are concurrent cells, so per-request latency must not
+        depend on ``(shape, dtype)`` key insertion order (it used to:
+        the pre-oracle clock accumulated segment cost across pools in
+        dict-iteration order, billing later-iterated pools for every
+        earlier pool's segment; pinned in tests/test_scheduler.py)."""
         cost = 0.0
         probe_cost = 0.0
         admitted = 0
+        pool_probe: Dict[Tuple, float] = {}
         # -- admission: FIFO per (shape, dtype) pool; a full pool does not
         #    block other pools' admissions (head-of-line blocking stays
         #    within a cell).
@@ -473,19 +494,25 @@ class InflightScheduler:
                     leftover.append(r)
             self._queue = leftover
             for key, batch in batches.items():
-                probe_cost += self._pools[key].admit(
-                    batch, self._submit_t, self.now + probe_cost)
+                # every pool's probe starts at tick start (concurrent
+                # cells) — t_admit no longer absorbs other pools' probes
+                pc = self._pools[key].admit(batch, self._submit_t,
+                                            self.now)
+                pool_probe[key] = pc
+                probe_cost += pc
                 admitted += len(batch)
         cost += probe_cost
         # -- segments
         done: List[InflightCompleted] = []
         useful = total = occupied = retired = 0
-        seg_cost = self.stages * self.seg
-        for pool in self._pools.values():
+        for key, pool in self._pools.items():
             if not pool.busy():
                 continue
+            seg_cost = self.oracle.segment_cost(pool.shape, self.seg,
+                                                self.slots, self.stages)
             cost += seg_cost
-            d, u, occ = pool.run_segment(self.now + cost)
+            d, u, occ = pool.run_segment(
+                self.now + pool_probe.get(key, 0.0) + seg_cost)
             done.extend(d)
             retired += len(d)
             useful += u

@@ -94,6 +94,14 @@ def main():
                          "be a multiple of N; on CPU force virtual devices "
                          "with XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N")
+    ap.add_argument("--cost-oracle", default="sequential",
+                    choices=["sequential", "roofline"],
+                    help="virtual-clock pricing (launch/oracle.py): "
+                         "'sequential' counts sequential field evals "
+                         "(batch-width free, the BENCH baseline unit); "
+                         "'roofline' prices probes/segments/solves of the "
+                         "served --arch in predicted device-us via the "
+                         "analytic roofline model (roofline/costmodel.py)")
     args = ap.parse_args()
     if args.mesh and not args.inflight:
         # same policy as --g-ckpt: a silently ignored flag would let a
@@ -141,6 +149,10 @@ def main():
     )
     model = lm_depth_model(params, cfg, solver=args.solver,
                            g_params=g_params, fused=args.fused)
+    # the roofline clock prices the SERVED arch at the prompt's context;
+    # reported latency/wait switch to its unit (device-us) with it
+    from repro.launch.oracle import make_oracle
+    oracle = make_oracle(args.cost_oracle, cfg, ctx=args.prompt_len)
 
     full, _ = lm_forward(params, cfg, prompt)
     full_top = np.asarray(jnp.argmax(full, -1))
@@ -159,7 +171,7 @@ def main():
             from repro.launch.mesh import make_serving_mesh
             mesh = make_serving_mesh(args.mesh)
         sched = InflightScheduler(model, ecfg, slots=args.slots,
-                                  seg=args.seg, mesh=mesh)
+                                  seg=args.seg, mesh=mesh, oracle=oracle)
         xs = np.asarray(prompt)
         t0 = time.time()
         if args.arrival_trace == "none":
@@ -193,7 +205,7 @@ def main():
                   f"wait={r.queue_wait:.1f} lat={r.latency:.1f}")
         return
 
-    engine = MultiRateEngine(model, ecfg)
+    engine = MultiRateEngine(model, ecfg, oracle=oracle)
     t0 = time.time()
     results = engine.run(np.asarray(prompt))
     dt = time.time() - t0

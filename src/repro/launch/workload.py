@@ -4,9 +4,9 @@ Seeded, reproducible streaming workloads (Poisson and bursty arrival
 processes over heterogeneous difficulty mixes) and replay drivers that
 run the SAME trace through the drain-the-queue engine
 (``launch/engine.py``) and the in-flight scheduler
-(``launch/scheduler.py``), on the same virtual clock (sequential
-vector-field evaluations — see ``engine.StepReport``), producing
-comparable per-request records:
+(``launch/scheduler.py``), on the same virtual clock — whichever cost
+oracle the loop carries (``launch/oracle.py``; sequential vector-field
+evaluations by default) — producing comparable per-request records:
 
     queue wait  = arrival -> the solve that serves it starts
     latency     = arrival -> outputs ready
@@ -14,12 +14,14 @@ comparable per-request records:
 
 ``benchmarks/bench_scheduler.py`` is the head-to-head harness over these
 drivers; ``latency_stats`` is the summary both report (p50/p99 latency,
-throughput, occupancy, masked-step waste).
+throughput, occupancy, masked-step waste), tagged with the producing
+clock's ``cost_unit`` so BENCH rows from different oracles are never
+compared by accident.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -116,15 +118,23 @@ class TraceReport:
     ``occupied_steps`` counts slot/sample-steps that belonged to an
     admitted request at segment start (the in-flight scheduler's pool
     utilization; for the drain engine every scanned row was admitted, so
-    it equals ``total_steps``)."""
+    it equals ``total_steps``). ``cost_unit`` names the clock that priced
+    ``total_cost``/``probe_cost`` and every timestamp in ``records`` —
+    step COUNTS (useful/total/occupied) are clock-independent."""
 
     records: Tuple[RequestRecord, ...]
-    total_cost: float        # sequential evals spent, arrivals -> drained
+    total_cost: float        # oracle units spent, arrivals -> drained
     probe_cost: float
     useful_steps: int        # sample-steps that advanced a live request
     total_steps: int         # sample-steps computed (incl. frozen/empty)
     makespan: float          # first arrival -> last completion
-    occupied_steps: int = 0  # slot-steps owned by an admitted request
+    # slot-steps owned by an admitted request; None = "built without
+    # in-flight slot accounting", i.e. drain semantics: every scanned row
+    # was an admitted request, so occupancy derives to 1.0 (the old
+    # default of 0 silently reported 0.0 for such reports — bug fixed in
+    # the cost-oracle PR, pinned by tests/test_scheduler.py)
+    occupied_steps: Optional[int] = None
+    cost_unit: str = "sequential_evals"
 
     @property
     def waste_steps(self) -> int:
@@ -132,9 +142,11 @@ class TraceReport:
 
     @property
     def occupancy(self) -> float:
-        """Fraction of computed slot-steps owned by an admitted request."""
-        return (self.occupied_steps / self.total_steps
-                if self.total_steps else 0.0)
+        """Fraction of computed slot-steps owned by an admitted request;
+        1.0 by construction for drain reports (``occupied_steps=None``)."""
+        occ = (self.total_steps if self.occupied_steps is None
+               else self.occupied_steps)
+        return occ / self.total_steps if self.total_steps else 0.0
 
 
 def latency_stats(report: TraceReport) -> Dict[str, float]:
@@ -148,7 +160,7 @@ def latency_stats(report: TraceReport) -> Dict[str, float]:
                 "total_cost": round(report.total_cost, 1),
                 "probe_cost": round(report.probe_cost, 1),
                 "useful_steps": 0, "waste_steps": 0, "waste_frac": 0.0,
-                "occupancy": 0.0}
+                "occupancy": 0.0, "cost_unit": report.cost_unit}
     lat = np.asarray([r.latency for r in report.records])
     wait = np.asarray([r.queue_wait for r in report.records])
     nfe = np.asarray([r.nfe for r in report.records])
@@ -171,6 +183,7 @@ def latency_stats(report: TraceReport) -> Dict[str, float]:
         "waste_steps": int(report.waste_steps),
         "waste_frac": round(waste_frac, 4),
         "occupancy": round(report.occupancy, 4),
+        "cost_unit": report.cost_unit,
     }
 
 
@@ -216,7 +229,9 @@ def replay_engine(engine, trace: Sequence[Arrival]) -> TraceReport:
     return TraceReport(records=tuple(records), total_cost=total_cost,
                        probe_cost=probe_cost, useful_steps=useful,
                        total_steps=total, makespan=t_end - t0,
-                       occupied_steps=total)
+                       occupied_steps=total,
+                       cost_unit=getattr(getattr(engine, "oracle", None),
+                                         "unit", "sequential_evals"))
 
 
 def replay_scheduler(sched, trace: Sequence[Arrival]) -> TraceReport:
@@ -245,4 +260,43 @@ def replay_scheduler(sched, trace: Sequence[Arrival]) -> TraceReport:
         probe_cost=sched.total_probe_cost,
         useful_steps=sched.total_useful_steps,
         total_steps=sched.total_slot_steps, makespan=t_end - t0,
-        occupied_steps=sched.total_occupied_steps)
+        occupied_steps=sched.total_occupied_steps,
+        cost_unit=getattr(getattr(sched, "oracle", None), "unit",
+                          "sequential_evals"))
+
+
+# ------------------------------------------------------------ toy servable ----
+
+def toy_classifier(solver: str = "euler", fused: bool = True, *,
+                   d: int = 32, n_classes: int = 10):
+    """Deterministic toy servable classifier shared by the scheduler bench
+    (``benchmarks/bench_scheduler.py``) and the knob autotuner
+    (``launch/autotune.py``): stiffness (difficulty) is driven by the
+    input mean through a softplus, the readout is a fixed seeded linear
+    head — heavy enough to have a real pareto, light enough to replay
+    hundreds of requests in seconds."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import Integrator, get_tableau
+    from repro.launch.engine import DepthModel
+
+    W = np.asarray(jax.random.normal(jax.random.PRNGKey(7),
+                                     (d, n_classes)) / np.sqrt(d))
+
+    def field_of(x):
+        k = jax.nn.softplus(jnp.mean(x, axis=-1, keepdims=True))
+        return lambda s, z: -z * k
+
+    g = None
+    if solver.startswith("hyper_"):
+        # toy low-order defect model, enough to exercise the residual
+        # controller + fused correction path end to end
+        g = lambda eps, s, z, dz: 0.3 * z + 0.1 * dz
+    base = solver[len("hyper_"):] if solver.startswith("hyper_") else solver
+    return DepthModel(
+        embed=lambda x: x + 0.0,
+        field_of=field_of,
+        readout=lambda x, zT: zT @ jnp.asarray(W),
+        integ=Integrator(tableau=get_tableau(base), g=g, fused=fused),
+    )

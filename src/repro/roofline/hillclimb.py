@@ -30,31 +30,75 @@ def _fmt(t):
             "roofline_fraction": round(t.roofline_fraction, 3)}
 
 
-def _iterate(cell_name, cfg, shape, base_kw, steps):
-    """Run the hypothesis loop; each step: (name, hypothesis, kw-updates,
-    expected-delta-description)."""
+def _term(t, name):
+    return {"compute": t.t_compute, "memory": t.t_memory,
+            "collective": t.t_collective}[name]
+
+
+def hypothesis_loop(evaluate, steps, base_kw, *, min_gain=0.02):
+    """Generic hillclimb hypothesis loop: ``evaluate(kw) -> (score, info)``
+    where LOWER score is better and ``info`` is a dict merged into the log
+    row. Each step ``(name, hypothesis, kw-updates)`` is applied on top of
+    the best kw so far and KEPT only when CONFIRMED (relative gain on the
+    score > ``min_gain``). Returns ``(best_kw, best_score, log)``.
+
+    The roofline-cell hillclimbs below (``_iterate``) and the scheduler
+    knob autotuner (``launch/autotune.py``) are both instances of this
+    loop — one scores a cell's predicted dominant term, the other a
+    replayed trace's p99 latency on the roofline cost oracle."""
+    kw = dict(base_kw)
+    score, info = evaluate(kw)
+    log = [{"iter": 0, "change": "baseline", "score": score, **info}]
+    for i, (name, hypothesis, updates) in enumerate(steps, 1):
+        new_kw = {**kw, **updates}
+        new_score, new_info = evaluate(new_kw)
+        gain = 1.0 - new_score / score if score else 0.0
+        confirmed = gain > min_gain
+        log.append({
+            "iter": i, "change": name, "hypothesis": hypothesis,
+            "score_before": score, "score_after": new_score,
+            "gain": f"{gain * 100:.1f}%",
+            "verdict": "CONFIRMED" if confirmed
+            else f"REFUTED (<{min_gain * 100:.0f}%)",
+            **new_info,
+        })
+        if confirmed:
+            kw, score = new_kw, new_score
+    return kw, score, log
+
+
+def _iterate(cell_name, cfg, shape, base_kw, steps, cost_fn=cell_cost):
+    """Run the costmodel hypothesis loop; each step: (name, hypothesis,
+    kw-updates, cfg-updates). The verdict is always read on the
+    post-change BOTTLENECK: dominance is recomputed on ``nxt``, so a
+    change that flips the bottleneck (e.g. collective -> memory) is
+    scored by how far the NEW gating term sits below the old one — not by
+    the collapse of a term that no longer gates the step. Both dominant
+    terms (and the stale term's post-change value) are reported so a flip
+    is visible in the log."""
     log = []
     kw = dict(base_kw)
-    cur = cell_cost(cfg, shape, SINGLE_POD, **kw)
+    cur = cost_fn(cfg, shape, SINGLE_POD, **kw)
     log.append({"cell": cell_name, "iter": 0, "change": "baseline",
                 **_fmt(cur)})
     for i, (name, hypothesis, updates, cfg_updates) in enumerate(steps, 1):
-        dom_before = {"compute": cur.t_compute, "memory": cur.t_memory,
-                      "collective": cur.t_collective}[cur.dominant]
+        dom_before = _term(cur, cur.dominant)
         new_kw = dict(kw)
         new_kw.update(updates)
         new_cfg = dataclasses.replace(cfg, **cfg_updates) if cfg_updates \
             else cfg
-        nxt = cell_cost(new_cfg, shape, SINGLE_POD, **new_kw)
-        dom_after = {"compute": nxt.t_compute, "memory": nxt.t_memory,
-                     "collective": nxt.t_collective}[cur.dominant]
+        nxt = cost_fn(new_cfg, shape, SINGLE_POD, **new_kw)
+        dom_after = _term(nxt, nxt.dominant)
         gain = 1.0 - dom_after / dom_before
         confirmed = gain > 0.02
         log.append({
             "cell": cell_name, "iter": i, "change": name,
             "hypothesis": hypothesis,
+            "dominant_before": cur.dominant,
+            "dominant_after": nxt.dominant,
             "dominant_term_before_s": round(dom_before, 4),
             "dominant_term_after_s": round(dom_after, 4),
+            "prev_dominant_term_after_s": round(_term(nxt, cur.dominant), 4),
             "gain_on_dominant": f"{gain * 100:.1f}%",
             "verdict": "CONFIRMED" if confirmed else "REFUTED (<2%)",
             **_fmt(nxt),

@@ -1,13 +1,15 @@
 """Roofline cost-model sanity: analytic FLOPs must track 6*N_active*D for
 LM training within the expected envelope (attention + readout overhead),
-and the roofline terms must be internally consistent."""
+and the roofline terms must be internally consistent — plus regression
+pins on the hillclimb verdict logic (roofline/hillclimb.py)."""
 import pytest
 
 from repro.configs import SHAPES, get
 from repro.roofline.costmodel import (
-    MULTI_POD, SINGLE_POD, cell_cost, decode_step_flops, forward_flops,
-    train_step_flops,
+    MULTI_POD, SINGLE_POD, RooflineTerms, cell_cost, decode_step_flops,
+    forward_flops, train_step_flops,
 )
+from repro.roofline.hillclimb import _iterate, hypothesis_loop
 from repro.roofline.params import analytic_active_param_count
 
 
@@ -77,3 +79,86 @@ def test_decode_is_memory_bound():
     for arch in ("qwen3_8b", "mistral_nemo_12b"):
         t = cell_cost(get(arch), SHAPES["decode_32k"], SINGLE_POD)
         assert t.t_memory > t.t_compute, (arch, t)
+
+
+# ------------------------------------------------- hillclimb verdicts ----
+
+def _terms(c, m, l):
+    return RooflineTerms(flops_total=1.0, hbm_bytes_dev=1.0,
+                         coll_bytes_dev=1.0, model_flops=1.0,
+                         t_compute=c, t_memory=m, t_collective=l)
+
+
+def _table_cost(table):
+    """cost_fn stub for _iterate: look the (c, m, l) row up by kw."""
+    def fn(cfg, shape, mesh, **kw):
+        return _terms(*table[frozenset(kw.items())])
+    return fn
+
+
+def test_hillclimb_dominance_flip_scores_new_bottleneck():
+    """BUGFIX pin: a change that flips the bottleneck must be scored on
+    the NEW dominant term. Baseline is collective-bound (coll=10.0,
+    mem=9.9); the change kills the collective term to 1.0 — the step is
+    now memory-bound at 9.9, a ~1% true gain. The pre-fix code read the
+    post-change value at the OLD dominant key and reported a bogus 90%
+    CONFIRMED."""
+    cost = _table_cost({
+        frozenset(): (1.0, 9.9, 10.0),
+        frozenset({("int8_a2a", True)}): (1.0, 9.9, 1.0),
+    })
+    log = _iterate("synthetic", None, None, {},
+                   [("int8_a2a", "halve a2a payload",
+                     {"int8_a2a": True}, None)], cost_fn=cost)
+    row = log[1]
+    assert row["dominant_before"] == "collective"
+    assert row["dominant_after"] == "memory"
+    assert row["dominant_term_after_s"] == 9.9
+    # the stale term's collapse is still visible in the log...
+    assert row["prev_dominant_term_after_s"] == 1.0
+    # ...but it no longer drives the verdict: 1 - 9.9/10.0 = 1% < 2%
+    assert row["verdict"].startswith("REFUTED")
+    assert row["gain_on_dominant"] == "1.0%"
+
+
+def test_hillclimb_genuine_gain_with_flip_still_confirms():
+    """A flip with a real gain on the new bottleneck stays CONFIRMED and
+    the accepted state carries forward to the next step's baseline."""
+    cost = _table_cost({
+        frozenset(): (1.0, 4.0, 10.0),
+        frozenset({("a", True)}): (1.0, 4.0, 2.0),       # coll->mem, -60%
+        frozenset({("a", True), ("b", True)}): (1.0, 3.0, 2.0),
+    })
+    log = _iterate("synthetic", None, None, {},
+                   [("a", "", {"a": True}, None),
+                    ("b", "", {"b": True}, None)], cost_fn=cost)
+    assert log[1]["verdict"] == "CONFIRMED"
+    assert log[1]["dominant_after"] == "memory"
+    assert log[1]["dominant_term_after_s"] == 4.0       # new bottleneck
+    # step 2 baselines on the ACCEPTED step-1 state (mem=4.0 -> 3.0)
+    assert log[2]["dominant_term_before_s"] == 4.0
+    assert log[2]["verdict"] == "CONFIRMED"
+
+
+def test_hypothesis_loop_keeps_only_confirmed():
+    """The generic loop (shared with launch/autotune.py): lower-is-better
+    scores, steps applied on top of the best kw so far, refuted steps
+    rolled back."""
+    scores = {frozenset(): 100.0,
+              frozenset({("x", 2)}): 50.0,           # confirmed
+              frozenset({("x", 2), ("y", 1)}): 49.5,  # <2% -> refuted
+              frozenset({("x", 2), ("z", 0)}): 25.0}  # confirmed
+
+    def evaluate(kw):
+        return scores[frozenset(kw.items())], {"probe": len(kw)}
+
+    best_kw, best, log = hypothesis_loop(
+        evaluate,
+        [("x", "", {"x": 2}), ("y", "", {"y": 1}), ("z", "", {"z": 0})],
+        {})
+    assert best_kw == {"x": 2, "z": 0} and best == 25.0
+    assert log[0]["score"] == 100.0
+    assert [r["verdict"] for r in log[1:]] == \
+        ["CONFIRMED", "REFUTED (<2%)", "CONFIRMED"]
+    assert log[2]["score_before"] == 50.0   # refuted step baselines on best
+    assert all("probe" in r for r in log)

@@ -163,3 +163,43 @@ def test_serve_flags_are_documented():
     assert not undocumented, (
         "launch/serve.py flags missing from docs/serving.md: "
         f"{sorted(undocumented)}")
+
+
+# --------------------------------------------------- cost accounting ----
+
+def test_tick_accounting_prose_matches_live_oracle():
+    """The Layer-4 tick-accounting prose in docs/architecture.md and the
+    'Cost accounting' section in docs/serving.md describe the LIVE
+    oracle: the documented `s*K` segment price and `probe_nfe` probe
+    price are asserted against SequentialEvalOracle itself, and both
+    unit strings the docs name must be the ones the implementations
+    report."""
+    from repro.launch.oracle import RooflineOracle, SequentialEvalOracle
+
+    arch = _read(os.path.join(DOCS_DIR, "architecture.md"))
+    serving = _read(os.path.join(DOCS_DIR, "serving.md"))
+
+    # the prose names the oracle module and the `s*K` pricing rule
+    assert "launch/oracle.py" in arch
+    assert "`s*K`" in arch and "probe_nfe" in arch
+    seq = SequentialEvalOracle()
+    assert seq.segment_cost((8,), 5, 4, 3) == 15.0        # s=3, K=5
+    assert seq.solve_cost((8,), 5, 4, 3) == 15.0
+    assert seq.probe_cost((8,), 4, 2) == 2.0
+    # batch-width free, as both docs claim
+    assert seq.segment_cost((8,), 5, 4096, 3) == 15.0
+
+    # unit strings in the docs are the ones the oracles report
+    for doc in (arch, serving):
+        assert "SequentialEvalOracle" in doc
+        assert "RooflineOracle" in doc
+    assert seq.unit == "sequential_evals"
+    assert RooflineOracle.unit == "device_us"
+    assert f"`{seq.unit}`" in serving
+    assert f"`{RooflineOracle.unit}`" in serving
+
+    # serving.md documents the tuned-config contract and the two fixed
+    # accounting bugs
+    assert "artifacts/tuned" in serving
+    assert "occupied_steps" in serving
+    assert "Cross-pool" in serving or "cross-pool" in serving

@@ -31,10 +31,11 @@ from repro.core import (
 )
 from repro.kernels.hyper_step.ops import TRACE_COUNTS
 from repro.launch.engine import DepthModel, EngineConfig, MultiRateEngine
+from repro.launch.oracle import RooflineOracle, SequentialEvalOracle
 from repro.launch.scheduler import InflightScheduler
 from repro.launch.workload import (
-    bursty_trace, heterogeneous_requests, latency_stats, poisson_trace,
-    replay_engine, replay_scheduler,
+    TraceReport, bursty_trace, heterogeneous_requests, latency_stats,
+    poisson_trace, replay_engine, replay_scheduler,
 )
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -427,6 +428,163 @@ def test_replay_accounting_invariants():
     for r in rep_s.records:
         np.testing.assert_allclose(r.outputs, out_e[r.uid], rtol=1e-6,
                                    atol=1e-6)
+
+
+# --------------------------------------------------------- cost oracle ----
+
+def test_pool_completions_stamped_with_own_cost_only():
+    """BUGFIX pin: pools are concurrent cells, so a completion is stamped
+    with only ITS pool's probe + segment cost — per-request latency must
+    not depend on (shape, dtype) key insertion order. The pre-fix clock
+    accumulated segment cost across pools in dict-iteration order,
+    billing the second-iterated pool's completion 2x the first's."""
+    ecfg = EngineConfig(buckets=(2,), controller="fixed", fixed_K=2)
+    for order in ((3, 5), (5, 3)):
+        sched = InflightScheduler(_toy_model(), ecfg, slots=2, seg=2)
+        for d in order:
+            sched.submit(np.full((d,), -2.0, np.float32))
+        done = sched.step()        # K=2 completes within one seg=2 tick
+        assert len(done) == 2
+        # euler stages=1, seg=2, no probe under the fixed controller:
+        # each pool's own cumulative cost this tick is exactly 2.0
+        assert [c.t_done for c in done] == [2.0, 2.0], (order, done)
+        # the tick's resource ledger still sums BOTH pools' segments
+        assert sched.total_cost == 4.0
+
+
+def test_drain_occupancy_invariant():
+    """BUGFIX pin: drain-engine occupancy is 1.0 by construction — both
+    for replay_engine's reports and for a TraceReport built WITHOUT
+    occupied_steps (the old default of 0 reported 0.0)."""
+    xs = heterogeneous_requests(8, 6, seed=5)
+    rep = replay_engine(
+        MultiRateEngine(_toy_model(), EngineConfig(buckets=(2, 4, 8),
+                                                   tol=5e-3)),
+        poisson_trace(xs, rate=0.3, seed=6))
+    assert rep.total_steps > 0 and rep.occupancy == 1.0
+    bare = TraceReport(records=rep.records, total_cost=1.0, probe_cost=0.0,
+                       useful_steps=3, total_steps=4, makespan=1.0)
+    assert bare.occupancy == 1.0
+    assert latency_stats(bare)["occupancy"] == 1.0
+    # an explicitly-counted pool report still reports its true fraction
+    part = TraceReport(records=rep.records, total_cost=1.0, probe_cost=0.0,
+                       useful_steps=3, total_steps=4, makespan=1.0,
+                       occupied_steps=2)
+    assert part.occupancy == 0.5
+
+
+def test_sequential_oracle_is_a_pure_relabel():
+    """Explicitly passing SequentialEvalOracle reproduces the default
+    clock bit-for-bit through BOTH replay drivers (the oracle refactor
+    did not change the default path's numbers)."""
+    xs = heterogeneous_requests(20, 6, seed=5)
+    trace = poisson_trace(xs, rate=0.3, seed=6)
+    ecfg = EngineConfig(buckets=(2, 4, 8), tol=5e-3, max_batch=4)
+    base = latency_stats(replay_scheduler(
+        InflightScheduler(_toy_model(), ecfg, slots=4, seg=2), trace))
+    expl = latency_stats(replay_scheduler(
+        InflightScheduler(_toy_model(), ecfg, slots=4, seg=2,
+                          oracle=SequentialEvalOracle()), trace))
+    assert base == expl
+    base_e = latency_stats(replay_engine(
+        MultiRateEngine(_toy_model(), ecfg), trace))
+    expl_e = latency_stats(replay_engine(
+        MultiRateEngine(_toy_model(), ecfg,
+                        oracle=SequentialEvalOracle()), trace))
+    assert base_e == expl_e
+    assert base["cost_unit"] == base_e["cost_unit"] == "sequential_evals"
+
+
+def test_sequential_oracle_reproduces_bench_scheduler_numbers():
+    """ACCEPTANCE: replaying bench_scheduler's seeded poisson_seed3 trace
+    under an explicit SequentialEvalOracle reproduces the committed
+    BENCH_scheduler.json inflight row bit-for-bit — the committed
+    sequential section is exactly what the default clock produces."""
+    import json
+    if REPO_ROOT not in sys.path:
+        sys.path.insert(0, REPO_ROOT)
+    from benchmarks.bench_scheduler import D_FEAT, toy_classifier
+    with open(os.path.join(REPO_ROOT, "BENCH_scheduler.json")) as fh:
+        rows = json.load(fh)
+    row = next(r for r in rows if r.get("mode") == "inflight"
+               and r.get("trace") == "poisson_seed3")
+    xs = heterogeneous_requests(int(row["requests"]), D_FEAT, seed=3)
+    trace = poisson_trace(xs, rate=0.25, seed=103)
+    ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, max_batch=8,
+                        solver="euler", fused=True)
+    sched = InflightScheduler(toy_classifier("euler"), ecfg,
+                              slots=int(row["slots"]), seg=int(row["seg"]),
+                              oracle=SequentialEvalOracle())
+    stats = latency_stats(replay_scheduler(sched, trace))
+    for key, val in stats.items():
+        assert row[key] == val, (key, row[key], val)
+
+
+def test_roofline_oracle_prices_seg_and_width():
+    """The roofline oracle prices seg=2*s strictly above seg=s for a busy
+    pool, and pool width is PRICED (sublinearly — weight reads amortize
+    across rows) where the sequential clock gives it away for free."""
+    from repro.configs import get
+    o = RooflineOracle(get("qwen3_8b"), ctx=4096)
+    shape = (32,)
+    for s in (1, 2, 4):
+        assert o.segment_cost(shape, 2 * s, 8, 1) \
+            > o.segment_cost(shape, s, 8, 1)
+    t8, t16 = o.step_time(8), o.step_time(16)
+    assert t8 < t16 < 2 * t8        # priced, but sublinear
+    assert o.probe_cost(shape, 8, 2) == 2 * t8
+    seq = SequentialEvalOracle()
+    assert seq.segment_cost(shape, 2, 8, 1) \
+        == seq.segment_cost(shape, 2, 9999, 1)   # width-free by design
+
+
+def test_roofline_oracle_replay_stamps_device_us():
+    """An end-to-end replay on the roofline clock: same policy decisions
+    as the sequential clock (K/NFE are clock-independent), ledgers and
+    stats tagged device_us."""
+    from repro.configs import get
+    o = RooflineOracle(get("qwen3_8b"), ctx=4096)
+    ecfg = EngineConfig(buckets=(2, 4, 8), tol=5e-3, max_batch=4)
+    xs = heterogeneous_requests(12, 6, seed=5)
+    # same relative load as the sequential replay: rate converts by the
+    # pool's per-step price, so admission dynamics are congruent
+    t_seq = poisson_trace(xs, rate=0.3, seed=6)
+    t_us = poisson_trace(xs, rate=0.3 / o.step_time(4), seed=6)
+    rep_seq = replay_scheduler(
+        InflightScheduler(_toy_model(), ecfg, slots=4, seg=2), t_seq)
+    rep_us = replay_scheduler(
+        InflightScheduler(_toy_model(), ecfg, slots=4, seg=2, oracle=o),
+        t_us)
+    assert rep_us.cost_unit == "device_us"
+    assert latency_stats(rep_us)["cost_unit"] == "device_us"
+    # policy (which K each request gets) does not depend on the clock
+    k_seq = {r.uid: r.K for r in rep_seq.records}
+    assert {r.uid: r.K for r in rep_us.records} == k_seq
+    # step COUNTS are clock-independent; COSTS scale with the step price
+    assert rep_us.useful_steps == rep_seq.useful_steps
+    assert rep_us.total_cost > rep_seq.total_cost
+
+
+def test_autotune_cell_structure_and_hillclimb_keeps_best():
+    """The knob autotuner returns a persisted-shape verdict: chosen knobs
+    are JSON-clean, the hillclimb log carries verdicts, and the tuned
+    score never regresses the baseline (hypothesis_loop keeps only
+    CONFIRMED changes)."""
+    from repro.launch.autotune import autotune_cell
+    res = autotune_cell({"cell": "t4k", "arch": "qwen3_8b", "ctx": 4096},
+                        budget="tiny",
+                        steps=[("slots 8->16", "wider pool under load",
+                                {"slots": 16})])
+    assert res["mode"] == "tuner" and res["cost_unit"] == "device_us"
+    assert set(res["chosen"]) == {"seg", "slots", "buckets"}
+    assert res["p99_tuned"] <= res["p99_base"]
+    verdicts = [r["verdict"] for r in res["log"][1:]]
+    assert all(v == "CONFIRMED" or v.startswith("REFUTED")
+               for v in verdicts)
+    confirmed = [r["change"] for r in res["log"][1:]
+                 if r["verdict"] == "CONFIRMED"]
+    assert res["confirmed"] == confirmed
+    assert (res["chosen"]["slots"] == 16) == ("slots 8->16" in confirmed)
 
 
 # --------------------------------------------------------- BENCH schema ----
