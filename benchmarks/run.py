@@ -13,8 +13,10 @@ bench_scheduler (in-flight continuous batching vs the drain engine).
 Perf trajectory files at the repo root (uploaded as CI artifacts on every
 tier-1 run): BENCH_kernels.json (bench_kernels — fused hyper_step traffic
 model + timings per tableau), BENCH_serve.json (bench_serve — the
-multi-rate NFE/agreement pareto), and BENCH_scheduler.json
-(bench_scheduler — serving-latency head-to-head, p50/p99/waste).
+multi-rate NFE/agreement pareto), BENCH_scheduler.json
+(bench_scheduler — serving-latency head-to-head, p50/p99/waste), and
+BENCH_wallclock.json (bench_wallclock — the real-clock overlap-vs-sync
+serving race + async-dispatch mechanism + predicted-vs-measured join).
 
 ``--check`` is the BENCH-schema smoke gate (tier-1 CI): it validates
 every committed BENCH_*.json — parseable, non-empty list of rows, every
@@ -57,6 +59,10 @@ BENCH_REQUIRED = {
     # the clock tag every replay row must carry since the oracle refactor
     "BENCH_scheduler.json": ("p99_latency", "waste_steps", "devices",
                              "cost_unit"),
+    # the wall-clock serving race (bench_wallclock.serving_rows):
+    # 'req_per_s' pins the real-clock serving rows, 'agreement' the
+    # uid-for-uid overlap-vs-sync parity every timing row must carry
+    "BENCH_wallclock.json": ("req_per_s", "agreement"),
 }
 
 
@@ -107,6 +113,55 @@ def check_bench_files(root: str = REPO_ROOT) -> list:
                               "(devices > 1) — bench_scheduler's sharded "
                               "section is missing")
             errors.extend(_check_oracle_section(name, rows, root))
+        if name == "BENCH_wallclock.json":
+            errors.extend(_check_wallclock_section(name, rows))
+    return errors
+
+
+def _check_wallclock_section(name: str, rows: list) -> list:
+    """Wall-clock-bench invariants: a sync AND an overlap serving row
+    (the race needs both lanes), every serving row at agreement 1.0
+    (a timing row for loops that diverged is meaningless — the overlap
+    loop must be observationally the sync loop before its clock
+    counts), a predicted-vs-measured row carrying BOTH unit tags (the
+    device_us/wall_us join must stay ratio-able, never summable), and
+    the verdict scoreboard with its async-dispatch mechanism check."""
+    errors = []
+    serving = [r for r in rows if isinstance(r, dict)
+               and r.get("section") == "serving"]
+    for loop in ("sync", "overlap"):
+        if not any(r.get("loop") == loop for r in serving):
+            errors.append(f"{name}: no serving row for the {loop!r} "
+                          "loop — the wall-clock race needs both lanes")
+    bad = [r.get("trace") for r in serving if r.get("agreement") != 1.0]
+    if bad:
+        errors.append(f"{name}: serving rows with agreement != 1.0 on "
+                      f"traces {bad} — overlap diverged from sync, the "
+                      "timings are void")
+    pvm = [r for r in rows if isinstance(r, dict)
+           and r.get("section") == "predicted_vs_measured"]
+    if not pvm:
+        errors.append(f"{name}: missing the predicted-vs-measured "
+                      "section (roofline device_us vs measured wall_us)")
+    elif not all(r.get("predicted_unit") == "device_us"
+                 and r.get("measured_unit") == "wall_us" for r in pvm):
+        errors.append(f"{name}: predicted-vs-measured rows must tag "
+                      "predicted_unit='device_us' and "
+                      "measured_unit='wall_us'")
+    verdicts = [r for r in rows if isinstance(r, dict)
+                and r.get("mode") == "verdict"]
+    if not verdicts:
+        errors.append(f"{name}: missing the verdict row "
+                      "(overlap_wins_wallclock scoreboard)")
+    else:
+        for key in ("overlap_wins_wallclock", "agreement_all",
+                    "async_dispatch_ok", "host_cpus"):
+            if key not in verdicts[0]:
+                errors.append(f"{name}: verdict row lacks {key!r}")
+        if verdicts[0].get("agreement_all") != 1.0:
+            errors.append(f"{name}: verdict agreement_all != 1.0 — "
+                          "the overlap loop diverged from the sync "
+                          "oracle on some trace")
     return errors
 
 

@@ -223,7 +223,13 @@ class SegmentCarry(NamedTuple):
     NFE accounting honesty.
 
     The carry is a plain pytree: it jits, donates, and scatters (slot
-    refill is a leaf-wise ``.at[idx].set``). A retired/empty slot is
+    refill is a leaf-wise ``.at[idx].set``). ``Integrator.segment_cell``
+    is the donation-ready compilation: ``z`` and ``first_stage`` (the two
+    pool-sized buffers) are donated into the segment and alias in place
+    as its outputs — a caller holding the carry owns at most TWO logical
+    buffers per pool, the in-flight one (dead to the host once the
+    segment is dispatched) and the resident one (the previous segment's
+    outputs, which retire/refill scatter into). A retired/empty slot is
     encoded as ``Ks == 0``: ``k < Ks`` is then always False, so the fused
     freeze mask keeps its rows inert at zero bookkeeping cost —
     occupancy is data, never a shape, which is what keeps one
@@ -621,6 +627,56 @@ class Integrator:
         z2, k2, fin = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
                                 out_specs=out_specs, check_rep=False)(*args)
         return SegmentCarry(z2, k2, Ks, eps, fs), fin
+
+    def segment_cell(self, field_of, seg: int, *, s0=0.0, mesh=None,
+                     slot_axis: str = "data", donate: bool = True):
+        """The serving-loop compilation of ``solve_segment``: one jitted
+        ``(xs, z, k, Ks, eps, fs) -> (z', fs', meta)`` cell per
+        ``(shape, seg[, mesh])``, with the carry buffers DONATED.
+
+        The donation contract (``donate_argnums``): the big per-slot
+        buffers — ``z`` and the ``fs`` probe rows — are consumed by the
+        call, and XLA aliases them in place as the output buffers, so
+        slot state never round-trips HBM between segments. The caller
+        must treat the inputs as dead the instant the cell is dispatched
+        (``Array has been deleted`` on any later use) and rebind the
+        returned ``(z', fs')`` as the pool's resident state; any read of
+        the OLD buffers (a finished-row readout gather, a refill
+        scatter) must be enqueued BEFORE the donating call. ``k``, ``Ks``
+        and ``eps`` are (B,) bookkeeping rows — too small to be worth
+        aliasing, and ``Ks``/``eps`` persist host-side across segments —
+        so they are passed by value.
+
+        ``meta`` is the stacked ``(2, B)`` int32 ``[k'; finished]`` row
+        pair: retiring a segment costs ONE device->host transfer, and
+        because jit dispatch is async the caller can hold ``meta`` as a
+        future and read it a full segment later (the overlap loop in
+        launch/scheduler.py). ``fs'`` is the first_stage passthrough —
+        ``solve_segment`` never mutates it, so the donated input aliases
+        straight to the output; when the pool runs probeless (``fs is
+        None``) the slot contributes no donated buffer and the cell
+        degrades gracefully.
+
+        ``field_of`` builds the slot-local vector field from the per-slot
+        conditioning rows ``xs`` (the launch/engine.py ``DepthModel``
+        adapter shape); under ``mesh=`` the rows thread through the same
+        shard_map as the carry (``_solve_segment_sharded``)."""
+
+        def run(xs, z, k, Ks, eps, fs):
+            carry = SegmentCarry(z, jnp.asarray(k, jnp.int32),
+                                 jnp.asarray(Ks, jnp.int32), eps, fs)
+            if mesh is None:
+                out, fin = self.solve_segment(field_of(xs), carry, seg,
+                                              s0=s0)
+            else:
+                out, fin = self._solve_segment_sharded(
+                    None, carry, seg, s0, mesh, slot_axis,
+                    field_of=field_of, cond=xs)
+            meta = jnp.stack([out.k.astype(jnp.int32),
+                              fin.astype(jnp.int32)])
+            return out.z, out.first_stage, meta
+
+        return jax.jit(run, donate_argnums=(1, 5) if donate else ())
 
     def _solve_controlled(self, f, z0, grid, controller, return_traj,
                           checkpoint):

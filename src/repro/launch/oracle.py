@@ -38,6 +38,16 @@ from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
 from repro.configs import ArchConfig, ShapeSpec
 from repro.roofline.costmodel import Mesh2D, cell_cost
 
+#: Unit tag for REAL-clock measurements (``time.perf_counter``, in
+#: microseconds) — what ``benchmarks/bench_wallclock.py`` stamps on its
+#: serving rows. Deliberately distinct from the virtual-clock units above
+#: it in a BENCH file: ``sequential_evals`` and ``device_us`` are
+#: *predictions* an oracle priced, ``wall_us`` is what the host actually
+#: measured. The predicted-vs-measured section of BENCH_wallclock.json
+#: joins a ``device_us`` prediction against a ``wall_us`` measurement
+#: per tick — rows in the two units must be ratio'd, never summed.
+WALLCLOCK_UNIT = "wall_us"
+
 
 @runtime_checkable
 class CostOracle(Protocol):

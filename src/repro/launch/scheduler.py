@@ -145,11 +145,43 @@ class TickReport:
         return self.total_steps - self.useful_steps
 
 
+@dataclasses.dataclass
+class _PendingSegment:
+    """An in-flight segment: the async ``[k'; finished]`` meta future
+    plus the host snapshots needed to account it when it retires."""
+
+    meta: Any                     # (2, B) int32 device future
+    k_old: np.ndarray             # k rows at launch
+    occ: np.ndarray               # occupancy at launch (bool row)
+    t_done: float                 # virtual completion stamp for retires
+
+
+@dataclasses.dataclass
+class _RetireBatch:
+    """Finished rows staged for materialization. ``outs`` stays an async
+    device future until ``finalize_retired`` — the overlap loop
+    materializes AFTER dispatching the next segment, so even the readout
+    transfer hides behind device work. Host rows are SNAPSHOTS, because
+    admission may refill the slots before the batch is finalized."""
+
+    idx: np.ndarray
+    outs: Any                     # readout rows, device future
+    t_done: float
+    fused: bool
+    uid: np.ndarray
+    K: np.ndarray
+    err: np.ndarray
+    t_submit: np.ndarray
+    t_admit: np.ndarray
+    segments: np.ndarray
+
+
 class _SlotPool:
     """Fixed-width slot pool for one request shape: device-side carry
     (z / first_stage pytrees) + host-side bookkeeping rows (k, Ks, eps,
-    uid, timestamps). All jit cells are pool-width, so occupancy never
-    respecializes anything."""
+    uid, timestamps). All segment jit cells are pool-width, so occupancy
+    never respecializes anything; the finished-row readout cells are
+    pow2-gated (see ``_readout_finished``)."""
 
     def __init__(self, sched: "InflightScheduler", shape: Tuple[int, ...],
                  dtype: np.dtype):
@@ -168,6 +200,9 @@ class _SlotPool:
         self._xs_dev = None     # device mirror of xs, refreshed on admit
         self.z: Any = None                            # device pytree or None
         self.fs: Any = None                           # probe dz rows or None
+        self._pending: Optional[_PendingSegment] = None
+        self._staged: List[_RetireBatch] = []
+        self._readout_widths: set = set()   # pow2 readout cells traced
         self._probe_fn = None
         self._embed_fn = None
         self._segment_fn = None
@@ -190,29 +225,24 @@ class _SlotPool:
             def embed(xs):
                 return m.embed(xs)
 
+            # the segment cell donates the pool-sized carry buffers
+            # (z, fs) — Integrator.segment_cell documents the aliasing
+            # contract launch_segment/retire_pending are built around.
+            # With a mesh, the carry AND the per-slot conditioning rows
+            # shard over the mesh's slot axis and the depth scan stays
+            # local per shard; either way this is ONE
+            # (shape, seg[, mesh]) jit cell — one fused-kernel trace —
+            # across every refill pattern.
             mesh = self.sched.mesh
+            donate = self.sched.donate
             if mesh is None:
-                @jax.jit
-                def segment(xs, z, k, Ks, eps, fs):
-                    carry = SegmentCarry(z, k, Ks, eps, fs)
-                    carry, fin = integ.solve_segment(
-                        m.field_of(xs), carry, seg, s0=s0)
-                    return carry.z, carry.k, fin
+                segment = integ.segment_cell(m.field_of, seg, s0=s0,
+                                             donate=donate)
             else:
-                # multi-device pool: the carry AND the per-slot
-                # conditioning rows shard over the mesh's slot axis; the
-                # depth scan stays local per shard (sharded_segment), so
-                # this is still ONE (shape, seg, mesh) jit cell — one
-                # fused-kernel trace — across every refill pattern.
-                from repro.launch.mesh import sharded_segment
-
-                @jax.jit
-                def segment(xs, z, k, Ks, eps, fs):
-                    carry = SegmentCarry(z, k, Ks, eps, fs)
-                    carry, fin = sharded_segment(
-                        integ, m.field_of, xs, carry, seg, mesh=mesh,
-                        s0=s0, slot_axis=self.sched.slot_axis)
-                    return carry.z, carry.k, fin
+                from repro.launch.mesh import sharded_segment_cell
+                segment = sharded_segment_cell(
+                    integ, m.field_of, seg, mesh=mesh, s0=s0,
+                    slot_axis=self.sched.slot_axis, donate=donate)
 
             @jax.jit
             def readout(xs, z):
@@ -307,41 +337,118 @@ class _SlotPool:
         return probe_cost
 
     # --------------------------------------------------------- segment ----
-    def run_segment(self, now_done: float) -> Tuple[List[InflightCompleted],
-                                                    int, int]:
-        """One ``seg``-step advance of the whole pool; retire finished
-        slots. Returns (completions, useful_steps, occupied_slots)."""
-        _, _, segment_fn, readout_fn = self._cells()
-        sched = self.sched
-        k_old = self.k.copy()
+    def launch_segment(self, t_done: float) -> None:
+        """Dispatch one ``seg``-step advance of the pool WITHOUT reading
+        anything back: JAX async dispatch returns futures immediately,
+        so the device chews on the segment while the host does whatever
+        comes next. The donated carry buffers (z, fs) are consumed by
+        the call — the returned futures become the pool's next resident
+        buffers, and any read of the OLD state (readout gathers, refill
+        scatters) must already be enqueued, which the retire -> admit ->
+        launch tick order guarantees. The one blocking transfer (the
+        stacked retire meta) is deferred to ``retire_pending``."""
+        _, _, segment_fn, _ = self._cells()
+        assert self._pending is None, "one in-flight segment per pool"
         assert self._xs_dev is not None  # a busy pool has admitted
-        z, k_dev, fin = segment_fn(
+        k_old = self.k.copy()
+        occ = self.occupied.copy()
+        z, fs, meta = segment_fn(
             self._xs_dev, self.z, jnp.asarray(self.k),
             jnp.asarray(self.Ks), jnp.asarray(self.eps), self.fs)
-        self.z = z
-        self.k = np.array(k_dev)  # np.asarray of a jax array is read-only
-        occ = self.occupied
+        self.z, self.fs = z, fs
+        self._pending = _PendingSegment(meta=meta, k_old=k_old, occ=occ,
+                                        t_done=t_done)
+
+    def retire_pending(self) -> Tuple[int, int, int]:
+        """Block on the pending segment's stacked ``[k'; finished]``
+        meta pair — ONE batched device->host transfer per segment —
+        stage finished rows for retirement (gated readout enqueued
+        async), and free their slots. Returns (retired, useful_steps,
+        occupied_slots); the staged completions materialize later in
+        ``finalize_retired``."""
+        p = self._pending
+        assert p is not None, "retire_pending without a pending segment"
+        self._pending = None
+        meta = np.array(p.meta)   # the one blocking transfer per segment
+        self.k = meta[0]
+        occ = p.occ
         self.segments[occ] += 1
-        useful = int((self.k - k_old)[occ].sum())
-        finished = occ & np.asarray(fin)
-        done: List[InflightCompleted] = []
+        useful = int((self.k - p.k_old)[occ].sum())
+        finished = occ & (meta[1] != 0)
+        retired = 0
         if finished.any():
-            outs = np.asarray(readout_fn(self._xs_dev, self.z))
-            fused = sched.model.integ.fused_available(z=self.z)
-            for i in np.flatnonzero(finished):
-                K = int(self.Ks[i])
+            retired = self._stage_retire(np.flatnonzero(finished),
+                                         p.t_done)
+        return retired, useful, int(occ.sum())
+
+    def _stage_retire(self, idx: np.ndarray, t_done: float) -> int:
+        """Retire the slots ``idx``: enqueue the finished-rows readout
+        (async), snapshot their host rows, and mark them refillable."""
+        outs = self._readout_finished(idx)
+        self._staged.append(_RetireBatch(
+            idx=idx, outs=outs, t_done=t_done,
+            fused=self.sched.model.integ.fused_available(z=self.z),
+            uid=self.uid[idx].copy(), K=self.Ks[idx].copy(),
+            err=self.err[idx].copy(), t_submit=self.t_submit[idx].copy(),
+            t_admit=self.t_admit[idx].copy(),
+            segments=self.segments[idx].copy()))
+        self.uid[idx] = -1            # retire: slot becomes refillable
+        self.Ks[idx] = 0              # Ks==0 keeps the row frozen
+        self.eps[idx] = 1.0
+        self.k[idx] = 0
+        return len(idx)
+
+    def _readout_finished(self, idx: np.ndarray):
+        """Readout of ONLY the finished rows (it used to recompute the
+        whole pool — including empty ``Ks == 0`` rows — whenever any
+        single slot finished). Gather widths are padded to the next
+        power of two, capped at the pool width, so the readout jit cells
+        are ``(shape, width <= slots)``: a lone finishing slot pays a
+        width-1 readout, and the cell count stays log2(slots). Returns
+        the device future — materialization is ``finalize_retired``'s
+        job."""
+        _, _, _, readout_fn = self._cells()
+        w = min(1 << (len(idx) - 1).bit_length(), self.sched.slots)
+        pad = idx if w == len(idx) else np.concatenate(
+            [idx, np.repeat(idx[:1], w - len(idx))])
+        self._readout_widths.add(int(w))
+        jidx = jnp.asarray(pad)
+        z_rows = jax.tree_util.tree_map(lambda l: l[jidx], self.z)
+        return readout_fn(self._xs_dev[jidx], z_rows)
+
+    def finalize_retired(self) -> List[InflightCompleted]:
+        """Materialize staged completions — the only place readout rows
+        cross to the host. The overlap loop calls this AFTER dispatching
+        the next segments, so the transfer rides behind device work; the
+        sync loop calls it immediately."""
+        sched = self.sched
+        done: List[InflightCompleted] = []
+        for b in self._staged:
+            outs = np.asarray(b.outs)
+            for j in range(len(b.idx)):
+                K = int(b.K[j])
                 done.append(InflightCompleted(
-                    uid=int(self.uid[i]), outputs=outs[i], K=K,
+                    uid=int(b.uid[j]), outputs=outs[j], K=K,
                     nfe=sched.probe_nfe + sched.stages * K,
-                    err_probe=float(self.err[i]), fused_kernel=fused,
-                    t_submit=float(self.t_submit[i]),
-                    t_admit=float(self.t_admit[i]), t_done=now_done,
-                    segments=int(self.segments[i])))
-                self.uid[i] = -1          # retire: slot becomes refillable
-                self.Ks[i] = 0            # Ks==0 keeps the row frozen
-                self.eps[i] = 1.0
-                self.k[i] = 0
-        return done, useful, int(occ.sum())
+                    err_probe=float(b.err[j]), fused_kernel=b.fused,
+                    t_submit=float(b.t_submit[j]),
+                    t_admit=float(b.t_admit[j]), t_done=b.t_done,
+                    segments=int(b.segments[j])))
+        self._staged = []
+        return done
+
+    def run_segment(self, now_done: float) -> Tuple[List[InflightCompleted],
+                                                    int, int]:
+        """The SYNCHRONOUS segment: one ``seg``-step advance of the whole
+        pool, finished slots retired before returning. Exactly
+        ``launch_segment`` + ``retire_pending`` + ``finalize_retired``
+        with zero lag — the overlap loop runs the same three phases one
+        segment apart, which is why its completions are uid-for-uid
+        identical to this path (pinned in tests/test_scheduler.py).
+        Returns (completions, useful_steps, occupied_slots)."""
+        self.launch_segment(now_done)
+        _, useful, occ = self.retire_pending()
+        return self.finalize_retired(), useful, occ
 
 
 class InflightScheduler:
@@ -358,13 +465,23 @@ class InflightScheduler:
     state is data, so the host never needs to know which device holds
     which slot — and the probe path is unchanged (one pool-width probe
     cell on the default device). ``slots`` must be a multiple of the
-    axis size; checked here with a remedy-naming error."""
+    axis size; checked here with a remedy-naming error.
+
+    ``overlap=True`` swaps the synchronous tick for the pipelined one
+    (serve.py ``--overlap``): segment N+1 is dispatched while segment
+    N's retire metadata is still in flight, so host-side bookkeeping
+    overlaps device compute (see ``_step_overlap``). Completions,
+    virtual-clock stamps, and ledger totals are identical to the
+    synchronous loop — the sync path is kept as the oracle the overlap
+    path is pinned against."""
 
     def __init__(self, model: DepthModel,
                  engine_cfg: Optional[EngineConfig] = None,
                  *, slots: int = 4, seg: int = 2, mesh=None,
                  slot_axis: str = "data",
-                 oracle: Optional[CostOracle] = None):
+                 oracle: Optional[CostOracle] = None,
+                 overlap: bool = False,
+                 donate: Optional[bool] = None):
         engine_cfg = engine_cfg or EngineConfig()
         model = prepare_model(model, engine_cfg)
         if seg < 1:
@@ -386,6 +503,18 @@ class InflightScheduler:
         self.slots = int(slots)
         self.seg = int(seg)
         self.controller = make_controller(model.integ, engine_cfg)
+        self.overlap = bool(overlap)
+        # Donating the carry buffers halves pool memory on accelerators,
+        # where XLA aliases them in place without giving up async
+        # dispatch. The CPU client (jaxlib 0.4.x) runs donated
+        # computations SYNCHRONOUSLY — dispatch blocks until the segment
+        # finishes, which would serialize the overlap pipeline at launch
+        # — so the auto default keeps donation off on CPU; pass
+        # donate=True to force it (the aliasing contract itself compiles
+        # and verifies on every backend — tests/test_scheduler.py).
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self.donate = bool(donate)
         self.oracle: CostOracle = oracle or SequentialEvalOracle()
         self.stages = model.integ.tableau.stages
         self.now = 0.0
@@ -455,17 +584,23 @@ class InflightScheduler:
 
     # ------------------------------------------------------------ tick ----
     def step(self) -> List[InflightCompleted]:
-        """One scheduling round: (1) refill free slots from the queue
-        (probe-on-admission), (2) advance every busy pool by one segment,
-        (3) retire finished slots. Advances the virtual clock by the
-        tick's summed cost (the resource ledger); completions are stamped
-        at end-of-tick with only THEIR pool's probe + segment cost —
-        pools are concurrent cells, so per-request latency must not
-        depend on ``(shape, dtype)`` key insertion order (it used to:
-        the pre-oracle clock accumulated segment cost across pools in
-        dict-iteration order, billing later-iterated pools for every
-        earlier pool's segment; pinned in tests/test_scheduler.py)."""
-        cost = 0.0
+        """One scheduling round. The synchronous tick (default) admits,
+        advances every busy pool by one segment, and retires — blocking
+        on each pool's result before moving on. ``overlap=True`` runs
+        the pipelined tick instead: retire the PREVIOUS tick's segments,
+        admit into the freed slots, dispatch the next segments, and only
+        then materialize outputs — so host bookkeeping overlaps device
+        compute. Both paths admit identical request->slot assignments
+        and stamp identical virtual-clock times; only wall-clock
+        behavior differs."""
+        return self._step_overlap() if self.overlap else self._step_sync()
+
+    def _admit_tick(self) -> Tuple[float, int, Dict[Tuple, float]]:
+        """Refill free slots from the FIFO queue (probe-on-admission).
+        Shared verbatim by the sync and overlap ticks, so the two loops
+        admit identical request->slot assignments tick for tick — the
+        root of the uid-for-uid parity contract. Returns
+        (probe_cost, admitted, per-pool probe cost)."""
         probe_cost = 0.0
         admitted = 0
         pool_probe: Dict[Tuple, float] = {}
@@ -501,7 +636,37 @@ class InflightScheduler:
                 pool_probe[key] = pc
                 probe_cost += pc
                 admitted += len(batch)
-        cost += probe_cost
+        return probe_cost, admitted, pool_probe
+
+    def _finish_tick(self, *, cost, probe_cost, admitted, retired,
+                     useful, total, occupied) -> None:
+        """Advance the virtual clock and the resource ledgers — the one
+        accounting epilogue both tick variants share."""
+        self.now += cost
+        self.ticks += 1
+        self.total_cost += cost
+        self.total_probe_cost += probe_cost
+        self.total_useful_steps += useful
+        self.total_slot_steps += total
+        self.total_occupied_steps += occupied
+        self.last_report = TickReport(
+            cost=cost, probe_cost=probe_cost, admitted=admitted,
+            retired=retired, useful_steps=useful, total_steps=total,
+            occupied_steps=occupied)
+
+    def _step_sync(self) -> List[InflightCompleted]:
+        """The synchronous tick: (1) refill free slots from the queue
+        (probe-on-admission), (2) advance every busy pool by one segment,
+        (3) retire finished slots. Advances the virtual clock by the
+        tick's summed cost (the resource ledger); completions are stamped
+        at end-of-tick with only THEIR pool's probe + segment cost —
+        pools are concurrent cells, so per-request latency must not
+        depend on ``(shape, dtype)`` key insertion order (it used to:
+        the pre-oracle clock accumulated segment cost across pools in
+        dict-iteration order, billing later-iterated pools for every
+        earlier pool's segment; pinned in tests/test_scheduler.py)."""
+        probe_cost, admitted, pool_probe = self._admit_tick()
+        cost = probe_cost
         # -- segments
         done: List[InflightCompleted] = []
         useful = total = occupied = retired = 0
@@ -518,17 +683,60 @@ class InflightScheduler:
             useful += u
             total += self.slots * self.seg
             occupied += occ * self.seg
-        self.now += cost
-        self.ticks += 1
-        self.total_cost += cost
-        self.total_probe_cost += probe_cost
-        self.total_useful_steps += useful
-        self.total_slot_steps += total
-        self.total_occupied_steps += occupied
-        self.last_report = TickReport(
-            cost=cost, probe_cost=probe_cost, admitted=admitted,
-            retired=retired, useful_steps=useful, total_steps=total,
-            occupied_steps=occupied)
+        self._finish_tick(cost=cost, probe_cost=probe_cost,
+                          admitted=admitted, retired=retired,
+                          useful=useful, total=total, occupied=occupied)
+        return done
+
+    def _step_overlap(self) -> List[InflightCompleted]:
+        """The pipelined tick: launch segment N+1 with a one-segment-
+        lagged retire, so the device never idles through host
+        bookkeeping and the host never idles through a segment. Order:
+
+          1. **retire** every pool's PENDING segment (launched last
+             tick): block on its stacked ``[k'; finished]`` meta — by
+             now the device has had a full host-phase head start on it —
+             stage finished rows (readout gather enqueued async), free
+             their slots;
+          2. **admit** into the freed slots (``_admit_tick``, shared
+             with the sync path — identical request->slot assignments);
+          3. **launch** the next segment of every busy pool — async
+             dispatch returns immediately, the donated carry buffers
+             swap roles (in-flight vs resident), and every line of host
+             work after this point overlaps device compute;
+          4. **materialize** the staged completions — even the readout
+             device->host transfer rides behind the just-dispatched
+             segments.
+
+        Per-tick attribution differs from the sync loop (a segment's
+        useful/occupied steps and its retires land one tick later in
+        ``TickReport``), but per-request completions, virtual-clock
+        stamps, and end-of-run ledger totals are identical — pinned
+        uid-for-uid in tests/test_scheduler.py."""
+        done: List[InflightCompleted] = []
+        useful = total = occupied = retired = 0
+        for pool in self._pools.values():
+            if pool._pending is not None:
+                r, u, occ = pool.retire_pending()
+                retired += r
+                useful += u
+                total += self.slots * self.seg
+                occupied += occ * self.seg
+        probe_cost, admitted, pool_probe = self._admit_tick()
+        cost = probe_cost
+        for key, pool in self._pools.items():
+            if not pool.busy():
+                continue
+            seg_cost = self.oracle.segment_cost(pool.shape, self.seg,
+                                                self.slots, self.stages)
+            cost += seg_cost
+            pool.launch_segment(self.now + pool_probe.get(key, 0.0)
+                                + seg_cost)
+        for pool in self._pools.values():
+            done.extend(pool.finalize_retired())
+        self._finish_tick(cost=cost, probe_cost=probe_cost,
+                          admitted=admitted, retired=retired,
+                          useful=useful, total=total, occupied=occupied)
         return done
 
     # ----------------------------------------------------- convenience ----

@@ -26,7 +26,10 @@ the scheduler and reports p50/p99 latency + queue wait + masked-step
 waste (launch/workload.py); ``none`` submits the whole batch at once.
 --mesh N shards the slot pool over N devices ('data' axis, --slots
 global rows split row-wise; launch/mesh.py::make_serving_mesh) — one
-admission queue, per-device sub-pools, no collectives.
+admission queue, per-device sub-pools, no collectives. --overlap swaps
+the synchronous tick for the pipelined one (host bookkeeping overlaps
+the in-flight device segment; uid-for-uid identical completions), and
+--profile-dir saves a jax.profiler trace of the serving loop.
 
 Full flag reference with worked examples: docs/serving.md.
 """
@@ -45,6 +48,17 @@ from repro.launch.engine import (
     load_g_params,
 )
 from repro.models.lm import discrete_nfe, group_layout, init_lm, lm_forward
+
+
+def _profiled(profile_dir):
+    """``jax.profiler.trace`` around the serving loop when --profile-dir
+    is set (a no-op context otherwise): the saved timeline shows host
+    phases against device segments, which is how overlap regressions are
+    diagnosed (docs/serving.md)."""
+    import contextlib
+    if not profile_dir:
+        return contextlib.nullcontext()
+    return jax.profiler.trace(profile_dir)
 
 
 def main():
@@ -102,6 +116,17 @@ def main():
                          "'roofline' prices probes/segments/solves of the "
                          "served --arch in predicted device-us via the "
                          "analytic roofline model (roofline/costmodel.py)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="pipelined in-flight loop (--inflight only): "
+                         "dispatch segment N+1 while segment N's retire "
+                         "metadata is still in flight (JAX async dispatch "
+                         "+ donated carries); completions are uid-for-uid "
+                         "identical to the synchronous loop")
+    ap.add_argument("--profile-dir", default=None,
+                    help="wrap the serving loop in jax.profiler.trace and "
+                         "save the trace here (inspect with TensorBoard/"
+                         "Perfetto) — wall-clock regressions become "
+                         "diagnosable from the saved timeline")
     args = ap.parse_args()
     if args.mesh and not args.inflight:
         # same policy as --g-ckpt: a silently ignored flag would let a
@@ -109,6 +134,12 @@ def main():
         raise SystemExit("--mesh shards the in-flight slot pool; pass "
                          "--inflight with it (the drain engine has no "
                          "slot pool to shard)")
+    if args.overlap and not args.inflight:
+        # same policy: a run labeled overlapped must not silently report
+        # drain-engine numbers
+        raise SystemExit("--overlap pipelines the in-flight segment loop; "
+                         "pass --inflight with it (the drain engine has "
+                         "no segment loop to overlap)")
 
     cfg = get(args.arch)
     if args.reduced:
@@ -119,7 +150,8 @@ def main():
 
     if args.solver == "discrete":
         t0 = time.time()
-        toks = greedy_generate(params, cfg, prompt, args.gen)
+        with _profiled(args.profile_dir):
+            toks = greedy_generate(params, cfg, prompt, args.gen)
         dt = time.time() - t0
         print(f"[discrete] {args.batch}x{args.gen} tokens in {dt:.2f}s "
               f"({args.batch * args.gen / dt:.1f} tok/s), "
@@ -171,23 +203,25 @@ def main():
             from repro.launch.mesh import make_serving_mesh
             mesh = make_serving_mesh(args.mesh)
         sched = InflightScheduler(model, ecfg, slots=args.slots,
-                                  seg=args.seg, mesh=mesh, oracle=oracle)
+                                  seg=args.seg, mesh=mesh, oracle=oracle,
+                                  overlap=args.overlap)
         xs = np.asarray(prompt)
         t0 = time.time()
-        if args.arrival_trace == "none":
-            results = sched.run(xs)
-        else:
-            trace = poisson_trace(xs, rate=args.arrival_rate,
-                                  seed=args.seed) \
-                if args.arrival_trace == "poisson" else \
-                bursty_trace(xs, burst=args.slots,
-                             gap=args.slots / args.arrival_rate,
-                             seed=args.seed)
-            report = replay_scheduler(sched, trace)
-            # records join back to prompt rows by uid (arrival order)
-            results = sorted(report.records, key=lambda r: r.uid)
-            print(f"[inflight {args.arrival_trace}] "
-                  f"{latency_stats(report)}")
+        with _profiled(args.profile_dir):
+            if args.arrival_trace == "none":
+                results = sched.run(xs)
+            else:
+                trace = poisson_trace(xs, rate=args.arrival_rate,
+                                      seed=args.seed) \
+                    if args.arrival_trace == "poisson" else \
+                    bursty_trace(xs, burst=args.slots,
+                                 gap=args.slots / args.arrival_rate,
+                                 seed=args.seed)
+                report = replay_scheduler(sched, trace)
+                # records join back to prompt rows by uid (arrival order)
+                results = sorted(report.records, key=lambda r: r.uid)
+                print(f"[inflight {args.arrival_trace}] "
+                      f"{latency_stats(report)}")
         dt = time.time() - t0
         agree = [float(np.mean(np.argmax(r.outputs, -1) == full_top[i]))
                  for i, r in enumerate(results)]
@@ -207,7 +241,8 @@ def main():
 
     engine = MultiRateEngine(model, ecfg, oracle=oracle)
     t0 = time.time()
-    results = engine.run(np.asarray(prompt))
+    with _profiled(args.profile_dir):
+        results = engine.run(np.asarray(prompt))
     dt = time.time() - t0
     agree = [float(np.mean(np.argmax(r.outputs, -1) == full_top[i]))
              for i, r in enumerate(results)]

@@ -358,6 +358,23 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     s1, s4 = latency_stats(rep_1), latency_stats(rep_4)
     assert s1 == s4, (s1, s4)
     print("SHARDED_POOL_REPLAY_OK")
+
+    # the pipelined overlap loop on the SAME forced mesh: completions
+    # uid-for-uid bitwise identical to the sync sharded replay
+    rep_o = replay_scheduler(
+        InflightScheduler(model(), ecfg, slots=8, seg=2, mesh=mesh,
+                          overlap=True), trace)
+    assert len(rep_o.records) == 24
+    out_4 = {r.uid: r for r in rep_4.records}
+    for r in rep_o.records:
+        ref = out_4[r.uid]
+        assert r.K == ref.K and r.nfe == ref.nfe
+        assert (r.t_submit, r.t_admit, r.t_done) == (
+            ref.t_submit, ref.t_admit, ref.t_done)
+        assert np.array_equal(np.asarray(r.outputs),
+                              np.asarray(ref.outputs))
+    assert latency_stats(rep_o) == s4
+    print("SHARDED_OVERLAP_PARITY_OK")
 """)
 
 
@@ -378,7 +395,8 @@ def test_sharded_slot_pool_debug_mesh_subprocess():
     assert proc.returncode == 0, out[-4000:]
     for marker in ("SHARDED_SEGMENT_PARITY_OK",
                    "SHARDED_SEGMENT_DIVISIBILITY_OK",
-                   "SHARDED_POOL_REPLAY_OK"):
+                   "SHARDED_POOL_REPLAY_OK",
+                   "SHARDED_OVERLAP_PARITY_OK"):
         assert marker in out, (marker, out[-4000:])
 
 
@@ -620,6 +638,121 @@ def test_bench_schema_check_catches_malformed_files(tmp_path):
     errs = bench_run.check_bench_files(str(tmp_path))
     assert any("BENCH_scheduler.json" in e and "malformed" in e
                for e in errs)
+
+
+# ------------------------------------------- overlap + donated carries ----
+
+def test_overlap_replay_uid_for_uid_identical_to_sync():
+    """ACCEPTANCE: the pipelined ``overlap=True`` loop replays a seeded
+    Poisson trace uid-for-uid identical to the synchronous loop —
+    bitwise-equal outputs, same K/nfe/segments, same virtual-clock
+    stamps, same latency summary. The sync path is the oracle the
+    pipeline is pinned against."""
+    ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, max_batch=8,
+                        fused=True)
+    xs = heterogeneous_requests(24, 8, seed=2)
+    trace = poisson_trace(xs, rate=0.3, seed=4)
+    rep_s = replay_scheduler(
+        InflightScheduler(_toy_model(fused=True), ecfg, slots=4, seg=2),
+        trace)
+    rep_o = replay_scheduler(
+        InflightScheduler(_toy_model(fused=True), ecfg, slots=4, seg=2,
+                          overlap=True), trace)
+    assert len(rep_o.records) == len(rep_s.records) == 24
+    sync = {r.uid: r for r in rep_s.records}
+    for r in rep_o.records:
+        ref = sync[r.uid]
+        assert (r.K, r.nfe) == (ref.K, ref.nfe)
+        assert (r.t_submit, r.t_admit, r.t_done) == (
+            ref.t_submit, ref.t_admit, ref.t_done)
+        assert np.array_equal(np.asarray(r.outputs),
+                              np.asarray(ref.outputs))
+    assert latency_stats(rep_o) == latency_stats(rep_s)
+
+
+def test_overlap_one_segment_retire_lag_and_cost_parity():
+    """The overlap tick retires one segment LATE: completions finishing
+    in segment N surface from step N+1 (launch first, read flags next
+    tick), with the same per-pool cost stamps and ledger totals as the
+    sync multi-pool pin above."""
+    ecfg = EngineConfig(buckets=(2,), controller="fixed", fixed_K=2)
+    sched = InflightScheduler(_toy_model(), ecfg, slots=2, seg=2,
+                              overlap=True)
+    for d in (3, 5):
+        sched.submit(np.full((d,), -2.0, np.float32))
+    assert sched.step() == []         # segments in flight, flags unread
+    done = sched.step()               # lagged retire surfaces both
+    assert len(done) == 2
+    assert [c.t_done for c in done] == [2.0, 2.0]
+    assert sched.total_cost == 4.0
+    assert not sched.pending
+
+
+def test_overlap_requires_multicore_host_is_documented():
+    """The donate auto-default is platform-aware: off on the CPU client
+    (where a donating call dispatches synchronously and would serialize
+    the pipeline at launch), forced values win either way."""
+    ecfg = EngineConfig(buckets=(2,), controller="fixed", fixed_K=2)
+    assert InflightScheduler(_toy_model(), ecfg).donate is (
+        jax.default_backend() != "cpu")
+    assert InflightScheduler(_toy_model(), ecfg, donate=True).donate
+    assert not InflightScheduler(_toy_model(), ecfg, donate=False).donate
+
+
+def test_segment_cell_donates_carry_buffers():
+    """ACCEPTANCE: the compiled segment cell reports the pool-sized
+    carry buffers (z, first_stage) as donated — input/output aliasing
+    in the compiled memory analysis, donated inputs deleted after the
+    call, conditioning rows untouched."""
+    m = _toy_model(fused=True)
+    cell = m.integ.segment_cell(m.field_of, seg=2, donate=True)
+    B, d = 4, 16
+    xs = jnp.zeros((B, d), jnp.float32)
+    z = jnp.ones((B, d), jnp.float32)
+    fs = jnp.zeros((B, d), jnp.float32)
+    k = jnp.zeros((B,), jnp.int32)
+    Ks = jnp.full((B,), 4, jnp.int32)
+    eps = jnp.full((B,), 0.25, jnp.float32)
+    compiled = cell.lower(xs, z, k, Ks, eps, fs).compile()
+    assert "input_output_alias" in compiled.as_text()
+    mem = compiled.memory_analysis()
+    assert mem.alias_size_in_bytes >= z.nbytes + fs.nbytes, (
+        mem.alias_size_in_bytes)
+    z2, fs2, meta = cell(xs, z, k, Ks, eps, fs)
+    assert z.is_deleted() and fs.is_deleted()
+    assert not xs.is_deleted()
+    meta = np.array(meta)
+    assert meta.shape == (2, B) and meta.dtype == np.int32
+    np.testing.assert_array_equal(meta[0], [2, 2, 2, 2])   # k' after seg=2
+    np.testing.assert_array_equal(meta[1], [0, 0, 0, 0])   # K=4 unfinished
+
+
+def test_retire_readout_gated_to_finished_rows():
+    """BUGFIX pin: retirement reads out only the FINISHED rows (padded
+    to a pow2 cell), never the full pool — the readout jit is traced at
+    sub-pool widths and the pool records exactly those widths."""
+    traced = []
+
+    def readout(x, zT):
+        traced.append(zT.shape[0])    # runs at TRACE time only
+        return zT
+
+    base = _toy_model(fused=True)
+    model = DepthModel(embed=base.embed, field_of=base.field_of,
+                       readout=readout, integ=base.integ)
+    ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, max_batch=8,
+                        fused=True)
+    xs = heterogeneous_requests(24, 8, seed=2)
+    sched = InflightScheduler(model, ecfg, slots=8, seg=2)
+    rep = replay_scheduler(sched, poisson_trace(xs, rate=0.5, seed=4))
+    assert len(rep.records) == 24
+    pool = next(iter(sched._pools.values()))
+    assert traced, "readout never traced"
+    assert set(traced) == pool._readout_widths
+    # a streaming trace retires stragglers in sub-pool batches: the
+    # pre-fix full-pool readout would have traced ONLY width 8
+    assert min(traced) < sched.slots, traced
+    assert all(w <= sched.slots and w & (w - 1) == 0 for w in traced)
 
 
 # ------------------------------------------------------- tier-2 sweep ----
