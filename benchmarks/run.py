@@ -14,9 +14,11 @@ Perf trajectory files at the repo root (uploaded as CI artifacts on every
 tier-1 run): BENCH_kernels.json (bench_kernels — fused hyper_step traffic
 model + timings per tableau), BENCH_serve.json (bench_serve — the
 multi-rate NFE/agreement pareto), BENCH_scheduler.json
-(bench_scheduler — serving-latency head-to-head, p50/p99/waste), and
+(bench_scheduler — serving-latency head-to-head, p50/p99/waste),
 BENCH_wallclock.json (bench_wallclock — the real-clock overlap-vs-sync
-serving race + async-dispatch mechanism + predicted-vs-measured join).
+serving race + async-dispatch mechanism + predicted-vs-measured join),
+and BENCH_faults.json (bench_faults — the chaos harness: zero-hang,
+status accounting, and fault-free parity under seeded fault injection).
 
 ``--check`` is the BENCH-schema smoke gate (tier-1 CI): it validates
 every committed BENCH_*.json — parseable, non-empty list of rows, every
@@ -44,6 +46,7 @@ MODULES = [
     "bench_cdepth_lm",
     "bench_serve",
     "bench_scheduler",
+    "bench_faults",
 ]
 
 REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
@@ -63,6 +66,9 @@ BENCH_REQUIRED = {
     # 'req_per_s' pins the real-clock serving rows, 'agreement' the
     # uid-for-uid overlap-vs-sync parity every timing row must carry
     "BENCH_wallclock.json": ("req_per_s", "agreement"),
+    # the chaos harness (bench_faults): 'zero_hang' pins the liveness
+    # ledger every fault-mix row carries, 'mix' the fault taxonomy
+    "BENCH_faults.json": ("zero_hang", "mix"),
 }
 
 
@@ -115,6 +121,47 @@ def check_bench_files(root: str = REPO_ROOT) -> list:
             errors.extend(_check_oracle_section(name, rows, root))
         if name == "BENCH_wallclock.json":
             errors.extend(_check_wallclock_section(name, rows))
+        if name == "BENCH_faults.json":
+            errors.extend(_check_faults_section(name, rows))
+    return errors
+
+
+def _check_faults_section(name: str, rows: list) -> list:
+    """Chaos-bench invariants: every fault-mix row terminal-accounted
+    and hang-free, a fault-free-parity check that PASSED (the hardened
+    loops are bitwise the old loops when nothing is injected), sync ==
+    overlap under identical fault schedules, and a multi-device chaos
+    row (the quarantine works on the sharded pool too)."""
+    errors = []
+    fault_rows = [r for r in rows if isinstance(r, dict)
+                  and "zero_hang" in r]
+    if not fault_rows:
+        errors.append(f"{name}: no fault-mix rows (zero_hang ledger)")
+    hung = [f"{r.get('mode')}/{r.get('mix')}" for r in fault_rows
+            if not r.get("zero_hang")]
+    if hung:
+        errors.append(f"{name}: rows {hung} lost requests — a submitted "
+                      "uid never reached a terminal record")
+    bad_acct = [f"{r.get('mode')}/{r.get('mix')}" for r in fault_rows
+                if not r.get("status_ok")]
+    if bad_acct:
+        errors.append(f"{name}: rows {bad_acct} have a status histogram "
+                      "that does not sum to the submitted count")
+    if not any(isinstance(r, dict) and r.get("devices", 0) > 1
+               for r in rows):
+        errors.append(f"{name}: no multi-device chaos row (devices > 1) "
+                      "— bench_faults' sharded section is missing")
+    verdicts = [r for r in rows if isinstance(r, dict)
+                and r.get("mode") == "verdict"]
+    if not verdicts:
+        errors.append(f"{name}: missing the verdict row (zero_hang_all "
+                      "scoreboard)")
+    else:
+        for key in ("zero_hang_all", "fault_free_parity",
+                    "status_accounting_ok", "overlap_parity_all"):
+            if verdicts[0].get(key) is not True:
+                errors.append(f"{name}: verdict {key} is not True — "
+                              "the hardening contract regressed")
     return errors
 
 

@@ -210,6 +210,24 @@ def reset_fused_fallback_warning() -> None:
     _fused_fallback.reset()
 
 
+def _nonfinite_rows(z: Pytree, like: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot non-finite flag: True where any inexact element of a
+    slot's state row is NaN/Inf, reduced over every non-slot axis of
+    every inexact leaf. Plain jnp reductions — no extra kernel trace —
+    and row-wise, so it composes with the slot-sharded segment (each
+    row's flag depends only on that row's data; no collective).
+    ``like`` supplies the (B,) shape/backing for stateless pools."""
+    flags = [jnp.any(~jnp.isfinite(l), axis=tuple(range(1, jnp.ndim(l))))
+             for l in jax.tree_util.tree_leaves(z)
+             if jnp.issubdtype(jnp.asarray(l).dtype, jnp.inexact)]
+    if not flags:
+        return jnp.zeros_like(like, dtype=bool)
+    bad = flags[0]
+    for f in flags[1:]:
+        bad = bad | f
+    return bad
+
+
 class SegmentCarry(NamedTuple):
     """Resumable per-slot state of a segmented multi-rate solve.
 
@@ -647,11 +665,17 @@ class Integrator:
         aliasing, and ``Ks``/``eps`` persist host-side across segments —
         so they are passed by value.
 
-        ``meta`` is the stacked ``(2, B)`` int32 ``[k'; finished]`` row
-        pair: retiring a segment costs ONE device->host transfer, and
-        because jit dispatch is async the caller can hold ``meta`` as a
-        future and read it a full segment later (the overlap loop in
-        launch/scheduler.py). ``fs'`` is the first_stage passthrough —
+        ``meta`` is the stacked ``(3, B)`` int32
+        ``[k'; finished; nonfinite]`` rows: retiring a segment costs ONE
+        device->host transfer, and because jit dispatch is async the
+        caller can hold ``meta`` as a future and read it a full segment
+        later (the overlap loop in launch/scheduler.py). The third row
+        is the per-slot non-finite quarantine flag (``_nonfinite_rows``
+        over the post-segment state): a diverging slot is detected
+        inside the compiled cell — no extra transfer, no extra kernel
+        trace, and row-wise so it shards with the carry — and the
+        scheduler force-retires it with ``status="diverged"`` instead
+        of recycling poisoned state. ``fs'`` is the first_stage passthrough —
         ``solve_segment`` never mutates it, so the donated input aliases
         straight to the output; when the pool runs probeless (``fs is
         None``) the slot contributes no donated buffer and the cell
@@ -672,8 +696,10 @@ class Integrator:
                 out, fin = self._solve_segment_sharded(
                     None, carry, seg, s0, mesh, slot_axis,
                     field_of=field_of, cond=xs)
+            bad = _nonfinite_rows(out.z, like=fin)
             meta = jnp.stack([out.k.astype(jnp.int32),
-                              fin.astype(jnp.int32)])
+                              fin.astype(jnp.int32),
+                              bad.astype(jnp.int32)])
             return out.z, out.first_stage, meta
 
         return jax.jit(run, donate_argnums=(1, 5) if donate else ())

@@ -1,18 +1,36 @@
 """Fault-tolerance utilities: step watchdog (straggler detection), retry
-policy, and simulated-failure injection for tests.
+policy, and simulated-failure injection for tests and the chaos bench.
 
 On a real multi-pod deployment the failure signals come from the runtime
 (pre-emption notices, ICI link errors, heartbeat timeouts); in this
 container we implement the *control logic* — deadline monitoring, bounded
 restart-from-checkpoint retries, and exclusion notes — and inject failures
 synthetically to exercise it end to end (tests/test_fault_tolerance.py).
+
+Two bounded-retry mechanisms live here and share one idea — a failure is
+retried at most N times before the caller gets the best-effort answer:
+
+  * ``StepWatchdog`` + ``WatchdogConfig`` guard TRAINING steps (walltime
+    deadline, NaN screening, restart-from-checkpoint budget);
+  * ``RetryPolicy`` guards SERVING requests (launch/scheduler.py /
+    launch/engine.py): a request whose solve diverged is retried once at
+    a finer mesh bucket before being returned ``status="diverged"``.
+
+``FaultInjector`` is the serving-side chaos source (seeded, hash-keyed —
+deterministic per (seed, uid) regardless of loop interleaving, so the
+sync and overlap ticks see IDENTICAL faults); ``FailureInjector`` is the
+training-side one (raise at given steps).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import logging
+import math
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
+
+import numpy as np
 
 log = logging.getLogger("repro.fault")
 
@@ -26,20 +44,34 @@ class WatchdogConfig:
     step_deadline_s: float = 600.0     # straggler threshold
     max_restarts: int = 3              # per incident window
     nan_is_failure: bool = True
+    # close the incident window on the first clean step after a failure:
+    # the restart budget then bounds CONSECUTIVE failures (a fleet that
+    # hits one transient per day never exhausts it), instead of the
+    # lifetime total. Default False: the historical budget-for-the-whole-
+    # run accounting, which tests/test_fault_tolerance.py pins.
+    reset_on_success: bool = False
 
 
 class StepWatchdog:
     """Wraps step execution: walltime deadline + NaN screening + restart
     accounting. Synchronous SPMD means a straggler shows up as a slow step
     everywhere; the mitigation at fleet scale is restart-without-the-bad-
-    host from the last checkpoint, which maps onto restore() here."""
+    host from the last checkpoint, which maps onto restore() here.
+
+    ``run(fn, *args, loss_of=...)`` owns the NaN screen: when
+    ``cfg.nan_is_failure`` and ``loss_of(out)`` is non-finite, it raises
+    ``StepFailure`` itself. (It used to leave the screen to callers —
+    ``nan_is_failure`` sat in the config while every call site
+    re-implemented the check ad hoc; launch/train.py was the one caller
+    that remembered.)"""
 
     def __init__(self, cfg: WatchdogConfig):
         self.cfg = cfg
         self.restarts = 0
         self.step_times: list = []
 
-    def run(self, fn: Callable, *args):
+    def run(self, fn: Callable, *args,
+            loss_of: Optional[Callable] = None):
         t0 = time.time()
         out = fn(*args)
         dt = time.time() - t0
@@ -47,6 +79,14 @@ class StepWatchdog:
         if dt > self.cfg.step_deadline_s:
             log.warning("step exceeded deadline: %.1fs > %.1fs (straggler?)",
                         dt, self.cfg.step_deadline_s)
+        if loss_of is not None and self.cfg.nan_is_failure:
+            loss = float(loss_of(out))
+            if not math.isfinite(loss):
+                raise StepFailure(f"non-finite loss: {loss}")
+        if self.cfg.reset_on_success and self.restarts:
+            log.info("clean step after %d restart(s): incident window "
+                     "closed", self.restarts)
+            self.restarts = 0
         return out
 
     def record_failure(self) -> bool:
@@ -57,6 +97,108 @@ class StepWatchdog:
             return False
         log.warning("restart %d/%d", self.restarts, self.cfg.max_restarts)
         return True
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded per-request retry ladder for the serving loops — the
+    request-level analog of the watchdog's restart budget.
+
+    A request whose slot is force-retired (non-finite quarantine, or a
+    deadline eviction when opted in) is re-queued at the NEXT-FINER mesh
+    bucket (``K_floor`` escalation in launch/scheduler.py) — or, when
+    its failed K was already the finest bucket, re-run once at that same
+    bucket (a transient fault deserves one clean pass) — at most
+    ``max_retries`` times; after that the caller gets the best-effort
+    partial readout with a terminal status. Deadline evictions are not
+    retried by
+    default: a finer mesh cannot un-miss a deadline (add ``"deadline"``
+    to ``retry_statuses`` to opt in anyway)."""
+
+    max_retries: int = 1
+    retry_statuses: Tuple[str, ...] = ("diverged",)
+
+    def should_retry(self, status: str, attempts: int) -> bool:
+        return status in self.retry_statuses and attempts < self.max_retries
+
+
+def _hash01(*keys) -> float:
+    """Deterministic [0, 1) hash of the key tuple — stable across
+    processes and call order (unlike ``random`` state or ``hash()``),
+    so the sync and overlap loops draw identical fault decisions.
+
+    blake2b, not crc32: CRC is a linear code, so key tuples that differ
+    only in a trailing integer (consecutive uids) land in a narrow band
+    and a small poison fraction can silently select nothing."""
+    digest = hashlib.blake2b(repr(keys).encode(), digest_size=8).digest()
+    return int.from_bytes(digest, "big") / 2.0 ** 64
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Seeded serving-chaos source (benchmarks/bench_faults.py): every
+    decision is a pure function of ``(seed, site, uid-or-tick[, n])``
+    via ``_hash01``, never of call order — the sync and overlap ticks
+    (and re-runs) see bitwise-identical fault schedules.
+
+    Three fault sites, all host-side (no extra device transfer):
+
+      * ``corrupt_admission`` — NaN-poison a fraction of request inputs
+        at admission; the poisoned solve diverges and the segment cell's
+        quarantine flag force-retires it. ``nan_transient=True`` poisons
+        only attempt 0, so a retried request runs clean (exercising the
+        ``retried`` terminal status); ``False`` poisons every attempt
+        (exercising ``diverged``).
+      * ``drop_retire_flags`` — suppress finished flags with probability
+        ``drop_flag_p`` per (uid, segment) BEFORE the scheduler reads
+        them (a lost completion signal). Keyed on the slot's segment
+        count, so a dropped flag is re-drawn next segment and the
+        request still terminates (zero-hang) for any ``p < 1``.
+      * ``inflate_segment_cost`` — multiply a fraction of dispatched
+        segments' cost by ``straggle_factor`` (virtual stragglers on the
+        oracle clock), pushing in-flight requests past their deadlines.
+        Keyed on the scheduler's dispatch-sequence counter, NOT its tick
+        counter: the overlap loop burns retire-only flush ticks at pool
+        drain, so tick counters drift across loops while the dispatch
+        sequence stays identical.
+    """
+
+    seed: int = 0
+    nan_uid_frac: float = 0.0
+    nan_transient: bool = True
+    drop_flag_p: float = 0.0
+    straggle_tick_frac: float = 0.0
+    straggle_factor: float = 4.0
+
+    def corrupt_admission(self, uid: int, attempts: int,
+                          x: np.ndarray) -> np.ndarray:
+        if self.nan_uid_frac <= 0.0:
+            return x
+        if self.nan_transient and attempts > 0:
+            return x
+        if _hash01(self.seed, "nan", int(uid)) < self.nan_uid_frac:
+            x = np.array(x, copy=True)
+            x.reshape(-1)[0] = np.nan
+        return x
+
+    def drop_retire_flags(self, uids: np.ndarray, segments: np.ndarray,
+                          finished: np.ndarray) -> np.ndarray:
+        if self.drop_flag_p <= 0.0:
+            return finished
+        out = finished.copy()
+        for i in np.flatnonzero(finished):
+            if _hash01(self.seed, "flag", int(uids[i]),
+                       int(segments[i])) < self.drop_flag_p:
+                out[i] = False
+        return out
+
+    def inflate_segment_cost(self, seq: int, cost: float) -> float:
+        if self.straggle_tick_frac <= 0.0:
+            return cost
+        if _hash01(self.seed, "straggle", int(seq)) \
+                < self.straggle_tick_frac:
+            return cost * self.straggle_factor
+        return cost
 
 
 class FailureInjector:

@@ -164,6 +164,49 @@ def reset_snap_overflow_warning() -> None:
     _snap_overflow.reset()
 
 
+# non-finite probe latch: a NaN/Inf probe error used to select k_max
+# SILENTLY (core/controllers.py::mesh_for_tolerance clamps inside jit,
+# where it cannot warn) — both serving loops now screen the materialized
+# error row host-side, warn once, and thread the count into
+# StepReport/TickReport.probe_nonfinite; the request itself is handled
+# by the quarantine layer (its state is non-finite from step one, so the
+# segment cell's nonfinite meta row force-retires it).
+_probe_nonfinite = OneTimeWarning()
+
+
+def reset_probe_nonfinite_warning() -> None:
+    """Re-arm the one-time non-finite-probe RuntimeWarning (test
+    isolation)."""
+    _probe_nonfinite.reset()
+
+
+def screen_probe_errors(errs: np.ndarray) -> int:
+    """Count non-finite probe errors in a materialized error row and
+    warn once. ``mesh_for_tolerance`` already routes such requests to
+    ``k_max`` (the conservative mesh), but inside jit it cannot signal —
+    this host-side screen is where the silent clamp becomes observable.
+    Shared by MultiRateEngine.step and the scheduler's admission."""
+    n_bad = int((~np.isfinite(np.asarray(errs))).sum())
+    if n_bad:
+        _probe_nonfinite.warn(
+            f"non-finite probe error for {n_bad} request(s): the probe "
+            "step itself blew up, so the controller assigned k_max (the "
+            "finest mesh). The solve is likely to diverge too — the "
+            "non-finite quarantine will force-retire it with "
+            "status='diverged'.", stacklevel=3)
+    return n_bad
+
+
+def next_bucket_above(K: int, buckets: Sequence[int]) -> Optional[int]:
+    """The finest configured bucket strictly greater than ``K`` — the
+    retry ladder's escalation rule (a diverged K-bucket solve retries at
+    the next-finer mesh). None when ``K`` is already the top bucket."""
+    for b in sorted(buckets):
+        if b > K:
+            return int(b)
+    return None
+
+
 def snap_to_buckets(Ks: np.ndarray, buckets: Sequence[int]) -> np.ndarray:
     """Smallest configured bucket >= K (largest bucket when K overshoots,
     with a one-time warning — that clamp integrates COARSER than asked).
@@ -272,6 +315,7 @@ class StepReport:
     useful_steps: int = 0             # sum of per-sample K over served rows
     total_steps: int = 0              # sum of batch_rows * k_max over batches
     batches: int = 0
+    probe_nonfinite: int = 0          # non-finite probe errors this drain
     finish_offset: Dict[int, float] = dataclasses.field(default_factory=dict)
 
     @property
@@ -280,10 +324,32 @@ class StepReport:
         return self.total_steps - self.useful_steps
 
 
+# terminal request statuses both serving loops stamp (docs/serving.md
+# "Failure semantics" carries the operator-facing glossary; the docs
+# gate in tests/test_docs.py asserts against THIS tuple):
+#   ok        — completed its mesh, first attempt
+#   retried   — completed after >= 1 quarantine/eviction retry
+#   diverged  — non-finite state, retry ladder exhausted (best-effort
+#               outputs: the poisoned partial readout)
+#   deadline  — evicted past its deadline (best-effort partial readout,
+#               or none if it expired while still queued)
+#   shed      — refused at admission by the overload policy (no outputs)
+STATUSES = ("ok", "retried", "diverged", "deadline", "shed")
+
+
+class QueueFull(RuntimeError):
+    """Bounded admission queue is full under overload_policy='block'.
+    Callers back off and resubmit (``can_submit()`` is the non-raising
+    probe; launch/workload.py's replay drivers defer the arrival)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class Request:
     uid: int
     x: np.ndarray                 # one request's input (no batch axis)
+    deadline: Optional[float] = None  # oracle-clock deadline (None = none)
+    attempts: int = 0             # completed (failed) serve attempts so far
+    K_floor: int = 0              # retry ladder: minimum bucket on re-probe
 
 
 @dataclasses.dataclass(frozen=True)
@@ -294,6 +360,7 @@ class Completed:
     nfe: int                      # per-request NFE, probe included
     err_probe: float              # controller's local-error estimate
     fused_kernel: bool            # Pallas fused path in play for the solve
+    status: str = "ok"            # terminal status (STATUSES)
 
 
 class MultiRateEngine:
@@ -303,14 +370,29 @@ class MultiRateEngine:
     compiles once per cell."""
 
     def __init__(self, model: DepthModel, engine_cfg: EngineConfig,
-                 oracle=None):
+                 oracle=None, *, queue_cap: Optional[int] = None,
+                 overload_policy: str = "shed", retry=None,
+                 fault_injector=None):
+        from repro.distributed.fault import RetryPolicy
         from repro.launch.oracle import SequentialEvalOracle
+        if overload_policy not in ("shed", "degrade", "block"):
+            raise ValueError(f"unknown overload_policy {overload_policy!r} "
+                             "(shed | degrade | block)")
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1, got {queue_cap} "
+                             "(a zero-width queue can never admit)")
         self.model = prepare_model(model, engine_cfg)
         self.ecfg = engine_cfg
         self.controller = make_controller(self.model.integ, self.ecfg)
         self.oracle = oracle or SequentialEvalOracle()
+        self.queue_cap = queue_cap
+        self.overload_policy = overload_policy
+        self.retry = retry or RetryPolicy()
+        self.fault_injector = fault_injector
         self._queue: deque = deque()
         self._uid = 0
+        self._shed: List[Completed] = []
+        self._nfe_extra: Dict[int, int] = {}   # failed attempts' NFE per uid
         self._probe_fns: Dict[Tuple, Any] = {}
         self._solve_fns: Dict[Tuple, Any] = {}
         self.last_report = StepReport()
@@ -340,13 +422,45 @@ class MultiRateEngine:
         return np.asarray(Ks), np.asarray(errs)
 
     # ----------------------------------------------------------- queue ----
-    def submit(self, x) -> int:
+    def can_submit(self) -> bool:
+        """False iff the bounded queue is full under ``block`` (the only
+        policy that pushes backpressure to the caller; ``shed`` admits
+        the submit and refuses the request, ``degrade`` admits and caps
+        K under pressure)."""
+        return not (self.queue_cap is not None
+                    and self.overload_policy == "block"
+                    and len(self._queue) >= self.queue_cap)
+
+    def submit(self, x, deadline: Optional[float] = None) -> int:
+        """Queue a request. ``deadline`` is an absolute time on the
+        replay clock (``step(now=...)``); requests past it at drain
+        start are dropped with ``status="deadline"``. A full bounded
+        queue sheds (terminal ``status="shed"``, surfaced by the next
+        ``step()``) or raises ``QueueFull`` under ``block``."""
+        if self.queue_cap is not None \
+                and len(self._queue) >= self.queue_cap:
+            if self.overload_policy == "block":
+                raise QueueFull(
+                    f"admission queue at cap {self.queue_cap} under "
+                    "overload_policy='block'; poll can_submit() and "
+                    "resubmit")
+            if self.overload_policy == "shed":
+                self._uid += 1
+                self._shed.append(Completed(
+                    uid=self._uid, outputs=None, K=0, nfe=0,
+                    err_probe=0.0, fused_kernel=False, status="shed"))
+                return self._uid
+            # degrade: admit past the cap; the drain caps K one bucket
+            # down while the queue stays over pressure (see step())
         self._uid += 1
-        self._queue.append(Request(uid=self._uid, x=np.asarray(x)))
+        self._queue.append(Request(uid=self._uid, x=np.asarray(x),
+                                   deadline=deadline))
         return self._uid
 
     def __len__(self) -> int:
-        return len(self._queue)
+        # shed records count until a step() surfaces them, so drive
+        # loops (run / replay_engine) never exit with terminals unread
+        return len(self._queue) + len(self._shed)
 
     # ------------------------------------------------------- jit cells ----
     def _probe_fn(self, shape):
@@ -385,30 +499,57 @@ class MultiRateEngine:
         return self._solve_fns[key]
 
     # ------------------------------------------------------------ serve ----
-    def step(self) -> List[Completed]:
+    def step(self, now: float = 0.0) -> List[Completed]:
         """Drain the queue once: probe, bucket, pack, solve. Returns the
         completed requests (order not guaranteed — uid is the join key).
         ``self.last_report`` carries this drain's virtual-cost accounting
-        (StepReport) for the trace replayer in launch/workload.py."""
+        (StepReport) for the trace replayer in launch/workload.py.
+
+        ``now`` is the replay clock at drain start: requests already
+        past their deadline drop terminally (``status="deadline"``)
+        before any probe is spent on them. Rows whose outputs come back
+        non-finite either retry (re-queued at the next-finer bucket,
+        served by the NEXT drain, bounded by the RetryPolicy) or return
+        best-effort with ``status="diverged"``."""
+        done: List[Completed] = list(self._shed)   # surface shed refusals
+        self._shed = []
         if not self._queue:
-            self.last_report = StepReport()
-            return []
+            self.last_report = StepReport(
+                finish_offset={c.uid: 0.0 for c in done})
+            return done
         stages = self.model.integ.tableau.stages
         cost = probe_cost = 0.0
-        useful = total = batches = 0
-        finish_offset: Dict[int, float] = {}
+        useful = total = batches = probe_nonfinite = 0
+        finish_offset: Dict[int, float] = {c.uid: 0.0 for c in done}
+        # degrade pressure is measured once per drain, at its start
+        degrade = (self.queue_cap is not None
+                   and self.overload_policy == "degrade"
+                   and len(self._queue) > self.queue_cap)
         pending: List[Request] = []
         while self._queue:
-            pending.append(self._queue.popleft())
-
-        done: List[Completed] = []
+            r = self._queue.popleft()
+            if r.deadline is not None and r.deadline < now:
+                finish_offset[r.uid] = 0.0
+                done.append(Completed(
+                    uid=r.uid, outputs=None, K=0,
+                    nfe=self._nfe_extra.pop(r.uid, 0), err_probe=0.0,
+                    fused_kernel=False, status="deadline"))
+                continue
+            pending.append(r)
+        if not pending:
+            self.last_report = StepReport(finish_offset=finish_offset)
+            return done
         # group by request shape — each shape is its own jit cell
         by_shape: Dict[Tuple, List[Request]] = {}
         for r in pending:
             by_shape.setdefault(r.x.shape, []).append(r)
 
         for shape, reqs in by_shape.items():
-            xs = np.stack([r.x for r in reqs])
+            rows = [r.x for r in reqs]
+            if self.fault_injector is not None:
+                rows = [self.fault_injector.corrupt_admission(
+                    r.uid, r.attempts, x) for r, x in zip(reqs, rows)]
+            xs = np.stack(rows)
             if isinstance(self.controller, FixedController):
                 Ks_raw = np.full((len(reqs),), self.controller.K, np.int32)
                 errs = np.zeros((len(reqs),), np.float32)
@@ -418,12 +559,24 @@ class MultiRateEngine:
                     jnp.asarray(xs))
                 Ks_raw = np.asarray(Ks_dev)
                 errs = np.asarray(err_dev)
+                probe_nonfinite += screen_probe_errors(errs)
                 p = self.oracle.probe_cost(
                     shape, len(reqs),
                     getattr(self.controller, "probe_nfe", 0))
                 probe_cost += p
                 cost += p
             Ks = snap_to_buckets(Ks_raw, self.ecfg.buckets)
+            if degrade:
+                # graceful degradation: every admission in an over-
+                # pressure drain serves one bucket coarser than asked —
+                # agreement trades off measurably, nothing is refused
+                b = np.asarray(sorted(self.ecfg.buckets), np.int32)
+                Ks = b[np.maximum(np.searchsorted(b, Ks) - 1, 0)]
+            # retry-ladder escalation: a re-queued request never serves
+            # below its K_floor (the next-finer bucket than the one that
+            # failed)
+            floors = np.asarray([r.K_floor for r in reqs], np.int32)
+            Ks = np.maximum(Ks, floors)
 
             # mixed-K packing: sort by K so batches stay as K-pure as the
             # traffic allows (bucket purity bounds masked-step waste), then
@@ -451,23 +604,50 @@ class MultiRateEngine:
                 useful += int(Ks[sel].sum())
                 total += len(sel) * k_max
                 batches += 1
+                # row-wise non-finite screen on the ALREADY-materialized
+                # outputs (no extra device transfer): diverged rows
+                # climb the retry ladder or return best-effort
+                finite = np.isfinite(
+                    outputs.reshape(len(sel), -1)).all(axis=1)
                 for j, i in enumerate(sel):
-                    finish_offset[reqs[i].uid] = cost
+                    r, K = reqs[i], int(Ks[i])
+                    if not finite[j]:
+                        # next-finer bucket; at the top (where a poisoned
+                        # probe's k_max clamp lands) one clean re-run at
+                        # the same bucket, bounded by the RetryPolicy
+                        nxt = next_bucket_above(K, self.ecfg.buckets) or K
+                        if self.retry.should_retry(
+                                "diverged", r.attempts):
+                            self._nfe_extra[r.uid] = (
+                                self._nfe_extra.get(r.uid, 0)
+                                + self.nfe_of(K))
+                            self._queue.append(dataclasses.replace(
+                                r, attempts=r.attempts + 1, K_floor=nxt))
+                            continue     # served by the next drain
+                        status = "diverged"
+                    else:
+                        status = "ok" if r.attempts == 0 else "retried"
+                    finish_offset[r.uid] = cost
                     done.append(Completed(
-                        uid=reqs[i].uid, outputs=outputs[j], K=int(Ks[i]),
-                        nfe=self.nfe_of(int(Ks[i])),
-                        err_probe=float(errs[i]), fused_kernel=fused))
+                        uid=r.uid, outputs=outputs[j], K=K,
+                        nfe=self.nfe_of(K)
+                        + self._nfe_extra.pop(r.uid, 0),
+                        err_probe=float(errs[i]), fused_kernel=fused,
+                        status=status))
         self.last_report = StepReport(
             cost=cost, probe_cost=probe_cost, useful_steps=useful,
-            total_steps=total, batches=batches, finish_offset=finish_offset)
+            total_steps=total, batches=batches,
+            probe_nonfinite=probe_nonfinite, finish_offset=finish_offset)
         return done
 
     def run(self, xs) -> List[Completed]:
         """Convenience: submit a batch (leading axis = requests) and drain
-        to completion, returning results ordered by submission."""
+        to completion, returning results ordered by submission. Loops
+        until every uid is terminal — a retried request drains again,
+        bounded by the RetryPolicy, so this always terminates."""
         uids = [self.submit(x) for x in np.asarray(xs)]
         results: Dict[int, Completed] = {}
-        while self._queue:
+        while len(self):
             for c in self.step():
                 results[c.uid] = c
         return [results[u] for u in uids]

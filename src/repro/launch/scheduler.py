@@ -94,29 +94,45 @@ import numpy as np
 
 from repro.core.controllers import FixedController
 from repro.core.integrate import SegmentCarry
+from repro.distributed.fault import FaultInjector, RetryPolicy
 from repro.launch.engine import (
-    DepthModel, EngineConfig, Request, make_controller, prepare_model,
-    probe_net_nfe, snap_to_buckets,
+    STATUSES, DepthModel, EngineConfig, QueueFull, Request, make_controller,
+    next_bucket_above, prepare_model, probe_net_nfe, screen_probe_errors,
+    snap_to_buckets,
 )
 from repro.launch.oracle import CostOracle, SequentialEvalOracle
+
+__all__ = ["InflightScheduler", "InflightCompleted", "TickReport",
+           "STATUSES", "QueueFull", "RetryPolicy", "FaultInjector"]
 
 
 @dataclasses.dataclass(frozen=True)
 class InflightCompleted:
-    """Per-request completion record with the latency decomposition the
+    """Per-request terminal record with the latency decomposition the
     drain engine cannot express: queue wait (submit -> slot admission) and
-    service (admission -> retirement), in virtual cost units."""
+    service (admission -> retirement), in virtual cost units.
+
+    ``status`` is the request's terminal disposition (engine.STATUSES;
+    docs/serving.md "Failure semantics"): ``ok``/``retried`` carry real
+    outputs, ``diverged``/``deadline`` carry the best-effort partial
+    readout (or None if the request expired while still queued), and
+    ``shed`` carries None — the overload policy refused it at admission.
+    ``t_admit`` is the LAST admission (a retried request re-queues and
+    re-admits); ``queue_wait`` therefore spans original submission to
+    final admission."""
 
     uid: int
     outputs: np.ndarray
     K: int                        # snapped mesh length actually integrated
-    nfe: int                      # probe (net of reuse) + stages * K
+    nfe: int                      # probe (net of reuse) + stages * steps,
+    #                               summed over every attempt
     err_probe: float
     fused_kernel: bool
     t_submit: float
     t_admit: float
     t_done: float
     segments: int                 # pool segments this request rode
+    status: str = "ok"            # terminal status (engine.STATUSES)
 
     @property
     def queue_wait(self) -> float:
@@ -134,10 +150,15 @@ class TickReport:
     cost: float = 0.0             # sequential evals this tick
     probe_cost: float = 0.0
     admitted: int = 0
-    retired: int = 0
+    retired: int = 0              # terminal records surfaced this tick
     useful_steps: int = 0         # slot-steps that advanced a live request
     total_steps: int = 0          # slots * seg over pools that ran
     occupied_steps: int = 0       # occupied-slot-steps (live at segment start)
+    quarantined: int = 0          # slots force-retired non-finite this tick
+    deadline_evicted: int = 0     # slots/queued requests evicted past deadline
+    requeued: int = 0             # failed slots re-queued by the retry ladder
+    shed: int = 0                 # admission refusals surfaced this tick
+    probe_nonfinite: int = 0      # non-finite probe errors seen at admission
 
     @property
     def waste_steps(self) -> int:
@@ -147,10 +168,11 @@ class TickReport:
 
 @dataclasses.dataclass
 class _PendingSegment:
-    """An in-flight segment: the async ``[k'; finished]`` meta future
-    plus the host snapshots needed to account it when it retires."""
+    """An in-flight segment: the async ``[k'; finished; nonfinite]``
+    meta future plus the host snapshots needed to account it when it
+    retires."""
 
-    meta: Any                     # (2, B) int32 device future
+    meta: Any                     # (3, B) int32 device future
     k_old: np.ndarray             # k rows at launch
     occ: np.ndarray               # occupancy at launch (bool row)
     t_done: float                 # virtual completion stamp for retires
@@ -158,7 +180,7 @@ class _PendingSegment:
 
 @dataclasses.dataclass
 class _RetireBatch:
-    """Finished rows staged for materialization. ``outs`` stays an async
+    """Retiring rows staged for materialization. ``outs`` stays an async
     device future until ``finalize_retired`` — the overlap loop
     materializes AFTER dispatching the next segment, so even the readout
     transfer hides behind device work. Host rows are SNAPSHOTS, because
@@ -170,10 +192,24 @@ class _RetireBatch:
     fused: bool
     uid: np.ndarray
     K: np.ndarray
+    k_done: np.ndarray            # depth steps actually taken (== K for ok)
     err: np.ndarray
     t_submit: np.ndarray
     t_admit: np.ndarray
     segments: np.ndarray
+    status: List[str]             # terminal status per row
+
+
+@dataclasses.dataclass(frozen=True)
+class _RetireStats:
+    """Per-pool retirement accounting for one segment."""
+
+    retired: int = 0              # rows staged terminal (any status)
+    useful: int = 0
+    occupied: int = 0
+    quarantined: int = 0
+    deadline_evicted: int = 0
+    requeued: int = 0
 
 
 class _SlotPool:
@@ -196,6 +232,8 @@ class _SlotPool:
         self.t_submit = np.zeros((n,), np.float64)
         self.t_admit = np.zeros((n,), np.float64)
         self.segments = np.zeros((n,), np.int32)
+        self.deadline = np.full((n,), np.inf, np.float64)
+        self.attempts = np.zeros((n,), np.int32)
         self.xs = np.zeros((n,) + shape, dtype)
         self._xs_dev = None     # device mirror of xs, refreshed on admit
         self.z: Any = None                            # device pytree or None
@@ -267,21 +305,31 @@ class _SlotPool:
 
     # ------------------------------------------------------- admission ----
     def admit(self, reqs: List[Request], submit_t: Dict[int, float],
-              now: float) -> float:
+              now: float, degrade: bool = False) -> Tuple[float, int]:
         """Probe ``reqs`` (padded to pool width: one probe jit cell per
-        shape) and scatter them into free slots. Returns the probe cost."""
+        shape) and scatter them into free slots. Returns (probe cost,
+        non-finite probe count). ``degrade`` caps every admission one
+        bucket coarser (the overload policy's pressure response)."""
         probe_fn, embed_fn, _, _ = self._cells()
         sched = self.sched
         idx = self.free[:len(reqs)]
         assert len(idx) == len(reqs), "caller admits at most `free` requests"
         n_pad = sched.slots - len(reqs)
-        xs_new = np.stack([r.x for r in reqs])
+        rows = [r.x for r in reqs]
+        if sched.fault_injector is not None:
+            # chaos hook: poisoned rows feed the probe and the device
+            # mirror; self.xs keeps the ORIGINAL input, so a retry of a
+            # transiently-poisoned request re-admits clean data
+            rows = [sched.fault_injector.corrupt_admission(
+                r.uid, r.attempts, x) for r, x in zip(reqs, rows)]
+        xs_new = np.stack(rows)
         assert xs_new.dtype == self.xs.dtype, (xs_new.dtype, self.xs.dtype)
         xs_pad = np.concatenate(
             [xs_new, np.repeat(xs_new[:1], n_pad, axis=0)]) \
             if n_pad else xs_new
 
         fixed = isinstance(sched.controller, FixedController)
+        probe_nonfinite = 0
         if fixed:
             z0 = embed_fn(jnp.asarray(xs_pad))
             dz0 = None
@@ -292,12 +340,26 @@ class _SlotPool:
             Ks_dev, err_dev, z0, dz0 = probe_fn(jnp.asarray(xs_pad))
             Ks_raw = np.asarray(Ks_dev)[:len(reqs)]
             errs = np.asarray(err_dev)[:len(reqs)]
+            # the silent k_max clamp in mesh_for_tolerance becomes an
+            # observable signal here (one-time warning + TickReport
+            # counter); the request itself is the quarantine layer's job
+            probe_nonfinite = screen_probe_errors(errs)
             # the probe is padded to pool width, so the oracle prices a
             # pool-width program regardless of how many rows refilled
             probe_cost = sched.oracle.probe_cost(
                 self.shape, sched.slots,
                 getattr(sched.controller, "probe_nfe", 0))
         Ks = snap_to_buckets(Ks_raw, sched.ecfg.buckets)
+        if degrade:
+            # graceful degradation: serve one bucket coarser than asked
+            # while the queue is over pressure — agreement trades off
+            # measurably, nothing is refused
+            b = np.asarray(sorted(sched.ecfg.buckets), np.int32)
+            Ks = b[np.maximum(np.searchsorted(b, Ks) - 1, 0)]
+        # retry-ladder escalation: a re-queued request never re-serves
+        # below its K_floor (the next-finer bucket than the failed one)
+        Ks = np.maximum(Ks, np.asarray([r.K_floor for r in reqs],
+                                       np.int32))
 
         # scatter: host rows directly, device pytrees leaf-wise. On the
         # pool's first admission the padded probe output IS the pool state.
@@ -326,6 +388,8 @@ class _SlotPool:
             self.t_submit[i] = submit_t.pop(r.uid)
             self.t_admit[i] = now
             self.segments[i] = 0
+            self.deadline[i] = np.inf if r.deadline is None else r.deadline
+            self.attempts[i] = r.attempts
             self.xs[i] = r.x
         # device mirror of xs: scatter only the refilled rows (a full
         # re-upload per admission would put the big operand back on the
@@ -334,7 +398,7 @@ class _SlotPool:
             self._xs_dev = jnp.asarray(self.xs)
         else:
             self._xs_dev = self._xs_dev.at[jidx].set(jnp.asarray(xs_new))
-        return probe_cost
+        return probe_cost, probe_nonfinite
 
     # --------------------------------------------------------- segment ----
     def launch_segment(self, t_done: float) -> None:
@@ -359,43 +423,111 @@ class _SlotPool:
         self._pending = _PendingSegment(meta=meta, k_old=k_old, occ=occ,
                                         t_done=t_done)
 
-    def retire_pending(self) -> Tuple[int, int, int]:
-        """Block on the pending segment's stacked ``[k'; finished]``
-        meta pair — ONE batched device->host transfer per segment —
-        stage finished rows for retirement (gated readout enqueued
-        async), and free their slots. Returns (retired, useful_steps,
-        occupied_slots); the staged completions materialize later in
-        ``finalize_retired``."""
+    def retire_pending(self) -> _RetireStats:
+        """Block on the pending segment's stacked ``[k'; finished;
+        nonfinite]`` meta — still ONE batched device->host transfer per
+        segment — stage terminal rows for retirement (gated readout
+        enqueued async), requeue retryable failures, and free their
+        slots. Returns per-pool ``_RetireStats``; the staged completions
+        materialize later in ``finalize_retired``.
+
+        Precedence: quarantine beats finished (a non-finite row's
+        finished flag is meaningless — NaN froze or compared its way
+        past Ks), finished beats deadline (a request that FINISHED by
+        the time the segment retired completes ``ok`` even if its stamp
+        lands past the deadline — eviction is only for rows that would
+        keep burning segments they can no longer use)."""
         p = self._pending
         assert p is not None, "retire_pending without a pending segment"
         self._pending = None
+        sched = self.sched
         meta = np.array(p.meta)   # the one blocking transfer per segment
         self.k = meta[0]
         occ = p.occ
         self.segments[occ] += 1
         useful = int((self.k - p.k_old)[occ].sum())
-        finished = occ & (meta[1] != 0)
-        retired = 0
-        if finished.any():
-            retired = self._stage_retire(np.flatnonzero(finished),
-                                         p.t_done)
-        return retired, useful, int(occ.sum())
+        fin_row = meta[1] != 0
+        if sched.fault_injector is not None:
+            # chaos hook: lose completion signals. Keyed per (uid,
+            # segment count), so a dropped flag is re-drawn next segment
+            # and the request still terminates — zero-hang for p < 1.
+            fin_row = sched.fault_injector.drop_retire_flags(
+                self.uid, self.segments, fin_row)
+        nonfin = occ & (meta[2] != 0)
+        finished = occ & fin_row & ~nonfin
+        expired = occ & ~nonfin & ~finished & (self.deadline < p.t_done)
 
-    def _stage_retire(self, idx: np.ndarray, t_done: float) -> int:
-        """Retire the slots ``idx``: enqueue the finished-rows readout
-        (async), snapshot their host rows, and mark them refillable."""
+        idx: List[int] = [int(i) for i in np.flatnonzero(finished)]
+        status = ["ok" if self.attempts[i] == 0 else "retried"
+                  for i in idx]
+        requeued = 0
+        for i in np.flatnonzero(nonfin | expired):
+            st = "diverged" if nonfin[i] else "deadline"
+            # escalate one bucket finer; at the top bucket (where a
+            # poisoned PROBE lands every corrupted request, since
+            # mesh_for_tolerance clamps non-finite k to k_max) retry at
+            # the same bucket — a transient fault deserves one clean
+            # re-run, still bounded by the RetryPolicy
+            nxt = next_bucket_above(int(self.Ks[i]), sched.ecfg.buckets) \
+                or int(self.Ks[i])
+            if sched.retry.should_retry(st, int(self.attempts[i])):
+                self._requeue_slot(int(i), nxt)
+                requeued += 1
+            else:
+                idx.append(int(i))
+                status.append(st)
+        retired = 0
+        if idx:
+            retired = self._stage_retire(np.asarray(idx, np.int64),
+                                         p.t_done, status)
+        return _RetireStats(
+            retired=retired, useful=useful, occupied=int(occ.sum()),
+            quarantined=int(nonfin.sum()),
+            deadline_evicted=int(expired.sum()), requeued=requeued)
+
+    def _requeue_slot(self, i: int, K_floor: int) -> None:
+        """Send slot ``i`` back through the retry ladder: the request
+        re-enters the FRONT of the queue (so both tick variants admit it
+        at the very next ``_admit_tick`` — the sync/overlap parity
+        contract) with its K_floor escalated one bucket, and the failed
+        attempt's work charged to the scheduler's ``_nfe_extra`` ledger.
+        The slot frees without a readout — nothing terminal happened."""
+        sched = self.sched
+        uid = int(self.uid[i])
+        sched._nfe_extra[uid] = sched._nfe_extra.get(uid, 0) \
+            + sched.probe_nfe + sched.stages * int(self.k[i])
+        sched._submit_t[uid] = float(self.t_submit[i])
+        deadline = float(self.deadline[i])
+        sched._queue.appendleft(Request(
+            uid=uid, x=self.xs[i].copy(),
+            deadline=deadline if np.isfinite(deadline) else None,
+            attempts=int(self.attempts[i]) + 1, K_floor=K_floor))
+        self.uid[i] = -1
+        self.Ks[i] = 0
+        self.eps[i] = 1.0
+        self.k[i] = 0
+        self.deadline[i] = np.inf
+
+    def _stage_retire(self, idx: np.ndarray, t_done: float,
+                      status: List[str]) -> int:
+        """Retire the slots ``idx``: enqueue the rows' readout (async;
+        force-retired rows get the same gated readout — their partial
+        state IS the best-effort answer), snapshot their host rows, and
+        mark them refillable."""
         outs = self._readout_finished(idx)
         self._staged.append(_RetireBatch(
             idx=idx, outs=outs, t_done=t_done,
             fused=self.sched.model.integ.fused_available(z=self.z),
             uid=self.uid[idx].copy(), K=self.Ks[idx].copy(),
+            k_done=self.k[idx].copy(),
             err=self.err[idx].copy(), t_submit=self.t_submit[idx].copy(),
             t_admit=self.t_admit[idx].copy(),
-            segments=self.segments[idx].copy()))
+            segments=self.segments[idx].copy(), status=list(status)))
         self.uid[idx] = -1            # retire: slot becomes refillable
         self.Ks[idx] = 0              # Ks==0 keeps the row frozen
         self.eps[idx] = 1.0
         self.k[idx] = 0
+        self.deadline[idx] = np.inf
         return len(idx)
 
     def _readout_finished(self, idx: np.ndarray):
@@ -426,29 +558,33 @@ class _SlotPool:
         for b in self._staged:
             outs = np.asarray(b.outs)
             for j in range(len(b.idx)):
-                K = int(b.K[j])
+                uid = int(b.uid[j])
+                # nfe bills the depth steps actually TAKEN (k_done == K
+                # for ok rows, fewer for evictions) plus every failed
+                # attempt's probe + steps from the _nfe_extra ledger
                 done.append(InflightCompleted(
-                    uid=int(b.uid[j]), outputs=outs[j], K=K,
-                    nfe=sched.probe_nfe + sched.stages * K,
+                    uid=uid, outputs=outs[j], K=int(b.K[j]),
+                    nfe=sched.probe_nfe + sched.stages * int(b.k_done[j])
+                    + sched._nfe_extra.pop(uid, 0),
                     err_probe=float(b.err[j]), fused_kernel=b.fused,
                     t_submit=float(b.t_submit[j]),
                     t_admit=float(b.t_admit[j]), t_done=b.t_done,
-                    segments=int(b.segments[j])))
+                    segments=int(b.segments[j]), status=b.status[j]))
         self._staged = []
         return done
 
     def run_segment(self, now_done: float) -> Tuple[List[InflightCompleted],
-                                                    int, int]:
+                                                    _RetireStats]:
         """The SYNCHRONOUS segment: one ``seg``-step advance of the whole
         pool, finished slots retired before returning. Exactly
         ``launch_segment`` + ``retire_pending`` + ``finalize_retired``
         with zero lag — the overlap loop runs the same three phases one
         segment apart, which is why its completions are uid-for-uid
         identical to this path (pinned in tests/test_scheduler.py).
-        Returns (completions, useful_steps, occupied_slots)."""
+        Returns (completions, per-pool retire stats)."""
         self.launch_segment(now_done)
-        _, useful, occ = self.retire_pending()
-        return self.finalize_retired(), useful, occ
+        stats = self.retire_pending()
+        return self.finalize_retired(), stats
 
 
 class InflightScheduler:
@@ -481,8 +617,22 @@ class InflightScheduler:
                  slot_axis: str = "data",
                  oracle: Optional[CostOracle] = None,
                  overlap: bool = False,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None,
+                 queue_cap: Optional[int] = None,
+                 overload_policy: str = "shed",
+                 deadline: Optional[float] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 fault_injector: Optional[FaultInjector] = None):
         engine_cfg = engine_cfg or EngineConfig()
+        if overload_policy not in ("shed", "degrade", "block"):
+            raise ValueError(
+                f"overload_policy={overload_policy!r}: expected 'shed' "
+                "(refuse with status='shed'), 'degrade' (admit one "
+                "bucket coarser under pressure), or 'block' (raise "
+                "QueueFull; caller backs off)")
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1, got {queue_cap} "
+                             "(a zero-width queue can never admit)")
         model = prepare_model(model, engine_cfg)
         if seg < 1:
             raise ValueError(f"seg must be >= 1, got {seg}")
@@ -519,16 +669,24 @@ class InflightScheduler:
         self.stages = model.integ.tableau.stages
         self.now = 0.0
         self.ticks = 0
+        self.dispatches = 0
         self.total_cost = 0.0
         self.total_probe_cost = 0.0
         self.total_useful_steps = 0
         self.total_slot_steps = 0
         self.total_occupied_steps = 0
         self.last_report = TickReport()
+        self.queue_cap = None if queue_cap is None else int(queue_cap)
+        self.overload_policy = overload_policy
+        self.default_deadline = deadline  # relative slack, applied at submit
+        self.retry = retry or RetryPolicy()
+        self.fault_injector = fault_injector
         self._queue: deque = deque()
         self._submit_t: Dict[int, float] = {}
         self._uid = 0
         self._pools: Dict[Tuple, _SlotPool] = {}
+        self._shed: List[InflightCompleted] = []   # terminal, pre-admission
+        self._nfe_extra: Dict[int, int] = {}       # failed attempts' work
 
     # ----------------------------------------------------------- queue ----
     @property
@@ -537,7 +695,17 @@ class InflightScheduler:
         accounting as MultiRateEngine.probe_nfe)."""
         return probe_net_nfe(self.controller)
 
-    def submit(self, x, t: Optional[float] = None) -> int:
+    def can_submit(self) -> bool:
+        """False exactly when the next ``submit`` would raise QueueFull:
+        the bounded queue is at cap under ``overload_policy='block'``.
+        (``shed`` always accepts — and may refuse terminally; ``degrade``
+        always admits, one bucket coarser under pressure.)"""
+        return not (self.queue_cap is not None
+                    and self.overload_policy == "block"
+                    and len(self._queue) >= self.queue_cap)
+
+    def submit(self, x, t: Optional[float] = None,
+               deadline: Optional[float] = None) -> int:
         """Queue a request. ``t`` is its arrival time on the virtual
         clock, defaulting to now; a past ``t`` records the true arrival
         of a request the caller is admitting late (the replay driver's
@@ -546,7 +714,15 @@ class InflightScheduler:
         idle-jumps forward to it; with work pending it is refused,
         because jumping the clock mid-flight would bill every in-flight
         request for time no segment ran — ``step()`` until ``now >= t``
-        instead (as ``launch/workload.py::replay_scheduler`` does)."""
+        instead (as ``launch/workload.py::replay_scheduler`` does).
+
+        ``deadline`` is ABSOLUTE on the virtual clock (defaulting to
+        ``t + self.default_deadline`` when the scheduler has a default
+        slack); a request past its deadline is dropped from the queue or
+        evicted from its slot with ``status="deadline"``. Over a full
+        bounded queue: ``shed`` returns a uid whose terminal
+        ``status="shed"`` record surfaces from the next ``step()``;
+        ``block`` raises ``QueueFull`` (probe with ``can_submit``)."""
         t = self.now if t is None else float(t)
         if t > self.now:
             if self.pending:
@@ -556,8 +732,26 @@ class InflightScheduler:
                     "clock mid-flight would misattribute latency; "
                     "step() until now >= t, then submit")
             self.advance_to(t)
+        if deadline is None and self.default_deadline is not None:
+            deadline = t + float(self.default_deadline)
+        at_cap = self.queue_cap is not None \
+            and len(self._queue) >= self.queue_cap
+        if at_cap and self.overload_policy == "block":
+            raise QueueFull(
+                f"admission queue at cap ({self.queue_cap}) under "
+                "overload_policy='block'; back off and resubmit "
+                "(can_submit() is the non-raising probe)")
         self._uid += 1
-        self._queue.append(Request(uid=self._uid, x=np.asarray(x)))
+        if at_cap and self.overload_policy == "shed":
+            # terminal refusal: no slot, no probe, no outputs — the
+            # record surfaces from the next step() like any completion
+            self._shed.append(InflightCompleted(
+                uid=self._uid, outputs=None, K=0, nfe=0, err_probe=0.0,
+                fused_kernel=False, t_submit=t, t_admit=t, t_done=t,
+                segments=0, status="shed"))
+            return self._uid
+        self._queue.append(Request(uid=self._uid, x=np.asarray(x),
+                                   deadline=deadline))
         self._submit_t[self._uid] = t
         return self._uid
 
@@ -575,9 +769,10 @@ class InflightScheduler:
 
     @property
     def pending(self) -> int:
-        """Requests not yet completed: queued + in flight."""
+        """Requests not yet surfaced: queued + in flight + terminal
+        records (shed refusals) awaiting the next ``step()``."""
         inflight = sum(int(p.occupied.sum()) for p in self._pools.values())
-        return len(self._queue) + inflight
+        return len(self._queue) + inflight + len(self._shed)
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -595,15 +790,25 @@ class InflightScheduler:
         behavior differs."""
         return self._step_overlap() if self.overlap else self._step_sync()
 
-    def _admit_tick(self) -> Tuple[float, int, Dict[Tuple, float]]:
+    def _admit_tick(self) -> Tuple[float, int, Dict[Tuple, float],
+                                   List[InflightCompleted], int]:
         """Refill free slots from the FIFO queue (probe-on-admission).
         Shared verbatim by the sync and overlap ticks, so the two loops
         admit identical request->slot assignments tick for tick — the
-        root of the uid-for-uid parity contract. Returns
-        (probe_cost, admitted, per-pool probe cost)."""
+        root of the uid-for-uid parity contract. Requests already past
+        their deadline drop here, terminal, without costing a probe.
+        Returns (probe_cost, admitted, per-pool probe cost, dropped
+        terminal records, non-finite probe count)."""
         probe_cost = 0.0
         admitted = 0
+        probe_nonfinite = 0
         pool_probe: Dict[Tuple, float] = {}
+        dropped: List[InflightCompleted] = []
+        # degrade pressure is measured once at tick start, so every
+        # admission this tick sees the same policy decision
+        degrade = (self.overload_policy == "degrade"
+                   and self.queue_cap is not None
+                   and len(self._queue) > self.queue_cap)
         # -- admission: FIFO per (shape, dtype) pool; a full pool does not
         #    block other pools' admissions (head-of-line blocking stays
         #    within a cell).
@@ -613,6 +818,18 @@ class InflightScheduler:
             leftover: deque = deque()
             while self._queue:
                 r = self._queue.popleft()
+                if r.deadline is not None and r.deadline < self.now:
+                    # expired while queued: terminal, no slot ever held.
+                    # nfe surfaces any failed-attempt work (a retry that
+                    # expired waiting for its re-admission).
+                    dropped.append(InflightCompleted(
+                        uid=r.uid, outputs=None, K=0,
+                        nfe=self._nfe_extra.pop(r.uid, 0), err_probe=0.0,
+                        fused_kernel=False,
+                        t_submit=self._submit_t.pop(r.uid),
+                        t_admit=self.now, t_done=self.now,
+                        segments=0, status="deadline"))
+                    continue
                 # pools key on (shape, dtype): same-shape requests of a
                 # different dtype must not silently cast into a pool's
                 # storage (the jit-cell retrace boundary, made explicit)
@@ -631,15 +848,18 @@ class InflightScheduler:
             for key, batch in batches.items():
                 # every pool's probe starts at tick start (concurrent
                 # cells) — t_admit no longer absorbs other pools' probes
-                pc = self._pools[key].admit(batch, self._submit_t,
-                                            self.now)
+                pc, n_bad = self._pools[key].admit(
+                    batch, self._submit_t, self.now, degrade=degrade)
                 pool_probe[key] = pc
                 probe_cost += pc
+                probe_nonfinite += n_bad
                 admitted += len(batch)
-        return probe_cost, admitted, pool_probe
+        return probe_cost, admitted, pool_probe, dropped, probe_nonfinite
 
     def _finish_tick(self, *, cost, probe_cost, admitted, retired,
-                     useful, total, occupied) -> None:
+                     useful, total, occupied, quarantined=0,
+                     deadline_evicted=0, requeued=0, shed=0,
+                     probe_nonfinite=0) -> None:
         """Advance the virtual clock and the resource ledgers — the one
         accounting epilogue both tick variants share."""
         self.now += cost
@@ -652,7 +872,9 @@ class InflightScheduler:
         self.last_report = TickReport(
             cost=cost, probe_cost=probe_cost, admitted=admitted,
             retired=retired, useful_steps=useful, total_steps=total,
-            occupied_steps=occupied)
+            occupied_steps=occupied, quarantined=quarantined,
+            deadline_evicted=deadline_evicted, requeued=requeued,
+            shed=shed, probe_nonfinite=probe_nonfinite)
 
     def _step_sync(self) -> List[InflightCompleted]:
         """The synchronous tick: (1) refill free slots from the queue
@@ -665,27 +887,49 @@ class InflightScheduler:
         the pre-oracle clock accumulated segment cost across pools in
         dict-iteration order, billing later-iterated pools for every
         earlier pool's segment; pinned in tests/test_scheduler.py)."""
-        probe_cost, admitted, pool_probe = self._admit_tick()
+        done: List[InflightCompleted] = list(self._shed)
+        shed = len(done)
+        self._shed = []
+        probe_cost, admitted, pool_probe, dropped, probe_nonfinite = \
+            self._admit_tick()
+        done.extend(dropped)
         cost = probe_cost
         # -- segments
-        done: List[InflightCompleted] = []
         useful = total = occupied = retired = 0
+        quarantined = evicted = requeued = 0
         for key, pool in self._pools.items():
             if not pool.busy():
                 continue
             seg_cost = self.oracle.segment_cost(pool.shape, self.seg,
                                                 self.slots, self.stages)
+            if self.fault_injector is not None:
+                # virtual straggler: keyed on the DISPATCH sequence, not
+                # the tick counter — the overlap loop burns a retire-only
+                # flush tick whenever the pool drains, so tick counters
+                # drift across loops while the dispatch sequence stays
+                # identical (and with it the fault schedule)
+                seg_cost = self.fault_injector.inflate_segment_cost(
+                    self.dispatches, seg_cost)
+            self.dispatches += 1
             cost += seg_cost
-            d, u, occ = pool.run_segment(
+            d, st = pool.run_segment(
                 self.now + pool_probe.get(key, 0.0) + seg_cost)
             done.extend(d)
             retired += len(d)
-            useful += u
+            useful += st.useful
             total += self.slots * self.seg
-            occupied += occ * self.seg
+            occupied += st.occupied * self.seg
+            quarantined += st.quarantined
+            evicted += st.deadline_evicted
+            requeued += st.requeued
         self._finish_tick(cost=cost, probe_cost=probe_cost,
-                          admitted=admitted, retired=retired,
-                          useful=useful, total=total, occupied=occupied)
+                          admitted=admitted,
+                          retired=retired + shed + len(dropped),
+                          useful=useful, total=total, occupied=occupied,
+                          quarantined=quarantined,
+                          deadline_evicted=evicted + len(dropped),
+                          requeued=requeued, shed=shed,
+                          probe_nonfinite=probe_nonfinite)
         return done
 
     def _step_overlap(self) -> List[InflightCompleted]:
@@ -713,30 +957,48 @@ class InflightScheduler:
         ``TickReport``), but per-request completions, virtual-clock
         stamps, and end-of-run ledger totals are identical — pinned
         uid-for-uid in tests/test_scheduler.py."""
-        done: List[InflightCompleted] = []
+        done: List[InflightCompleted] = list(self._shed)
+        shed = len(done)
+        self._shed = []
         useful = total = occupied = retired = 0
+        quarantined = evicted = requeued = 0
         for pool in self._pools.values():
             if pool._pending is not None:
-                r, u, occ = pool.retire_pending()
-                retired += r
-                useful += u
+                st = pool.retire_pending()
+                retired += st.retired
+                useful += st.useful
                 total += self.slots * self.seg
-                occupied += occ * self.seg
-        probe_cost, admitted, pool_probe = self._admit_tick()
+                occupied += st.occupied * self.seg
+                quarantined += st.quarantined
+                evicted += st.deadline_evicted
+                requeued += st.requeued
+        probe_cost, admitted, pool_probe, dropped, probe_nonfinite = \
+            self._admit_tick()
+        done.extend(dropped)
         cost = probe_cost
         for key, pool in self._pools.items():
             if not pool.busy():
                 continue
             seg_cost = self.oracle.segment_cost(pool.shape, self.seg,
                                                 self.slots, self.stages)
+            if self.fault_injector is not None:
+                # keyed on the dispatch sequence (see _step_sync)
+                seg_cost = self.fault_injector.inflate_segment_cost(
+                    self.dispatches, seg_cost)
+            self.dispatches += 1
             cost += seg_cost
             pool.launch_segment(self.now + pool_probe.get(key, 0.0)
                                 + seg_cost)
         for pool in self._pools.values():
             done.extend(pool.finalize_retired())
         self._finish_tick(cost=cost, probe_cost=probe_cost,
-                          admitted=admitted, retired=retired,
-                          useful=useful, total=total, occupied=occupied)
+                          admitted=admitted,
+                          retired=retired + shed + len(dropped),
+                          useful=useful, total=total, occupied=occupied,
+                          quarantined=quarantined,
+                          deadline_evicted=evicted + len(dropped),
+                          requeued=requeued, shed=shed,
+                          probe_nonfinite=probe_nonfinite)
         return done
 
     # ----------------------------------------------------- convenience ----

@@ -31,6 +31,14 @@ the synchronous tick for the pipelined one (host bookkeeping overlaps
 the in-flight device segment; uid-for-uid identical completions), and
 --profile-dir saves a jax.profiler trace of the serving loop.
 
+Request hardening (--inflight only; docs/serving.md "Failure
+semantics"): --deadline gives every request that much oracle-clock
+slack before it is dropped/evicted status="deadline"; --queue-cap
+bounds the admission queue, with --overload-policy picking what an
+over-cap submit does (shed terminally / degrade one bucket coarser /
+block the caller). Diverged solves are quarantined on device and
+retried once at a finer bucket before returning best-effort.
+
 Full flag reference with worked examples: docs/serving.md.
 """
 from __future__ import annotations
@@ -122,6 +130,21 @@ def main():
                          "metadata is still in flight (JAX async dispatch "
                          "+ donated carries); completions are uid-for-uid "
                          "identical to the synchronous loop")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request deadline SLACK on the oracle clock "
+                         "(--inflight only): a request not finished "
+                         "within this many cost units of its arrival is "
+                         "dropped/evicted with status='deadline'; 0 = "
+                         "no deadlines")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bound the admission queue at this many waiting "
+                         "requests (--inflight only); 0 = unbounded")
+    ap.add_argument("--overload-policy", default="shed",
+                    choices=["shed", "degrade", "block"],
+                    help="what an over-cap submit does (--queue-cap): "
+                         "'shed' refuses terminally (status='shed'), "
+                         "'degrade' admits one K-bucket coarser under "
+                         "pressure, 'block' raises to the caller")
     ap.add_argument("--profile-dir", default=None,
                     help="wrap the serving loop in jax.profiler.trace and "
                          "save the trace here (inspect with TensorBoard/"
@@ -140,6 +163,16 @@ def main():
         raise SystemExit("--overlap pipelines the in-flight segment loop; "
                          "pass --inflight with it (the drain engine has "
                          "no segment loop to overlap)")
+    if (args.deadline or args.queue_cap) and not args.inflight:
+        # same policy: a run labeled deadline-bounded or overload-capped
+        # must not silently report unbounded drain numbers
+        raise SystemExit("--deadline/--queue-cap harden the in-flight "
+                         "scheduler's admission; pass --inflight with "
+                         "them")
+    if args.overload_policy != "shed" and not args.queue_cap:
+        raise SystemExit(f"--overload-policy {args.overload_policy} is "
+                         "meaningless without --queue-cap (an unbounded "
+                         "queue never overloads)")
 
     cfg = get(args.arch)
     if args.reduced:
@@ -204,7 +237,10 @@ def main():
             mesh = make_serving_mesh(args.mesh)
         sched = InflightScheduler(model, ecfg, slots=args.slots,
                                   seg=args.seg, mesh=mesh, oracle=oracle,
-                                  overlap=args.overlap)
+                                  overlap=args.overlap,
+                                  deadline=args.deadline or None,
+                                  queue_cap=args.queue_cap or None,
+                                  overload_policy=args.overload_policy)
         xs = np.asarray(prompt)
         t0 = time.time()
         with _profiled(args.profile_dir):
@@ -223,20 +259,27 @@ def main():
                 print(f"[inflight {args.arrival_trace}] "
                       f"{latency_stats(report)}")
         dt = time.time() - t0
-        agree = [float(np.mean(np.argmax(r.outputs, -1) == full_top[i]))
-                 for i, r in enumerate(results)]
-        nfes = [r.nfe for r in results]
+        # shed/expired requests carry no outputs — agreement is over the
+        # requests actually served (their status says why the rest
+        # are not)
+        agree = {r.uid: float(np.mean(np.argmax(r.outputs, -1)
+                                      == full_top[i]))
+                 for i, r in enumerate(results) if r.outputs is not None}
+        nfes = [r.nfe for r in results if r.outputs is not None]
         mode = "multirate" if args.multirate else f"K={K_fixed}"
         print(f"[{args.solver} {mode} inflight slots={args.slots} "
-              f"seg={args.seg}] scored {args.batch}x{args.prompt_len} in "
+              f"seg={args.seg}] scored {len(agree)}/{args.batch} of "
+              f"{args.batch}x{args.prompt_len} in "
               f"{dt:.2f}s; mean NFE {np.mean(nfes):.2f}/{n_groups} "
               f"(probe {sched.probe_nfe}); mean argmax agreement vs full "
-              f"depth: {np.mean(agree):.3f}")
-        for r, a in zip(results, agree):
+              f"depth: {np.mean(list(agree.values())):.3f}")
+        for r in results:
             # both record types (InflightCompleted / RequestRecord) stamp
-            # queue_wait and latency
-            print(f"  req {r.uid}: K={r.K} nfe={r.nfe} agree={a:.3f} "
-                  f"wait={r.queue_wait:.1f} lat={r.latency:.1f}")
+            # queue_wait, latency, and status
+            a = f"{agree[r.uid]:.3f}" if r.uid in agree else "-"
+            print(f"  req {r.uid}: K={r.K} nfe={r.nfe} agree={a} "
+                  f"wait={r.queue_wait:.1f} lat={r.latency:.1f} "
+                  f"status={r.status}")
         return
 
     engine = MultiRateEngine(model, ecfg, oracle=oracle)

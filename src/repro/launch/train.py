@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import logging
-import math
 import time
 from typing import Optional
 
@@ -85,12 +84,12 @@ def train_loop(
         try:
             if injector is not None:
                 injector.maybe_fail(step)
+            # the watchdog owns the NaN screen (WatchdogConfig.
+            # nan_is_failure): loss_of names the scalar to vet
             params, opt_state, metrics = watchdog.run(
                 step_fn, params, opt_state, jnp.asarray(step, jnp.int32),
-                batch)
+                batch, loss_of=lambda out: out[2]["loss"])
             loss = float(metrics["loss"])
-            if watchdog.cfg.nan_is_failure and not math.isfinite(loss):
-                raise StepFailure(f"non-finite loss at step {step}: {loss}")
         except StepFailure as e:
             log.warning("step %d failed: %s", step, e)
             if ckpt is None or not watchdog.record_failure():

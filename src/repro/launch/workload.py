@@ -30,10 +30,13 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class Arrival:
-    """One request arrival: time on the virtual clock + its input."""
+    """One request arrival: time on the virtual clock + its input.
+    ``deadline`` is ABSOLUTE on the same clock (the trace builders stamp
+    ``t + deadline_slack``); None = no deadline."""
 
     t: float
     x: np.ndarray
+    deadline: Optional[float] = None
 
 
 def heterogeneous_requests(n: int, d: int, *, easy_frac: float = 0.5,
@@ -57,23 +60,30 @@ def heterogeneous_requests(n: int, d: int, *, easy_frac: float = 0.5,
 
 
 def poisson_trace(xs: np.ndarray, rate: float, *, seed: int = 0,
-                  t0: float = 0.0) -> List[Arrival]:
+                  t0: float = 0.0,
+                  deadline_slack: Optional[float] = None) -> List[Arrival]:
     """Poisson arrival process: exponential inter-arrival gaps at ``rate``
-    requests per virtual cost unit, one arrival per row of ``xs``."""
+    requests per virtual cost unit, one arrival per row of ``xs``.
+    ``deadline_slack`` stamps each arrival's absolute deadline at
+    ``t + slack`` (None = no deadlines)."""
     if rate <= 0:
         raise ValueError(f"rate must be > 0, got {rate}")
     rng = np.random.RandomState(seed)
     gaps = rng.exponential(1.0 / rate, size=len(xs))
     ts = t0 + np.cumsum(gaps)
-    return [Arrival(t=float(t), x=np.asarray(x)) for t, x in zip(ts, xs)]
+    return [Arrival(t=float(t), x=np.asarray(x),
+                    deadline=None if deadline_slack is None
+                    else float(t) + deadline_slack)
+            for t, x in zip(ts, xs)]
 
 
 def bursty_trace(xs: np.ndarray, *, burst: int = 4, gap: float = 20.0,
-                 within: float = 0.0, seed: int = 0,
-                 t0: float = 0.0) -> List[Arrival]:
+                 within: float = 0.0, seed: int = 0, t0: float = 0.0,
+                 deadline_slack: Optional[float] = None) -> List[Arrival]:
     """Bursty arrivals: groups of ``burst`` requests landing (near-)
     simultaneously, bursts separated by ``gap`` cost units (+- 25%
-    jitter). ``within`` spreads a burst's members by that many units."""
+    jitter). ``within`` spreads a burst's members by that many units;
+    ``deadline_slack`` stamps absolute deadlines at ``t + slack``."""
     rng = np.random.RandomState(seed)
     arrivals: List[Arrival] = []
     t = t0
@@ -82,7 +92,10 @@ def bursty_trace(xs: np.ndarray, *, burst: int = 4, gap: float = 20.0,
         offs = np.sort(rng.uniform(0.0, within, size=len(chunk))) \
             if within > 0 else np.zeros(len(chunk))
         for off, x in zip(offs, chunk):
-            arrivals.append(Arrival(t=float(t + off), x=np.asarray(x)))
+            arrivals.append(Arrival(
+                t=float(t + off), x=np.asarray(x),
+                deadline=None if deadline_slack is None
+                else float(t + off) + deadline_slack))
         t += gap * float(rng.uniform(0.75, 1.25))
     return arrivals
 
@@ -100,7 +113,8 @@ class RequestRecord:
     t_done: float
     K: int
     nfe: int
-    outputs: np.ndarray
+    outputs: np.ndarray      # None for shed / queue-expired requests
+    status: str = "ok"       # terminal status (engine.STATUSES)
 
     @property
     def queue_wait(self) -> float:
@@ -187,6 +201,29 @@ def latency_stats(report: TraceReport) -> Dict[str, float]:
     }
 
 
+def status_counts(report: TraceReport) -> Dict[str, int]:
+    """Terminal-status histogram over a replay's records — the chaos
+    bench's accounting row. Keyed by the live ``engine.STATUSES`` enum
+    (every key present, zero or not), NOT folded into ``latency_stats``:
+    that summary's keys are pinned by committed BENCH artifacts."""
+    from repro.launch.engine import STATUSES
+
+    counts = {s: 0 for s in STATUSES}
+    for r in report.records:
+        counts[r.status] += 1
+    return counts
+
+
+def ok_records(report: TraceReport) -> TraceReport:
+    """The report restricted to requests that produced real outputs
+    (``ok``/``retried``) — latency percentiles over shed or evicted
+    requests (t_done == t_submit, or a truncated solve) would flatter
+    the very loop that failed them."""
+    keep = tuple(r for r in report.records
+                 if r.status in ("ok", "retried"))
+    return dataclasses.replace(report, records=keep)
+
+
 # ---------------------------------------------------------------- replays ----
 
 def replay_engine(engine, trace: Sequence[Arrival]) -> TraceReport:
@@ -205,12 +242,13 @@ def replay_engine(engine, trace: Sequence[Arrival]) -> TraceReport:
     while i < len(trace) or len(engine):
         if not len(engine):
             now = max(now, trace[i].t)          # idle-jump to next arrival
-        while i < len(trace) and trace[i].t <= now:
-            uid = engine.submit(trace[i].x)
+        while i < len(trace) and trace[i].t <= now \
+                and engine.can_submit():
+            uid = engine.submit(trace[i].x, deadline=trace[i].deadline)
             t_submit[uid] = trace[i].t
             i += 1
         t_drain = now
-        done = engine.step()
+        done = engine.step(now=now)
         rep = engine.last_report
         now += rep.cost
         total_cost += rep.cost
@@ -221,7 +259,7 @@ def replay_engine(engine, trace: Sequence[Arrival]) -> TraceReport:
             records.append(RequestRecord(
                 uid=c.uid, t_submit=t_submit.pop(c.uid), t_admit=t_drain,
                 t_done=t_drain + rep.finish_offset[c.uid], K=c.K, nfe=c.nfe,
-                outputs=c.outputs))
+                outputs=c.outputs, status=c.status))
     t0 = trace[0].t if trace else 0.0
     t_end = max((r.t_done for r in records), default=t0)
     # every scanned row of a drain was an admitted request, so the
@@ -243,8 +281,10 @@ def replay_scheduler(sched, trace: Sequence[Arrival]) -> TraceReport:
     i = 0
     records: List[RequestRecord] = []
     while i < len(trace) or sched.pending:
-        while i < len(trace) and trace[i].t <= sched.now:
-            sched.submit(trace[i].x, t=trace[i].t)
+        while i < len(trace) and trace[i].t <= sched.now \
+                and sched.can_submit():
+            sched.submit(trace[i].x, t=trace[i].t,
+                         deadline=trace[i].deadline)
             i += 1
         if not sched.pending:
             sched.advance_to(trace[i].t)
@@ -252,7 +292,8 @@ def replay_scheduler(sched, trace: Sequence[Arrival]) -> TraceReport:
         for c in sched.step():
             records.append(RequestRecord(
                 uid=c.uid, t_submit=c.t_submit, t_admit=c.t_admit,
-                t_done=c.t_done, K=c.K, nfe=c.nfe, outputs=c.outputs))
+                t_done=c.t_done, K=c.K, nfe=c.nfe, outputs=c.outputs,
+                status=c.status))
     t0 = trace[0].t if trace else 0.0
     t_end = max((r.t_done for r in records), default=t0)
     return TraceReport(

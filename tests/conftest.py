@@ -36,8 +36,10 @@ def _rearm_one_time_warnings():
     (they used to be process-global bools that whichever test tripped
     first would consume for the whole session)."""
     from repro.core.integrate import reset_fused_fallback_warning
-    from repro.launch.engine import reset_snap_overflow_warning
+    from repro.launch.engine import (reset_probe_nonfinite_warning,
+                                     reset_snap_overflow_warning)
 
     reset_fused_fallback_warning()
     reset_snap_overflow_warning()
+    reset_probe_nonfinite_warning()
     yield

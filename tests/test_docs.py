@@ -271,3 +271,43 @@ def test_trace_counts_prose_matches_live_counter():
     z1 = jnp.asarray(np.ones((4, 9), np.float32))          # new shape
     integ.solve_multirate(f, z1, (0.0, 1.0), Ks_a, 4)
     assert TRACE_COUNTS["fused_rk_update"] > before
+
+
+def test_failure_semantics_prose_matches_live_enum():
+    """The 'Failure semantics' status glossary in docs/serving.md is
+    asserted against the LIVE terminal-status enum and retry defaults —
+    a new status or a changed retry budget must update the docs."""
+    from repro.distributed.fault import FaultInjector, RetryPolicy
+    from repro.launch.engine import STATUSES, QueueFull  # noqa: F401
+
+    serving = _read(os.path.join(DOCS_DIR, "serving.md"))
+    arch = _read(os.path.join(DOCS_DIR, "architecture.md"))
+    assert "Failure semantics" in serving
+
+    # every live status appears backticked in the glossary, and the
+    # glossary table has exactly one row per status (no stale rows)
+    section = serving.split("Failure semantics", 1)[1]
+    for status in STATUSES:
+        assert f"`{status}`" in section, f"status {status!r} undocumented"
+    table_rows = re.findall(r"^\| `(\w+)` \|", section, re.MULTILINE)
+    assert sorted(table_rows) == sorted(STATUSES), table_rows
+
+    # the documented retry defaults are the live ones
+    policy = RetryPolicy()
+    assert policy.max_retries == 1
+    assert policy.retry_statuses == ("diverged",)
+    assert "max_retries=1" in section
+    assert '("diverged",)' in section or "(\"diverged\",)" in section
+
+    # the chaos-source sites the docs name exist and are disarmed by
+    # default (a bare injector must be a no-op — fault-free parity)
+    inj = FaultInjector()
+    assert inj.nan_uid_frac == 0.0 and inj.drop_flag_p == 0.0 \
+        and inj.straggle_tick_frac == 0.0
+    for site in ("corrupt_admission", "drop_retire_flags",
+                 "inflate_segment_cost"):
+        assert hasattr(inj, site)
+
+    # architecture.md's meta-layer note matches the live 3-row layout
+    assert "3×B" in arch and "nonfinite" in arch
+    assert "3×B" in section or "3×B" in serving

@@ -1,0 +1,562 @@
+"""Request-hardening layer (PR 8): non-finite quarantine, bounded retry
+ladder, per-request deadlines, overload policies, and the seeded chaos
+source — through BOTH serving loops (drain MultiRateEngine + in-flight
+InflightScheduler, sync and overlap), plus the watchdog's NaN screen and
+the probe-clamp observability fix.
+
+The acceptance pins:
+  * zero-hang — every submitted uid reaches exactly one terminal record
+    under every fault mix (quarantine, dropped flags, deadlines,
+    overload);
+  * the terminal-status enum is exhaustive and live
+    (``engine.STATUSES``);
+  * sync and overlap resolve identical fault schedules to bitwise-
+    identical records (the injector hashes (seed, site, uid/tick),
+    never call order);
+  * the sharded (forced 4-device) pool quarantines and evicts exactly
+    like the single-device pool (subprocess).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.distributed.fault import (
+    FaultInjector, RetryPolicy, StepFailure, StepWatchdog, WatchdogConfig,
+)
+from repro.launch.engine import (
+    STATUSES, EngineConfig, MultiRateEngine, QueueFull, next_bucket_above,
+    screen_probe_errors,
+)
+from repro.launch.scheduler import InflightScheduler
+from repro.launch.workload import (
+    Arrival, heterogeneous_requests, ok_records, poisson_trace,
+    replay_engine, replay_scheduler, status_counts, toy_classifier,
+)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ECFG = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, max_batch=8,
+                    solver="euler", fused=True)
+# NOT d=8: the fused segment kernel is built once per signature
+# (globally cached, TRACE_COUNTS-pinned), and test_scheduler.py's
+# one-trace-per-cell acceptance test asserts ITS d=8 replay compiles the
+# cell fresh — a distinct width here keeps the suites independent
+D = 10
+
+
+def _sched(inj=None, overlap=False, **kw):
+    return InflightScheduler(toy_classifier(d=D), ECFG, slots=4, seg=2,
+                             overlap=overlap, fault_injector=inj, **kw)
+
+
+def _engine(inj=None, **kw):
+    return MultiRateEngine(toy_classifier(d=D), ECFG, fault_injector=inj,
+                           **kw)
+
+
+def _trace(n=16, seed=3, rate=0.05, **kw):
+    xs = heterogeneous_requests(n, D, seed=seed)
+    return poisson_trace(xs, rate=rate, seed=seed + 100, **kw)
+
+
+def _zero_hang(rep, n):
+    uids = [r.uid for r in rep.records]
+    assert len(uids) == n and len(set(uids)) == n, (
+        f"expected {n} terminal records, got {len(uids)} "
+        f"({len(set(uids))} unique)")
+
+
+# ------------------------------------------------------- watchdog screen ----
+
+def test_watchdog_owns_nan_screen():
+    """BUGFIX pin: ``nan_is_failure`` now acts inside ``run()`` via
+    ``loss_of`` — callers no longer re-implement the check ad hoc."""
+    wd = StepWatchdog(WatchdogConfig(nan_is_failure=True))
+    assert wd.run(lambda: {"loss": 1.0}, loss_of=lambda o: o["loss"]) \
+        == {"loss": 1.0}
+    with pytest.raises(StepFailure, match="non-finite loss"):
+        wd.run(lambda: {"loss": float("nan")}, loss_of=lambda o: o["loss"])
+    with pytest.raises(StepFailure, match="non-finite loss"):
+        wd.run(lambda: {"loss": float("inf")}, loss_of=lambda o: o["loss"])
+    # the config switch disables the screen; no loss_of -> no screen
+    wd2 = StepWatchdog(WatchdogConfig(nan_is_failure=False))
+    wd2.run(lambda: {"loss": float("nan")}, loss_of=lambda o: o["loss"])
+    wd.run(lambda: {"loss": float("nan")})
+
+
+def test_watchdog_reset_on_success_closes_incident_window():
+    """``reset_on_success=True`` makes the restart budget bound
+    CONSECUTIVE failures; the default (False) keeps the historical
+    lifetime accounting that test_fault_tolerance.py pins."""
+    cfg = WatchdogConfig(max_restarts=2, reset_on_success=True)
+    wd = StepWatchdog(cfg)
+    assert wd.record_failure() and wd.record_failure()
+    assert wd.restarts == 2
+    wd.run(lambda: {"loss": 0.5}, loss_of=lambda o: o["loss"])
+    assert wd.restarts == 0          # clean step closed the window
+    assert wd.record_failure()       # budget is fresh again
+    # default: restarts accumulate across clean steps
+    wd_legacy = StepWatchdog(WatchdogConfig(max_restarts=2))
+    assert wd_legacy.record_failure()
+    wd_legacy.run(lambda: {"loss": 0.5}, loss_of=lambda o: o["loss"])
+    assert wd_legacy.restarts == 1
+
+
+# ------------------------------------------------- retry policy + hashes ----
+
+def test_retry_policy_bounds_and_statuses():
+    p = RetryPolicy()
+    assert p.should_retry("diverged", 0)
+    assert not p.should_retry("diverged", 1)    # max_retries=1
+    assert not p.should_retry("deadline", 0)    # not retried by default
+    assert not p.should_retry("ok", 0)
+    opt = RetryPolicy(max_retries=2, retry_statuses=("diverged",
+                                                     "deadline"))
+    assert opt.should_retry("deadline", 1)
+    assert not opt.should_retry("deadline", 2)
+
+
+def test_next_bucket_above_is_the_escalation_rule():
+    assert next_bucket_above(2, (2, 4, 8)) == 4
+    assert next_bucket_above(5, (2, 4, 8)) == 8
+    assert next_bucket_above(8, (2, 4, 8)) is None
+    assert next_bucket_above(0, (8, 2, 4)) == 2   # unsorted buckets ok
+
+
+def test_fault_injector_decisions_are_call_order_free():
+    """Every decision re-draws identically for the same keys — the root
+    of sync/overlap fault-schedule parity."""
+    inj = FaultInjector(seed=7, nan_uid_frac=0.5, drop_flag_p=0.5,
+                        straggle_tick_frac=0.5)
+    x = np.ones((4,), np.float32)
+    a = [np.isnan(inj.corrupt_admission(u, 0, x)).any()
+         for u in range(20)]
+    b = [np.isnan(inj.corrupt_admission(u, 0, x)).any()
+         for u in reversed(range(20))]
+    assert a == b[::-1] and any(a) and not all(a)
+    assert inj.corrupt_admission(3, 0, x) is not x or not a[3]
+    # transient: attempts > 0 re-admit clean
+    poisoned = [u for u in range(20) if a[u]]
+    assert not np.isnan(
+        inj.corrupt_admission(poisoned[0], 1, x)).any()
+    costs = [inj.inflate_segment_cost(t, 1.0) for t in range(20)]
+    assert costs == [inj.inflate_segment_cost(t, 1.0) for t in range(20)]
+    assert any(c > 1.0 for c in costs) and not all(c > 1.0 for c in costs)
+    uids = np.arange(6)
+    segs = np.zeros(6, np.int32)
+    fin = np.ones(6, bool)
+    out1 = inj.drop_retire_flags(uids, segs, fin)
+    assert (out1 == inj.drop_retire_flags(uids, segs, fin)).all()
+    # keyed on the segment count: a dropped flag is re-drawn next segment
+    later = inj.drop_retire_flags(uids, segs + 1, fin)
+    assert not (out1 == later).all() or out1.all()
+
+
+# ------------------------------------------------ probe-clamp visibility ----
+
+def test_probe_nonfinite_screen_warns_once_and_counts():
+    """BUGFIX pin: ``mesh_for_tolerance`` silently clamps a non-finite
+    probe k to k_max inside jit; the host-side screen makes that
+    observable (one-time warning + counter) for both loops."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert screen_probe_errors(np.asarray([1.0, np.nan, np.inf])) == 2
+        assert screen_probe_errors(np.asarray([np.nan])) == 1  # latched
+    assert len(w) == 1 and "k_max" in str(w[0].message)
+    assert screen_probe_errors(np.asarray([0.5, 2.0])) == 0
+
+
+def test_probe_nonfinite_counter_reaches_both_reports():
+    """A NaN-poisoned admission surfaces in StepReport.probe_nonfinite
+    (engine) and TickReport.probe_nonfinite (scheduler)."""
+    inj = FaultInjector(seed=1, nan_uid_frac=1.0, nan_transient=False)
+    xs = heterogeneous_requests(3, D, seed=0)
+    eng = _engine(inj, retry=RetryPolicy(max_retries=0))
+    for x in xs:
+        eng.submit(x)
+    done = eng.step()
+    assert eng.last_report.probe_nonfinite == 3
+    assert all(c.status == "diverged" for c in done)
+    sched = _sched(inj, retry=RetryPolicy(max_retries=0))
+    for x in xs:
+        sched.submit(x)
+    sched.step()
+    assert sched.last_report.probe_nonfinite == 3
+
+
+# --------------------------------------------------- quarantine + retry ----
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_scheduler_quarantine_retries_then_diverges(overlap):
+    """Transient poison -> one quarantine + requeue at an escalated
+    K_floor -> clean re-run retires ``retried`` with finite outputs and
+    the failed attempt's work billed into nfe. Persistent poison ->
+    best-effort ``diverged`` with the non-finite partial readout."""
+    n = 12
+    trace = _trace(n)
+    inj_t = FaultInjector(seed=1, nan_uid_frac=0.3, nan_transient=True)
+    rep = replay_scheduler(_sched(inj_t, overlap=overlap), trace)
+    _zero_hang(rep, n)
+    counts = status_counts(rep)
+    assert counts["retried"] >= 1 and counts["diverged"] == 0
+    assert set(counts) == set(STATUSES)
+    clean = {r.uid: r for r in
+             replay_scheduler(_sched(None, overlap=overlap),
+                              _trace(n)).records}
+    for r in rep.records:
+        if r.status == "retried":
+            assert np.isfinite(r.outputs).all()
+            assert r.nfe > clean[r.uid].nfe   # failed attempt is billed
+        else:
+            assert r.status == "ok"
+            # untouched requests keep their accounting; outputs may move
+            # by an ulp (quarantined slots change batch composition, and
+            # with it the compiled kernel's reduction order) — BITWISE
+            # parity is only promised fault-run-to-fault-run, which
+            # test_overlap_parity_under_faults pins
+            assert r.nfe == clean[r.uid].nfe
+            assert np.allclose(r.outputs, clean[r.uid].outputs,
+                               rtol=1e-5, atol=1e-6)
+
+    inj_p = FaultInjector(seed=1, nan_uid_frac=0.3, nan_transient=False)
+    rep_p = replay_scheduler(_sched(inj_p, overlap=overlap), _trace(n))
+    _zero_hang(rep_p, n)
+    diverged = [r for r in rep_p.records if r.status == "diverged"]
+    assert diverged
+    for r in diverged:
+        assert r.outputs is not None
+        assert not np.isfinite(r.outputs).all()   # best-effort partial
+    assert len(ok_records(rep_p).records) == n - len(diverged)
+
+
+def test_scheduler_dropped_retire_flags_still_terminate():
+    """A lost completion signal is re-drawn per segment (keyed on the
+    slot's segment count), so every request still terminates ``ok`` —
+    just later. Zero-hang for p < 1."""
+    n = 12
+    inj = FaultInjector(seed=2, drop_flag_p=0.5)
+    rep = replay_scheduler(_sched(inj), _trace(n))
+    _zero_hang(rep, n)
+    assert all(r.status == "ok" for r in rep.records)
+    clean = replay_scheduler(_sched(None), _trace(n))
+    # dropped flags cost extra segments somewhere on the trace
+    assert rep.total_cost >= clean.total_cost
+
+
+# -------------------------------------------------------------- deadlines ----
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_deadline_eviction_and_queue_drop(overlap):
+    """Stragglers (inflated segment cost) push requests past their
+    deadline: in-slot rows evict with the partial readout, queued rows
+    drop with no outputs — each uid exactly once (no double-retire under
+    overlap's lagged retire)."""
+    n = 16
+    inj = FaultInjector(seed=5, straggle_tick_frac=0.4,
+                        straggle_factor=8.0)
+    trace = _trace(n, deadline_slack=60.0)
+    rep = replay_scheduler(_sched(inj, overlap=overlap), trace)
+    _zero_hang(rep, n)
+    counts = status_counts(rep)
+    assert counts["deadline"] >= 1, counts
+    for r in rep.records:
+        if r.status == "deadline":
+            assert r.t_done - r.t_submit >= 0
+        else:
+            assert r.status in ("ok", "retried")
+    # a finished request is never evicted: every ok row has outputs
+    assert all(r.outputs is not None for r in rep.records
+               if r.status == "ok")
+
+
+def test_deadline_expired_in_queue_drops_without_probe():
+    """A request whose deadline passed while it queued drops terminally
+    at admission — no slot, no probe cost, outputs None."""
+    sched = _sched(None)
+    xs = heterogeneous_requests(6, D, seed=0)
+    # fill the pool, then queue one request with a deadline that will
+    # expire while it waits
+    for x in xs[:4]:
+        sched.submit(x)
+    late = sched.submit(xs[4], deadline=sched.now + 1e-9)
+    done = {}
+    while sched.pending:
+        for c in sched.step():
+            done[c.uid] = c
+    assert done[late].status == "deadline"
+    assert done[late].outputs is None and done[late].segments == 0
+    assert all(c.status == "ok" for u, c in done.items() if u != late)
+
+
+def test_deadline_retry_opt_in():
+    """``retry_statuses=("diverged", "deadline")`` opts deadline
+    evictions into the ladder — bounded, so they still terminate."""
+    n = 12
+    inj = FaultInjector(seed=5, straggle_tick_frac=0.4,
+                        straggle_factor=8.0)
+    rep = replay_scheduler(
+        _sched(inj, retry=RetryPolicy(retry_statuses=("diverged",
+                                                      "deadline"))),
+        _trace(n, deadline_slack=60.0))
+    _zero_hang(rep, n)
+
+
+# --------------------------------------------------------------- overload ----
+
+def test_overload_shed_refuses_terminally():
+    sched = _sched(None, queue_cap=2, overload_policy="shed")
+    xs = heterogeneous_requests(10, D, seed=0)
+    uids = [sched.submit(x) for x in xs]
+    done = {}
+    while sched.pending:
+        for c in sched.step():
+            done[c.uid] = c
+    assert set(done) == set(uids)
+    counts = {}
+    for c in done.values():
+        counts[c.status] = counts.get(c.status, 0) + 1
+    # the admission queue is the capacity boundary: 2 queue, 8 shed at
+    # submit time (slots only fill at the next tick)
+    assert counts == {"ok": 2, "shed": 8}, counts
+    assert all(done[u].outputs is None for u in uids
+               if done[u].status == "shed")
+
+
+def test_overload_block_raises_and_can_submit_gates():
+    sched = _sched(None, queue_cap=1, overload_policy="block")
+    xs = heterogeneous_requests(3, D, seed=0)
+    assert sched.can_submit()
+    sched.submit(xs[0])
+    assert not sched.can_submit()
+    with pytest.raises(QueueFull):
+        sched.submit(xs[1])
+    sched.step()                      # admits into slots, queue frees
+    assert sched.can_submit()
+    sched.submit(xs[1])
+    while sched.pending:
+        sched.step()
+
+
+def test_overload_degrade_caps_k_under_pressure():
+    """Over-pressure admissions serve one bucket coarser — nothing is
+    refused, agreement degrades instead of availability."""
+    xs = np.full((10, D), 3.0, np.float32)   # hard rows -> fine buckets
+    burst = [Arrival(t=0.0, x=x) for x in xs]
+    rep_free = replay_scheduler(_sched(None), list(burst))
+    rep_deg = replay_scheduler(
+        _sched(None, queue_cap=2, overload_policy="degrade"), list(burst))
+    _zero_hang(rep_deg, 10)
+    assert all(r.status == "ok" for r in rep_deg.records)
+    k_free = {r.uid: r.K for r in rep_free.records}
+    assert any(r.K < k_free[r.uid] for r in rep_deg.records)
+
+
+def test_engine_overload_and_retry_paths():
+    """The drain engine honors the same contracts: shed/block caps,
+    transient-NaN retry (``retried``), persistent-NaN best-effort
+    (``diverged``)."""
+    xs = heterogeneous_requests(8, D, seed=0)
+    eng = _engine(None, queue_cap=2, overload_policy="shed")
+    uids = [eng.submit(x) for x in xs]
+    done = {}
+    while len(eng):
+        for c in eng.step():
+            done[c.uid] = c
+    assert set(done) == set(uids)
+    assert sum(1 for c in done.values() if c.status == "shed") == 6
+    eng_b = _engine(None, queue_cap=1, overload_policy="block")
+    eng_b.submit(xs[0])
+    assert not eng_b.can_submit()
+    with pytest.raises(QueueFull):
+        eng_b.submit(xs[1])
+    inj = FaultInjector(seed=1, nan_uid_frac=0.4, nan_transient=True)
+    rep = replay_engine(_engine(inj), _trace(12))
+    _zero_hang(rep, 12)
+    assert status_counts(rep)["retried"] >= 1
+    inj_p = FaultInjector(seed=1, nan_uid_frac=0.4, nan_transient=False)
+    rep_p = replay_engine(_engine(inj_p), _trace(12))
+    _zero_hang(rep_p, 12)
+    assert status_counts(rep_p)["diverged"] >= 1
+
+
+# -------------------------------------------------------- pool exhaustion ----
+
+def test_pool_survives_total_quarantine():
+    """EDGE: every slot quarantined in one tick — the pool frees all
+    rows, the retry ladder requeues them, and the very next tick
+    re-admits; nothing deadlocks, everything terminates."""
+    inj = FaultInjector(seed=0, nan_uid_frac=1.0, nan_transient=True)
+    sched = _sched(inj)
+    xs = heterogeneous_requests(4, D, seed=0)   # exactly the pool width
+    uids = [sched.submit(x) for x in xs]
+    done = {}
+    guard = 0
+    while sched.pending:
+        guard += 1
+        assert guard < 200, "pool deadlocked after total quarantine"
+        for c in sched.step():
+            done[c.uid] = c
+    assert set(done) == set(uids)
+    assert all(c.status == "retried" for c in done.values())
+    assert sched.last_report is not None
+    # and with retries exhausted: terminal diverged, still no hang
+    inj_p = FaultInjector(seed=0, nan_uid_frac=1.0, nan_transient=False)
+    sched_p = _sched(inj_p, retry=RetryPolicy(max_retries=0))
+    uids_p = [sched_p.submit(x) for x in xs]
+    done_p = {}
+    while sched_p.pending:
+        for c in sched_p.step():
+            done_p[c.uid] = c
+    assert set(done_p) == set(uids_p)
+    assert all(c.status == "diverged" for c in done_p.values())
+
+
+# ------------------------------------------------ sync/overlap fault parity ----
+
+def test_overlap_parity_under_faults():
+    """ACCEPTANCE: the pipelined loop resolves the SAME fault schedule
+    to bitwise-identical terminal records — statuses, stamps, nfe,
+    outputs — because injector decisions hash keys, not call order."""
+    n = 14
+    mixes = [
+        FaultInjector(seed=1, nan_uid_frac=0.3, nan_transient=True),
+        FaultInjector(seed=2, drop_flag_p=0.4),
+        FaultInjector(seed=5, straggle_tick_frac=0.4,
+                      straggle_factor=8.0),
+    ]
+    for inj in mixes:
+        kw = {"deadline": 80.0} if inj.straggle_tick_frac else {}
+        a = {r.uid: r for r in replay_scheduler(
+            _sched(inj, **kw), _trace(n)).records}
+        b = {r.uid: r for r in replay_scheduler(
+            _sched(inj, overlap=True, **kw), _trace(n)).records}
+        assert set(a) == set(b)
+        for u in a:
+            ra, rb = a[u], b[u]
+            assert (ra.status, ra.K, ra.nfe, ra.t_submit, ra.t_admit,
+                    ra.t_done) == (rb.status, rb.K, rb.nfe, rb.t_submit,
+                                   rb.t_admit, rb.t_done), (ra, rb)
+            if ra.outputs is None:
+                assert rb.outputs is None
+            else:
+                assert np.array_equal(ra.outputs, rb.outputs,
+                                      equal_nan=True)
+
+
+# ----------------------------------------------------- bench check gate ----
+
+def test_bench_faults_check_gate():
+    """``run.py --check``'s faults section passes the committed rows and
+    fails fast on a hung mix, broken accounting, or a failed parity."""
+    if REPO_ROOT not in sys.path:
+        sys.path.insert(0, REPO_ROOT)
+    from benchmarks.run import _check_faults_section
+
+    good = [
+        {"bench": "faults", "mode": "inflight", "mix": "clean",
+         "devices": 1, "zero_hang": True, "status_ok": True},
+        {"bench": "faults", "mode": "inflight", "mix": "nan_transient",
+         "devices": 4, "zero_hang": True, "status_ok": True},
+        {"bench": "faults", "mode": "verdict", "zero_hang_all": True,
+         "fault_free_parity": True, "status_accounting_ok": True,
+         "overlap_parity_all": True},
+    ]
+    assert _check_faults_section("BENCH_faults.json", good) == []
+    hung = [dict(good[0], zero_hang=False), good[1], good[2]]
+    assert any("lost requests" in e for e in
+               _check_faults_section("BENCH_faults.json", hung))
+    bad_verdict = [good[0], good[1],
+                   dict(good[2], fault_free_parity=False)]
+    assert any("fault_free_parity" in e for e in
+               _check_faults_section("BENCH_faults.json", bad_verdict))
+    no_mesh = [good[0], good[2]]
+    assert any("devices > 1" in e for e in
+               _check_faults_section("BENCH_faults.json", no_mesh))
+
+
+# ------------------------------------------------- sharded pool (4 dev) ----
+
+_SHARDED_FAULTS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+
+    from repro.distributed.fault import FaultInjector
+    from repro.launch.engine import EngineConfig
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.scheduler import InflightScheduler
+    from repro.launch.workload import (
+        heterogeneous_requests, poisson_trace, replay_scheduler,
+        status_counts, toy_classifier,
+    )
+
+    assert jax.device_count() == 4, jax.device_count()
+    mesh = make_serving_mesh(4)
+    ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, fused=True)
+
+    def sched(inj, overlap=False, **kw):
+        return InflightScheduler(toy_classifier(d=8), ecfg, slots=8,
+                                 seg=2, mesh=mesh, overlap=overlap,
+                                 fault_injector=inj, **kw)
+
+    xs = heterogeneous_requests(16, 8, seed=3)
+    trace = poisson_trace(xs, rate=0.25, seed=103)
+
+    # quarantine on the sharded pool: the nonfinite meta row is computed
+    # on the global (gathered) state, so a poisoned slot on any device
+    # quarantines exactly as on one device
+    inj = FaultInjector(seed=1, nan_uid_frac=0.3, nan_transient=True)
+    rep = replay_scheduler(sched(inj), trace)
+    counts = status_counts(rep)
+    assert len(rep.records) == 16, counts
+    assert counts["retried"] >= 1, counts
+    print("SHARDED_QUARANTINE_OK")
+
+    # deadline eviction under overlap=True on the mesh: each uid exactly
+    # once (no double-retire through the lagged retire), bitwise equal
+    # to the sync mesh replay
+    inj_d = FaultInjector(seed=5, straggle_tick_frac=0.4,
+                          straggle_factor=8.0)
+    trace_d = poisson_trace(xs, rate=0.25, seed=103, deadline_slack=60.0)
+    rep_s = replay_scheduler(sched(inj_d), trace_d)
+    rep_o = replay_scheduler(sched(inj_d, overlap=True), trace_d)
+    for rep_x in (rep_s, rep_o):
+        uids = [r.uid for r in rep_x.records]
+        assert len(uids) == 16 and len(set(uids)) == 16
+    assert status_counts(rep_s)["deadline"] >= 1
+    a = {r.uid: r for r in rep_s.records}
+    for r in rep_o.records:
+        ref = a[r.uid]
+        assert (r.status, r.K, r.nfe, r.t_done) == (
+            ref.status, ref.K, ref.nfe, ref.t_done)
+        if r.outputs is None:
+            assert ref.outputs is None
+        else:
+            assert np.array_equal(r.outputs, ref.outputs, equal_nan=True)
+    print("SHARDED_DEADLINE_OVERLAP_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_pool_faults_subprocess():
+    """EDGE (tier-2): quarantine and deadline eviction on a forced
+    4-device mesh behave exactly as single-device — including under
+    ``overlap=True`` — in a subprocess (device topology is frozen at
+    first jax init)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_FAULTS_SCRIPT],
+                          env=env, capture_output=True, text=True,
+                          timeout=600, cwd=REPO_ROOT)
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, out[-4000:]
+    for marker in ("SHARDED_QUARANTINE_OK",
+                   "SHARDED_DEADLINE_OVERLAP_OK"):
+        assert marker in out, out[-4000:]

@@ -722,9 +722,10 @@ def test_segment_cell_donates_carry_buffers():
     assert z.is_deleted() and fs.is_deleted()
     assert not xs.is_deleted()
     meta = np.array(meta)
-    assert meta.shape == (2, B) and meta.dtype == np.int32
+    assert meta.shape == (3, B) and meta.dtype == np.int32
     np.testing.assert_array_equal(meta[0], [2, 2, 2, 2])   # k' after seg=2
     np.testing.assert_array_equal(meta[1], [0, 0, 0, 0])   # K=4 unfinished
+    np.testing.assert_array_equal(meta[2], [0, 0, 0, 0])   # all finite
 
 
 def test_retire_readout_gated_to_finished_rows():
