@@ -1,0 +1,254 @@
+"""Closed-loop refinery bench (PR 9: online hypersolver refinement).
+
+    PYTHONPATH=src python benchmarks/bench_refinery.py [--budget small]
+
+Serves a DRIFTING seeded workload mix through the in-flight scheduler
+with the full refinery loop live — residual-ledger capture from interior
+healthy slot rows, cooperative fit steps between scheduler ticks, shadow
+scoring, and promotion hot-swaps into the RUNNING scheduler — and writes
+BENCH_refinery.json with three sections:
+
+  * **refinement** — the headline: after serving the drifting mix with
+    the loop closed, the promoted (refined) g beats the frozen
+    (zero-init) g on agreement against a fine frozen reference at EQUAL
+    mean NFE, on a held-out drifting request set neither side trained
+    on. One row per variant (frozen / refined) + one loop-accounting row
+    (promotions, rejections, rollbacks, ledger fill, fit steps).
+  * **capture_parity** — ACCEPTANCE: with capture enabled
+    (capture_rate=1.0) but NO promotion, completions are uid-for-uid
+    bitwise identical to capture-disabled runs — engine, in-flight
+    sync, and in-flight overlap. Capture only reads resident state, is
+    never priced by the cost oracle, and draws from its own RNG.
+  * **shadow_gate** — ACCEPTANCE: a corrupted candidate offered to the
+    promotion gate mid-serving is rejected by the shadow scorer, and
+    the serving outputs are bitwise identical to a run where no
+    refinery was attached at all — a rejected candidate is NEVER
+    observable in serving outputs.
+
+The verdict row is the tracked scoreboard: ``refined_beats_frozen``,
+``equal_nfe``, ``capture_parity``, ``shadow_gate_clean``.
+``benchmarks/run.py --check`` enforces all four.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import json
+import sys
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+if __name__ == "__main__":  # runnable as a script from anywhere
+    sys.path.insert(0, REPO_ROOT)
+
+import numpy as np
+
+from benchmarks.bench_faults import records_bitwise_equal
+from repro.launch.engine import EngineConfig, MultiRateEngine
+from repro.launch.refinery import Refinery, RefineryConfig, ResidualLedger
+from repro.launch.scheduler import InflightScheduler
+from repro.launch.workload import (
+    drifting_requests, poisson_trace, replay_engine, replay_scheduler,
+    toy_refinable_classifier,
+)
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_refinery.json")
+
+D_FEAT = 32
+SLOTS = 32
+# seg=1 under fixed K=2 so every request has an interior segment
+# boundary — the scheduler's retire hook captures interior rows only
+SEG = 1
+
+
+def _ecfg():
+    # fixed-K serving: both variants run the SAME mesh (K=2 for every
+    # request), so agreement differences are purely the correction's —
+    # the refined g must win at equal NFE, not by buying steps
+    return EngineConfig(controller="fixed", fixed_K=2, buckets=(2,),
+                        max_batch=SLOTS, solver="euler")
+
+
+def _budget(budget: str):
+    return {
+        "tiny": dict(n=96, epochs=2, steps_per_tick=20, total=1500),
+        "small": dict(n=256, epochs=4, steps_per_tick=40, total=6000),
+        "full": dict(n=512, epochs=6, steps_per_tick=60, total=20000),
+    }.get(budget, None) or _budget("small")
+
+
+# ------------------------------------------------------- the closed loop ----
+
+def refinement_rows(budget: str = "small"):
+    """Serve the drifting mix with the loop closed; score frozen vs the
+    promoted params on a held-out drifting set. Returns (rows, ok_flags).
+    """
+    b = _budget(budget)
+    model = toy_refinable_classifier(d=D_FEAT, hidden=16)
+    ecfg = _ecfg()
+    ledger = ResidualLedger(model, capacity=2048, capture_rate=1.0,
+                            seed=0, holdout_every=8)
+    sched = InflightScheduler(model, ecfg, slots=SLOTS, seg=SEG,
+                              ledger=ledger)
+    shadow = drifting_requests(32, D_FEAT, seed=999)
+    refin = Refinery(
+        model, ledger,
+        RefineryConfig(steps_per_tick=b["steps_per_tick"], batch_size=64,
+                       min_fill=64, lr=5e-3, total_steps=b["total"],
+                       shadow_every=400, ckpt_every=10 ** 9, ref_K=64,
+                       seed=0),
+        ecfg=ecfg, shadow_xs=shadow)
+    frozen = refin.current
+
+    xs = drifting_requests(b["n"], D_FEAT, seed=3)
+    ticks = [0]
+
+    def on_tick(s):
+        refin.tick([s])
+        ticks[0] += 1
+
+    for ep in range(b["epochs"]):
+        replay_scheduler(sched, poisson_trace(xs, rate=2.0, seed=100 + ep),
+                         on_tick=on_tick)
+
+    fr = refin.shadow_score(frozen)
+    re = refin.shadow_score(refin.current)
+    rows = [
+        {"bench": "refinery", "section": "refinement", "variant": "frozen",
+         "agreement": fr["agreement"], "mean_nfe": fr["mean_nfe"],
+         "holdout_resid": fr.get("resid")},
+        {"bench": "refinery", "section": "refinement", "variant": "refined",
+         "agreement": re["agreement"], "mean_nfe": re["mean_nfe"],
+         "holdout_resid": re.get("resid")},
+        {"bench": "refinery", "section": "refinement", "variant": "loop",
+         "ticks": ticks[0], "fit_steps": refin.steps,
+         "ledger_fill": ledger.fill, "ledger_seen": ledger.seen,
+         "holdout_fill": ledger.holdout_fill,
+         "promotions": refin.promotions, "rejections": refin.rejections,
+         "rollbacks": refin.rollbacks, "last_loss": refin.last_loss},
+    ]
+    beats = bool(refin.promotions > 0
+                 and re["agreement"] > fr["agreement"]
+                 and re.get("resid", 0.0) < fr.get("resid", float("inf")))
+    equal_nfe = bool(re["mean_nfe"] == fr["mean_nfe"])
+    return rows, beats, equal_nfe
+
+
+# ------------------------------------------------------- capture parity ----
+
+def capture_parity_rows(budget: str = "small"):
+    """Capture on (rate=1.0, no refinery -> no promotion) vs capture off
+    must be bitwise identical, uid for uid — all three serving loops."""
+    n = {"tiny": 24, "small": 48, "full": 96}.get(budget, 48)
+    ecfg = _ecfg()
+    xs = drifting_requests(n, D_FEAT, seed=17)
+    trace = poisson_trace(xs, rate=0.5, seed=211)
+
+    def led(model):
+        return ResidualLedger(model, capacity=512, capture_rate=1.0,
+                              seed=0)
+
+    def sched(ledger=None, overlap=False):
+        m = toy_refinable_classifier(d=D_FEAT)
+        return InflightScheduler(
+            m, ecfg, slots=8, seg=SEG, overlap=overlap,
+            ledger=None if ledger is None else led(m))
+
+    checks = []
+    rep_off = replay_scheduler(sched(), trace)
+    rep_on = replay_scheduler(sched(ledger=True), trace)
+    checks.append(("inflight", records_bitwise_equal(rep_off, rep_on)))
+    rep_off_o = replay_scheduler(sched(overlap=True), trace)
+    rep_on_o = replay_scheduler(sched(ledger=True, overlap=True), trace)
+    checks.append(("inflight_overlap",
+                   records_bitwise_equal(rep_off_o, rep_on_o)))
+    m_e = toy_refinable_classifier(d=D_FEAT)
+    rep_e_off = replay_engine(MultiRateEngine(m_e, ecfg), trace)
+    rep_e_on = replay_engine(
+        MultiRateEngine(m_e, ecfg, ledger=led(m_e)), trace)
+    checks.append(("engine", records_bitwise_equal(rep_e_off, rep_e_on)))
+
+    rows = [{"bench": "refinery", "section": "capture_parity",
+             "mode": loop, "submitted": n, "parity": bool(ok)}
+            for loop, ok in checks]
+    return rows, all(ok for _, ok in checks)
+
+
+# ---------------------------------------------------------- shadow gate ----
+
+def shadow_gate_rows(budget: str = "small"):
+    """A corrupted candidate offered mid-serving must be REJECTED by the
+    shadow gate, and the serving records must be bitwise identical to a
+    run with no refinery attached at all."""
+    n = {"tiny": 24, "small": 48, "full": 96}.get(budget, 48)
+    ecfg = _ecfg()
+    xs = drifting_requests(n, D_FEAT, seed=29)
+    trace = poisson_trace(xs, rate=0.5, seed=307)
+    shadow = drifting_requests(16, D_FEAT, seed=999)
+
+    # baseline: capture on, no refinery
+    m_a = toy_refinable_classifier(d=D_FEAT)
+    sched_a = InflightScheduler(
+        m_a, ecfg, slots=8, seg=SEG,
+        ledger=ResidualLedger(m_a, capacity=512, seed=0))
+    rep_a = replay_scheduler(sched_a, trace)
+
+    # gated run: same trace; at tick 5 a corrupted candidate hits the
+    # promotion gate against the live scheduler
+    m_b = toy_refinable_classifier(d=D_FEAT)
+    led_b = ResidualLedger(m_b, capacity=512, seed=0)
+    sched_b = InflightScheduler(m_b, ecfg, slots=8, seg=SEG, ledger=led_b)
+    refin = Refinery(m_b, led_b, RefineryConfig(ref_K=64, seed=0),
+                     ecfg=ecfg, shadow_xs=shadow)
+    rng = np.random.RandomState(0)
+    import jax
+    refin.candidate = jax.tree_util.tree_map(
+        lambda l: l + 100.0 * rng.standard_normal(l.shape).astype(l.dtype),
+        refin.candidate)
+    state = {"tick": 0, "verdict": None}
+
+    def on_tick(s):
+        state["tick"] += 1
+        if state["tick"] == 5:
+            state["verdict"] = refin.maybe_promote([s])
+
+    rep_b = replay_scheduler(sched_b, trace, on_tick=on_tick)
+
+    v = state["verdict"] or {}
+    rejected = bool(v and not v.get("promoted", True))
+    parity = records_bitwise_equal(rep_a, rep_b)
+    rows = [{"bench": "refinery", "section": "shadow_gate",
+             "submitted": n, "gate_fired": bool(v),
+             "candidate_rejected": rejected, "parity": bool(parity),
+             "candidate_agreement":
+                 (v.get("candidate") or {}).get("agreement"),
+             "current_agreement":
+                 (v.get("current") or {}).get("agreement")}]
+    return rows, bool(rejected and parity)
+
+
+def main(budget: str = "small", out_path: str = OUT_PATH):
+    ref_rows, beats, equal_nfe = refinement_rows(budget)
+    cap_rows, cap_ok = capture_parity_rows(budget)
+    gate_rows, gate_ok = shadow_gate_rows(budget)
+    rows = ref_rows + cap_rows + gate_rows
+    rows.append({
+        "bench": "refinery", "mode": "verdict",
+        "refined_beats_frozen": bool(beats),
+        "equal_nfe": bool(equal_nfe),
+        "capture_parity": bool(cap_ok),
+        "shadow_gate_clean": bool(gate_ok),
+    })
+    with open(out_path, "w") as fh:
+        json.dump(rows, fh, indent=1, default=str)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="small",
+                    choices=["tiny", "small", "full"])
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    for r in main(args.budget, args.out):
+        print(r)

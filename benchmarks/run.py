@@ -17,8 +17,11 @@ multi-rate NFE/agreement pareto), BENCH_scheduler.json
 (bench_scheduler — serving-latency head-to-head, p50/p99/waste),
 BENCH_wallclock.json (bench_wallclock — the real-clock overlap-vs-sync
 serving race + async-dispatch mechanism + predicted-vs-measured join),
-and BENCH_faults.json (bench_faults — the chaos harness: zero-hang,
-status accounting, and fault-free parity under seeded fault injection).
+BENCH_faults.json (bench_faults — the chaos harness: zero-hang,
+status accounting, and fault-free parity under seeded fault injection),
+and BENCH_refinery.json (bench_refinery — the closed refinement loop:
+refined-vs-frozen agreement at equal NFE, capture bitwise parity, and
+shadow-gate rejection cleanliness).
 
 ``--check`` is the BENCH-schema smoke gate (tier-1 CI): it validates
 every committed BENCH_*.json — parseable, non-empty list of rows, every
@@ -47,6 +50,7 @@ MODULES = [
     "bench_serve",
     "bench_scheduler",
     "bench_faults",
+    "bench_refinery",
 ]
 
 REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
@@ -69,6 +73,9 @@ BENCH_REQUIRED = {
     # the chaos harness (bench_faults): 'zero_hang' pins the liveness
     # ledger every fault-mix row carries, 'mix' the fault taxonomy
     "BENCH_faults.json": ("zero_hang", "mix"),
+    # the closed-loop refinery (bench_refinery): 'agreement' pins the
+    # frozen-vs-refined scoring rows, 'section' the three-part layout
+    "BENCH_refinery.json": ("agreement", "section"),
 }
 
 
@@ -123,6 +130,59 @@ def check_bench_files(root: str = REPO_ROOT) -> list:
             errors.extend(_check_wallclock_section(name, rows))
         if name == "BENCH_faults.json":
             errors.extend(_check_faults_section(name, rows))
+        if name == "BENCH_refinery.json":
+            errors.extend(_check_refinery_section(name, rows))
+    return errors
+
+
+def _check_refinery_section(name: str, rows: list) -> list:
+    """Closed-loop-refinery invariants: frozen AND refined scoring rows
+    (the head-to-head needs both), capture-parity rows for all three
+    serving loops each at parity, a shadow-gate row whose corrupted
+    candidate was rejected, and the verdict scoreboard — the refined g
+    must beat the frozen g on agreement at EQUAL mean NFE, capture must
+    be bitwise free, and a rejected candidate must never be observable
+    in serving outputs."""
+    errors = []
+    scoring = [r for r in rows if isinstance(r, dict)
+               and r.get("section") == "refinement"
+               and r.get("variant") in ("frozen", "refined")]
+    for variant in ("frozen", "refined"):
+        if not any(r.get("variant") == variant for r in scoring):
+            errors.append(f"{name}: no refinement scoring row for the "
+                          f"{variant!r} variant — the head-to-head "
+                          "needs both sides")
+    cap = {r.get("mode"): r for r in rows if isinstance(r, dict)
+           and r.get("section") == "capture_parity"}
+    for loop in ("inflight", "inflight_overlap", "engine"):
+        if loop not in cap:
+            errors.append(f"{name}: no capture-parity row for the "
+                          f"{loop!r} loop")
+        elif cap[loop].get("parity") is not True:
+            errors.append(f"{name}: capture-parity row for {loop!r} is "
+                          "not at parity — capture perturbed serving "
+                          "completions")
+    gates = [r for r in rows if isinstance(r, dict)
+             and r.get("section") == "shadow_gate"]
+    if not gates:
+        errors.append(f"{name}: missing the shadow-gate rejection row")
+    elif not (gates[0].get("candidate_rejected")
+              and gates[0].get("parity")):
+        errors.append(f"{name}: shadow-gate row shows the corrupted "
+                      "candidate leaked into serving (rejected="
+                      f"{gates[0].get('candidate_rejected')}, parity="
+                      f"{gates[0].get('parity')})")
+    verdicts = [r for r in rows if isinstance(r, dict)
+                and r.get("mode") == "verdict"]
+    if not verdicts:
+        errors.append(f"{name}: missing the verdict row "
+                      "(refined_beats_frozen scoreboard)")
+    else:
+        for key in ("refined_beats_frozen", "equal_nfe",
+                    "capture_parity", "shadow_gate_clean"):
+            if verdicts[0].get(key) is not True:
+                errors.append(f"{name}: verdict {key} is not True — "
+                              "the closed-loop contract regressed")
     return errors
 
 

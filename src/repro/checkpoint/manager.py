@@ -26,7 +26,7 @@ import re
 import shutil
 import threading
 import zlib
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +86,25 @@ def _load_leaf(path: str, dtype: str, shape, codec: str) -> np.ndarray:
     return np.frombuffer(raw, dtype=_np_dtype(dtype)).reshape(shape)
 
 
+# One re-entrant lock per checkpoint DIRECTORY (not per manager): an async
+# saver thread publishing step N+1 and GC-ing step N races any reader that
+# just picked N via ``latest_step`` — including a reader on a DIFFERENT
+# manager instance over the same directory (the refinery's candidate
+# saver vs a serve-loop restore). Publish+GC and pick+read each run under
+# this lock, closing the save-while-restore race pinned by
+# tests/test_checkpoint.py. A writer in another PROCESS can still delete
+# between pick and read, so ``restore_latest`` additionally rescans on
+# FileNotFoundError.
+_DIR_LOCKS: Dict[str, threading.RLock] = {}
+_DIR_LOCKS_GUARD = threading.Lock()
+
+
+def _dir_lock(directory: str) -> threading.RLock:
+    key = os.path.realpath(directory)
+    with _DIR_LOCKS_GUARD:
+        return _DIR_LOCKS.setdefault(key, threading.RLock())
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = False,
                  codec: str = DEFAULT_CODEC):
@@ -99,6 +118,7 @@ class CheckpointManager:
         self.codec = codec
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+        self._lock = _dir_lock(directory)
 
     # ------------------------------------------------------------- save ----
     def save(self, step: int, tree: Any, wait: bool = False) -> None:
@@ -130,10 +150,11 @@ class CheckpointManager:
                 json.dump(manifest, f)
                 f.flush()
                 os.fsync(f.fileno())
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)  # atomic publish
-            self._gc()
+            with self._lock:   # publish + GC atomic w.r.t. pick + read
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)  # atomic publish
+                self._gc()
 
         if self.async_save and not wait:
             self.wait()
@@ -161,31 +182,47 @@ class CheckpointManager:
         """``like``: a pytree with the target structure (concrete or
         abstract). ``shardings``: matching NamedSharding tree or None."""
         d = os.path.join(self.dir, f"step_{step}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        flat_like, treedef = jax.tree_util.tree_flatten(like)
-        assert manifest["n_leaves"] == len(flat_like), \
-            (manifest["n_leaves"], len(flat_like))
-        flat_sh = (treedef.flatten_up_to(shardings)
-                   if shardings is not None else [None] * len(flat_like))
-        codec = manifest.get("codec", "zstd")  # pre-tag checkpoints: zstd
-        out = []
-        for i, (l, sh) in enumerate(zip(flat_like, flat_sh)):
-            arr = _load_leaf(os.path.join(d, f"{i}.npy.zst"),
-                             manifest["dtypes"][i], manifest["shapes"][i],
-                             codec)
-            assert list(arr.shape) == list(l.shape), (i, arr.shape, l.shape)
-            if sh is not None:
-                out.append(jax.device_put(arr, sh))
-            else:
-                out.append(jnp.asarray(arr))
+        with self._lock:   # hold off concurrent publish/GC over the reads
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            flat_like, treedef = jax.tree_util.tree_flatten(like)
+            assert manifest["n_leaves"] == len(flat_like), \
+                (manifest["n_leaves"], len(flat_like))
+            flat_sh = (treedef.flatten_up_to(shardings)
+                       if shardings is not None else [None] * len(flat_like))
+            codec = manifest.get("codec", "zstd")  # pre-tag ckpts: zstd
+            out = []
+            for i, (l, sh) in enumerate(zip(flat_like, flat_sh)):
+                arr = _load_leaf(os.path.join(d, f"{i}.npy.zst"),
+                                 manifest["dtypes"][i],
+                                 manifest["shapes"][i], codec)
+                assert list(arr.shape) == list(l.shape), \
+                    (i, arr.shape, l.shape)
+                if sh is not None:
+                    out.append(jax.device_put(arr, sh))
+                else:
+                    out.append(jnp.asarray(arr))
         return jax.tree_util.tree_unflatten(treedef, out)
 
-    def restore_latest(self, like: Any, shardings: Any = None):
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return step, self.restore(step, like, shardings)
+    def restore_latest(self, like: Any, shardings: Any = None,
+                       retries: int = 3):
+        """Pick the newest visible step and restore it — atomically
+        w.r.t. this process's writers (the per-directory lock covers
+        pick AND read, so an async save's keep-N GC can no longer delete
+        the picked step mid-restore). A writer in another process can
+        still win that race, so a vanished step triggers a bounded
+        rescan instead of surfacing FileNotFoundError."""
+        last_err: Optional[FileNotFoundError] = None
+        for _ in range(max(int(retries), 1)):
+            with self._lock:
+                step = self.latest_step()
+                if step is None:
+                    return None, None
+                try:
+                    return step, self.restore(step, like, shardings)
+                except FileNotFoundError as e:
+                    last_err = e   # cross-process GC: rescan for newer
+        raise last_err
 
     # --------------------------------------------------------------- gc ----
     def _gc(self) -> None:

@@ -647,7 +647,8 @@ class Integrator:
         return SegmentCarry(z2, k2, Ks, eps, fs), fin
 
     def segment_cell(self, field_of, seg: int, *, s0=0.0, mesh=None,
-                     slot_axis: str = "data", donate: bool = True):
+                     slot_axis: str = "data", donate: bool = True,
+                     g_apply=None):
         """The serving-loop compilation of ``solve_segment``: one jitted
         ``(xs, z, k, Ks, eps, fs) -> (z', fs', meta)`` cell per
         ``(shape, seg[, mesh])``, with the carry buffers DONATED.
@@ -684,16 +685,28 @@ class Integrator:
         ``field_of`` builds the slot-local vector field from the per-slot
         conditioning rows ``xs`` (the launch/engine.py ``DepthModel``
         adapter shape); under ``mesh=`` the rows thread through the same
-        shard_map as the carry (``_solve_segment_sharded``)."""
+        shard_map as the carry (``_solve_segment_sharded``).
 
-        def run(xs, z, k, Ks, eps, fs):
+        ``g_apply`` turns the correction into a HOT-SWAPPABLE operand:
+        instead of baking g's parameters into the closure (a constant of
+        the compiled cell — swapping them would force a retrace), the
+        cell takes an extra trailing ``gp`` pytree and binds
+        ``g = g_apply(gp, eps, s, z, dz)`` inside the trace. ``gp`` is a
+        traced, NON-donated input, so replacing it between segments with
+        a pytree of identical treedef/shapes/dtypes reuses the same
+        compilation — the params-are-inputs invariant the online refinery
+        (launch/refinery.py) rests on. Any closure ``self.g`` is ignored
+        on this path. The non-parametric signature and its donation
+        contract are unchanged."""
+
+        def _advance(integ, xs, z, k, Ks, eps, fs):
             carry = SegmentCarry(z, jnp.asarray(k, jnp.int32),
                                  jnp.asarray(Ks, jnp.int32), eps, fs)
             if mesh is None:
-                out, fin = self.solve_segment(field_of(xs), carry, seg,
-                                              s0=s0)
+                out, fin = integ.solve_segment(field_of(xs), carry, seg,
+                                               s0=s0)
             else:
-                out, fin = self._solve_segment_sharded(
+                out, fin = integ._solve_segment_sharded(
                     None, carry, seg, s0, mesh, slot_axis,
                     field_of=field_of, cond=xs)
             bad = _nonfinite_rows(out.z, like=fin)
@@ -701,6 +714,16 @@ class Integrator:
                               fin.astype(jnp.int32),
                               bad.astype(jnp.int32)])
             return out.z, out.first_stage, meta
+
+        if g_apply is None:
+            def run(xs, z, k, Ks, eps, fs):
+                return _advance(self, xs, z, k, Ks, eps, fs)
+        else:
+            def run(xs, z, k, Ks, eps, fs, gp):
+                bound = dataclasses.replace(
+                    self,
+                    g=lambda e, s, zz, dzz: g_apply(gp, e, s, zz, dzz))
+                return _advance(bound, xs, z, k, Ks, eps, fs)
 
         return jax.jit(run, donate_argnums=(1, 5) if donate else ())
 

@@ -78,6 +78,37 @@ def residual_fitting_loss(
     return jnp.mean(losses)
 
 
+def ledger_fitting_loss(
+    g: Callable, s: jnp.ndarray, eps: jnp.ndarray, z: Pytree, dz: Pytree,
+    R: Pytree
+) -> jnp.ndarray:
+    """The serving-ledger form of ``residual_fitting_loss``: same Eq. 6
+    target, but over a batch of captured residual SAMPLES instead of a
+    dense ground-truth trajectory.
+
+    The online refinery (launch/refinery.py) records per-request
+    ``(s_i, eps_i, z_i, dz_i, R_i)`` rows at serve time, where ``R_i`` is
+    the local truncation residual against a finer reference step — so
+    fitting needs neither the vector field nor a trajectory here:
+
+        ell = (1/N) sum_i || R_i - g(eps_i, s_i, z_i, dz_i) ||_2
+
+    ``s``/``eps`` are (N,) rows; ``z``/``dz``/``R`` are pytrees whose
+    leaves carry a leading sample axis. ``R``/``dz`` are data (captured
+    under stop_gradient semantics by construction); only g's parameters
+    see gradients."""
+    R = jax.lax.stop_gradient(R)
+    dz = jax.lax.stop_gradient(dz)
+    z = jax.lax.stop_gradient(z)
+
+    def per_i(si, epsi, zi, dzi, Ri):
+        pred = g(epsi, si, zi, dzi)
+        return _tree_l2(_tree_sub(Ri, pred))
+
+    losses = jax.vmap(per_i)(s, eps, z, dz, R)
+    return jnp.mean(losses)
+
+
 def trajectory_fitting_loss(
     hs: Integrator, f: VectorField, traj: Pytree, grid: FixedGrid
 ) -> jnp.ndarray:

@@ -64,6 +64,25 @@ def make_integrator(base: str | Tableau, g_apply: GApply = None, g_params=None,
     return Integrator(tableau=tab, g=g, fused=fused)
 
 
+def make_fit_step(loss_fn: Callable, opt: Optimizer, grad_clip: float):
+    """The one jitted optimizer step every g-fitting loop shares:
+    ``fit_step(gp, opt_state, step, *batch) -> (gp, opt_state, loss)``
+    running value_and_grad -> global-norm clip -> update -> apply.
+    ``train_hypersolver`` (offline) and the online refinery
+    (launch/refinery.py) both build their loops on this, so the two
+    training paths cannot drift on optimizer mechanics."""
+
+    @jax.jit
+    def fit_step(gp, opt_state, step, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(gp, *batch)
+        grads, _ = clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, gp, step)
+        gp = apply_updates(gp, updates)
+        return gp, opt_state, loss
+
+    return fit_step
+
+
 def train_hypersolver(
     node: NeuralODE,
     model_params: Any,
@@ -101,13 +120,7 @@ def train_hypersolver(
             trajectory_weight=cfg.trajectory_weight,
         )
 
-    @jax.jit
-    def fit_step(gp, opt_state, step, x, traj):
-        loss, grads = jax.value_and_grad(loss_fn)(gp, x, traj)
-        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
-        updates, opt_state = opt.update(grads, opt_state, gp, step)
-        gp = apply_updates(gp, updates)
-        return gp, opt_state, loss
+    fit_step = make_fit_step(loss_fn, opt, cfg.grad_clip)
 
     losses = []
     x = next(batches)

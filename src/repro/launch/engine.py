@@ -101,27 +101,104 @@ class DepthModel:
     ``embed(x)`` lifts a request batch to the ODE state z0; ``field_of(x)``
     closes the vector field over any conditioning; ``readout(x, zT)`` maps
     the terminal state to outputs (logits). ``integ`` is the serving
-    Integrator (base tableau + optional correction g)."""
+    Integrator (base tableau + optional correction g).
+
+    Two ways to carry a hypersolver correction:
+
+    * **closure** — ``integ.g`` closes over its parameters. Zero extra
+      plumbing, but the params are constants of every jit cell: swapping
+      them forces a retrace of every compiled probe/segment/solve.
+    * **parametric** — ``g_apply(gp, eps, s, z, dz)`` plus an initial
+      ``g_params`` pytree. The serving loops then thread ``gp`` through
+      their jit cells as a TRACED, non-donated input, so replacing it
+      with a pytree of identical treedef/shapes/dtypes
+      (``hot_swap_g``) reuses every compilation — the params-are-inputs
+      invariant the online refinery's no-retrace hot-swap rests on
+      (launch/refinery.py; docs/architecture.md "the refinery layer").
+      ``integ.g`` must be None on this path."""
 
     embed: Callable[[Any], Any]
     field_of: Callable[[Any], Callable]
     readout: Callable[[Any, Any], Any]
     integ: Integrator
     span: Tuple[float, float] = (0.0, 1.0)
+    g_apply: Optional[Callable] = None   # g_apply(gp, eps, s, z, dz)
+    g_params: Any = None                 # initial swappable params
+
+
+def bound_integrator(model: DepthModel, gp=None) -> Integrator:
+    """``model.integ`` with the parametric correction bound over ``gp``
+    (defaulting to the model's initial params). Used wherever an
+    Integrator-with-g is needed OUTSIDE a serving jit cell — controller
+    policy checks, shadow scoring, offline evaluation. Inside the cells
+    the loops bind g themselves so ``gp`` stays a traced operand."""
+    if model.g_apply is None:
+        return model.integ
+    ga = model.g_apply
+    if gp is None:
+        gp = model.g_params
+    return dataclasses.replace(
+        model.integ, g=lambda e, s, z, dz: ga(gp, e, s, z, dz))
+
+
+def validate_g_swap(current, new) -> None:
+    """Refuse a hot-swap that would retrace: the incoming params must
+    match the resident pytree leaf for leaf (treedef, shapes, dtypes) —
+    the exact condition under which jit reuses the compiled cells that
+    took ``current`` as an input. Shared by MultiRateEngine.hot_swap_g
+    and InflightScheduler.hot_swap_g."""
+    t_cur, d_cur = jax.tree_util.tree_flatten(current)
+    t_new, d_new = jax.tree_util.tree_flatten(new)
+    if d_cur != d_new:
+        raise ValueError(
+            f"hot_swap_g: params treedef mismatch ({d_new} vs resident "
+            f"{d_cur}) — a swap must preserve the pytree structure or "
+            "every serving cell would retrace")
+    for i, (c, n) in enumerate(zip(t_cur, t_new)):
+        cs, cd = jnp.shape(c), jnp.asarray(c).dtype
+        ns, nd = jnp.shape(n), jnp.asarray(n).dtype
+        if cs != ns or cd != nd:
+            raise ValueError(
+                f"hot_swap_g: leaf {i} is {ns}/{nd}, resident is "
+                f"{cs}/{cd} — shapes and dtypes must match exactly "
+                "(the no-retrace contract)")
 
 
 def lm_depth_model(params, cfg: ArchConfig, solver: str = "euler",
-                   g_params: Any = None, fused: bool = False) -> DepthModel:
-    """The unified LM's depth ODE (models/cdepth.py) as a servable model."""
-    from repro.models.cdepth import apply_tail, depth_field
+                   g_params: Any = None, fused: bool = False, *,
+                   refinable: bool = False, rank: int = 32) -> DepthModel:
+    """The unified LM's depth ODE (models/cdepth.py) as a servable model.
+
+    ``refinable=True`` carries the correction on the PARAMETRIC path
+    (``g_apply``/``g_params`` as traced cell inputs) instead of baking
+    it into ``integ.g`` — required for the online refinery's no-retrace
+    hot-swap. Without a trained ``g_params`` it starts from a fresh
+    zero-readout init (g == 0 exactly, pure base solver) that the
+    refinery then fits from live traffic."""
+    from repro.models.cdepth import apply_tail, depth_field, lm_g_apply
     from repro.models.lm import _embed
 
     f = depth_field(params, cfg)
+    kw = {}
+    if refinable:
+        base = solver[len("hyper_"):] if solver.startswith("hyper_") \
+            else solver
+        if g_params is None:
+            g_params = lm_g_init(jax.random.PRNGKey(0), cfg, rank=rank,
+                                 param_dtype=jnp.float32)
+        integ = lm_integrator(base, None, fused=fused)
+        kw = dict(
+            g_apply=lambda gp, eps, s, z, dz:
+                lm_g_apply(gp, eps, s, None, z, dz),
+            g_params=g_params)
+    else:
+        integ = lm_integrator(solver, g_params, fused=fused)
     return DepthModel(
         embed=lambda toks: _embed(params, cfg, toks),
         field_of=lambda toks: f,
         readout=lambda toks, h: apply_tail(params, cfg, h),
-        integ=lm_integrator(solver, g_params, fused=fused),
+        integ=integ,
+        **kw,
     )
 
 
@@ -258,7 +335,13 @@ def prepare_model(model: DepthModel, ecfg: "EngineConfig") -> DepthModel:
     if ecfg.fused and not model.integ.fused:
         model = dataclasses.replace(
             model, integ=dataclasses.replace(model.integ, fused=True))
-    if ecfg.solver.startswith("hyper_") and model.integ.g is None:
+    if model.g_apply is not None and model.integ.g is not None:
+        raise ValueError(
+            "DepthModel carries BOTH a closure correction (integ.g) and "
+            "a parametric one (g_apply); pick one — a cell binding both "
+            "would apply g twice")
+    if ecfg.solver.startswith("hyper_") and model.integ.g is None \
+            and model.g_apply is None:
         raise ValueError(
             f"solver {ecfg.solver!r} needs a correction: build the "
             "DepthModel with g_params (serve CLI: --g-ckpt)")
@@ -372,7 +455,7 @@ class MultiRateEngine:
     def __init__(self, model: DepthModel, engine_cfg: EngineConfig,
                  oracle=None, *, queue_cap: Optional[int] = None,
                  overload_policy: str = "shed", retry=None,
-                 fault_injector=None):
+                 fault_injector=None, ledger=None):
         from repro.distributed.fault import RetryPolicy
         from repro.launch.oracle import SequentialEvalOracle
         if overload_policy not in ("shed", "degrade", "block"):
@@ -383,7 +466,17 @@ class MultiRateEngine:
                              "(a zero-width queue can never admit)")
         self.model = prepare_model(model, engine_cfg)
         self.ecfg = engine_cfg
-        self.controller = make_controller(self.model.integ, self.ecfg)
+        # controller policy decides off the BOUND integrator (a parametric
+        # g counts as a correction for controller="auto"); the cells
+        # re-bind g over the traced gp operand themselves
+        self.controller = make_controller(
+            bound_integrator(self.model), self.ecfg)
+        # hot-swappable correction params: host-held, passed into every
+        # parametric jit cell at CALL time — hot_swap_g replaces them
+        # between drains with zero retraces (validate_g_swap)
+        self.g_params = None if self.model.g_apply is None else \
+            jax.tree_util.tree_map(jnp.asarray, self.model.g_params)
+        self.ledger = ledger   # optional ResidualLedger (launch/refinery)
         self.oracle = oracle or SequentialEvalOracle()
         self.queue_cap = queue_cap
         self.overload_policy = overload_policy
@@ -395,6 +488,7 @@ class MultiRateEngine:
         self._nfe_extra: Dict[int, int] = {}   # failed attempts' NFE per uid
         self._probe_fns: Dict[Tuple, Any] = {}
         self._solve_fns: Dict[Tuple, Any] = {}
+        self._embed_fns: Dict[Tuple, Any] = {}
         self.last_report = StepReport()
 
     # ---------------------------------------------------------- policy ----
@@ -418,7 +512,8 @@ class MultiRateEngine:
         """Probe a request batch without serving it: returns (raw per-
         sample K before bucket snapping, per-sample error estimate)."""
         xs = np.asarray(xs)
-        Ks, errs, _, _ = self._probe_fn(xs.shape[1:])(jnp.asarray(xs))
+        Ks, errs, _, _ = self._probe_fn(xs.shape[1:])(
+            jnp.asarray(xs), *self._g_args())
         return np.asarray(Ks), np.asarray(errs)
 
     # ----------------------------------------------------------- queue ----
@@ -463,40 +558,81 @@ class MultiRateEngine:
         return len(self._queue) + len(self._shed)
 
     # ------------------------------------------------------- jit cells ----
+    def _g_args(self) -> Tuple:
+        """The trailing cell operands for the hot-swappable correction:
+        ``(g_params,)`` on a parametric model, ``()`` otherwise. Read at
+        CALL time so a hot_swap_g lands on the very next drain."""
+        return () if self.model.g_apply is None else (self.g_params,)
+
     def _probe_fn(self, shape):
         if shape not in self._probe_fns:
             m, ctrl = self.model, self.controller
+            parametric = m.g_apply is not None
 
             @jax.jit
-            def probe(x):
+            def probe(x, *gps):
+                # parametric g rides as a traced operand (gps = (gp,)),
+                # so swapped params reuse this compilation
+                integ = bound_integrator(m, gps[0]) if parametric \
+                    else m.integ
                 z0 = m.embed(x)
-                p = ctrl.select(m.integ, m.field_of(x), z0, m.span)
+                p = ctrl.select(integ, m.field_of(x), z0, m.span)
                 return p.K, p.err, z0, p.dz0
 
             self._probe_fns[shape] = probe
         return self._probe_fns[shape]
 
+    def _embed_fn(self, shape):
+        """Embed-only cell for the ledger-capture path under a fixed
+        controller (no probe, so no z0 to reuse). Capture-only state:
+        never fed to the solve, never priced by the oracle."""
+        if shape not in self._embed_fns:
+            self._embed_fns[shape] = jax.jit(self.model.embed)
+        return self._embed_fns[shape]
+
     def _solve_fn(self, shape, k_max: int):
         key = (shape, k_max)
         if key not in self._solve_fns:
             m = self.model
+            parametric = m.g_apply is not None
 
             @jax.jit
-            def solve(x, z0, dz0, Ks):
+            def solve(x, z0, dz0, Ks, *gps):
                 # z0/dz0 come from the probe cell (embed + first stage are
                 # not recomputed); the fixed path passes z0=None and
                 # embeds here. Ks is a TRACED (B,) row: sample i runs its
                 # own eps_i = span / Ks[i] mesh and freezes after Ks[i]
                 # steps, so one (shape, k_max) compilation serves every
                 # bucket mix and every step size the controller emits.
+                # gps, when present, is the hot-swappable correction
+                # params pytree — traced, so swaps never retrace.
+                integ = bound_integrator(m, gps[0]) if parametric \
+                    else m.integ
                 if z0 is None:
                     z0 = m.embed(x)
-                zT = m.integ.solve_multirate(
+                zT = integ.solve_multirate(
                     m.field_of(x), z0, m.span, Ks, k_max, first_stage=dz0)
                 return m.readout(x, zT)
 
             self._solve_fns[key] = solve
         return self._solve_fns[key]
+
+    # --------------------------------------------------------- hot swap ----
+    def hot_swap_g(self, gp):
+        """Install new correction params between drains: every cached
+        probe/solve cell takes them as a traced input, so the swap
+        compiles NOTHING and the next ``step()`` serves with the new g.
+        Returns the previous params (the refinery's rollback handle).
+        Raises ValueError if the incoming pytree would retrace."""
+        if self.model.g_apply is None:
+            raise ValueError(
+                "hot_swap_g on a non-parametric model: build the "
+                "DepthModel with g_apply/g_params (params-are-inputs) "
+                "to make the correction swappable")
+        gp = jax.tree_util.tree_map(jnp.asarray, gp)
+        validate_g_swap(self.g_params, gp)
+        old, self.g_params = self.g_params, gp
+        return old
 
     # ------------------------------------------------------------ serve ----
     def step(self, now: float = 0.0) -> List[Completed]:
@@ -556,7 +692,7 @@ class MultiRateEngine:
                 z0 = dz0 = None
             else:
                 Ks_dev, err_dev, z0, dz0 = self._probe_fn(shape)(
-                    jnp.asarray(xs))
+                    jnp.asarray(xs), *self._g_args())
                 Ks_raw = np.asarray(Ks_dev)
                 errs = np.asarray(err_dev)
                 probe_nonfinite += screen_probe_errors(errs)
@@ -578,6 +714,26 @@ class MultiRateEngine:
             floors = np.asarray([r.K_floor for r in reqs], np.int32)
             Ks = np.maximum(Ks, floors)
 
+            if self.ledger is not None:
+                # residual-ledger capture (launch/refinery.py): one extra
+                # readout per drain, computed from the probe states the
+                # cells already materialized at the eps each request will
+                # actually integrate at (the fixed path has no probe, so
+                # capture embeds its own copy). Rows with a non-finite
+                # probe (quarantine-bound) are excluded; capture reads
+                # state, never mutates it, and is never priced by the
+                # cost oracle — so capture-enabled completions stay
+                # bitwise identical to capture-disabled ones.
+                span = self.model.span
+                z_cap = z0 if z0 is not None else \
+                    self._embed_fn(shape)(jnp.asarray(xs))
+                self.ledger.capture(
+                    jnp.asarray(xs), z_cap,
+                    np.full(len(reqs), span[0], np.float32),
+                    ((span[1] - span[0])
+                     / Ks.astype(np.float64)).astype(np.float32),
+                    keep=np.isfinite(errs))
+
             # mixed-K packing: sort by K so batches stay as K-pure as the
             # traffic allows (bucket purity bounds masked-step waste), then
             # fill batches of <= max_batch straight through — a batch mixing
@@ -598,7 +754,8 @@ class MultiRateEngine:
                 outputs = np.asarray(
                     self._solve_fn(shape, k_max)(
                         jnp.asarray(xs[sel]), take(z0, sel),
-                        take(dz0, sel), jnp.asarray(Ks[sel], jnp.int32)))
+                        take(dz0, sel), jnp.asarray(Ks[sel], jnp.int32),
+                        *self._g_args()))
                 cost += self.oracle.solve_cost(shape, k_max, len(sel),
                                                stages)
                 useful += int(Ks[sel].sum())

@@ -105,13 +105,17 @@ def sharded_segment(integ, field_of, xs, carry, seg, *, mesh, s0=0.0,
 
 
 def sharded_segment_cell(integ, field_of, seg, *, mesh, s0=0.0,
-                         slot_axis: str = "data", donate: bool = True):
+                         slot_axis: str = "data", donate: bool = True,
+                         g_apply=None):
     """The donated jit compilation of ``sharded_segment``: one
     ``(xs, z, k, Ks, eps, fs) -> (z', fs', meta)`` cell per
     ``(shape, seg, mesh)`` with the pool-sized carry buffers (z, fs)
     donated, exactly like the single-device ``Integrator.segment_cell``
     — sharding changes which device owns which slot rows, never the
     donation contract or the stacked ``[k'; finished]`` retire meta. The
-    serving loop (launch/scheduler.py) calls the two interchangeably."""
+    serving loop (launch/scheduler.py) calls the two interchangeably.
+    ``g_apply`` appends the hot-swappable correction-params operand
+    (replicated across the mesh), exactly as on the single-device cell."""
     return integ.segment_cell(field_of, seg, s0=s0, mesh=mesh,
-                              slot_axis=slot_axis, donate=donate)
+                              slot_axis=slot_axis, donate=donate,
+                              g_apply=g_apply)

@@ -96,9 +96,9 @@ from repro.core.controllers import FixedController
 from repro.core.integrate import SegmentCarry
 from repro.distributed.fault import FaultInjector, RetryPolicy
 from repro.launch.engine import (
-    STATUSES, DepthModel, EngineConfig, QueueFull, Request, make_controller,
-    next_bucket_above, prepare_model, probe_net_nfe, screen_probe_errors,
-    snap_to_buckets,
+    STATUSES, DepthModel, EngineConfig, QueueFull, Request,
+    bound_integrator, make_controller, next_bucket_above, prepare_model,
+    probe_net_nfe, screen_probe_errors, snap_to_buckets, validate_g_swap,
 )
 from repro.launch.oracle import CostOracle, SequentialEvalOracle
 
@@ -253,10 +253,17 @@ class _SlotPool:
         s0 = m.span[0]
 
         if self._probe_fn is None:
+            parametric = m.g_apply is not None
+
             @jax.jit
-            def probe(xs):
+            def probe(xs, *gps):
+                # on a parametric model the correction params ride as a
+                # traced operand (gps = (gp,)) — the residual controller
+                # consumes g in the probe, so the probe cell must be
+                # swap-stable too (no retrace on hot_swap_g)
+                ig = bound_integrator(m, gps[0]) if parametric else integ
                 z0 = m.embed(xs)
-                p = ctrl.select(integ, m.field_of(xs), z0, m.span)
+                p = ctrl.select(ig, m.field_of(xs), z0, m.span)
                 return p.K, p.err, z0, p.dz0
 
             @jax.jit
@@ -270,17 +277,22 @@ class _SlotPool:
             # shard over the mesh's slot axis and the depth scan stays
             # local per shard; either way this is ONE
             # (shape, seg[, mesh]) jit cell — one fused-kernel trace —
-            # across every refill pattern.
+            # across every refill pattern. A parametric g appends its
+            # params as a trailing traced (non-donated) operand: the
+            # params-are-inputs invariant that makes hot_swap_g free.
             mesh = self.sched.mesh
             donate = self.sched.donate
+            g_apply = m.g_apply
             if mesh is None:
                 segment = integ.segment_cell(m.field_of, seg, s0=s0,
-                                             donate=donate)
+                                             donate=donate,
+                                             g_apply=g_apply)
             else:
                 from repro.launch.mesh import sharded_segment_cell
                 segment = sharded_segment_cell(
                     integ, m.field_of, seg, mesh=mesh, s0=s0,
-                    slot_axis=self.sched.slot_axis, donate=donate)
+                    slot_axis=self.sched.slot_axis, donate=donate,
+                    g_apply=g_apply)
 
             @jax.jit
             def readout(xs, z):
@@ -337,7 +349,8 @@ class _SlotPool:
             errs = np.zeros((len(reqs),), np.float32)
             probe_cost = 0.0
         else:
-            Ks_dev, err_dev, z0, dz0 = probe_fn(jnp.asarray(xs_pad))
+            Ks_dev, err_dev, z0, dz0 = probe_fn(jnp.asarray(xs_pad),
+                                                *sched._g_args())
             Ks_raw = np.asarray(Ks_dev)[:len(reqs)]
             errs = np.asarray(err_dev)[:len(reqs)]
             # the silent k_max clamp in mesh_for_tolerance becomes an
@@ -418,7 +431,8 @@ class _SlotPool:
         occ = self.occupied.copy()
         z, fs, meta = segment_fn(
             self._xs_dev, self.z, jnp.asarray(self.k),
-            jnp.asarray(self.Ks), jnp.asarray(self.eps), self.fs)
+            jnp.asarray(self.Ks), jnp.asarray(self.eps), self.fs,
+            *self.sched._g_args())
         self.z, self.fs = z, fs
         self._pending = _PendingSegment(meta=meta, k_old=k_old, occ=occ,
                                         t_done=t_done)
@@ -456,6 +470,19 @@ class _SlotPool:
         nonfin = occ & (meta[2] != 0)
         finished = occ & fin_row & ~nonfin
         expired = occ & ~nonfin & ~finished & (self.deadline < p.t_done)
+
+        if sched.ledger is not None:
+            # residual-ledger capture (launch/refinery.py): interior,
+            # healthy rows only — quarantined and deadline-evicted rows
+            # are excluded (the STATUSES gate), finished rows sit at the
+            # span end where no further step starts. ONE extra readout
+            # per retire, rate-gated inside the ledger, never priced by
+            # the cost oracle, and purely a READ of the resident state
+            # (enqueued before the next donating launch) — so capture
+            # on/off completions stay uid-for-uid bitwise identical.
+            live = occ & ~nonfin & ~fin_row & ~expired \
+                & (self.k < self.Ks)
+            sched.ledger.capture_pool(self, np.flatnonzero(live))
 
         idx: List[int] = [int(i) for i in np.flatnonzero(finished)]
         status = ["ok" if self.attempts[i] == 0 else "retried"
@@ -622,7 +649,8 @@ class InflightScheduler:
                  overload_policy: str = "shed",
                  deadline: Optional[float] = None,
                  retry: Optional[RetryPolicy] = None,
-                 fault_injector: Optional[FaultInjector] = None):
+                 fault_injector: Optional[FaultInjector] = None,
+                 ledger=None):
         engine_cfg = engine_cfg or EngineConfig()
         if overload_policy not in ("shed", "degrade", "block"):
             raise ValueError(
@@ -652,7 +680,17 @@ class InflightScheduler:
         self.ecfg = engine_cfg
         self.slots = int(slots)
         self.seg = int(seg)
-        self.controller = make_controller(model.integ, engine_cfg)
+        # controller policy decides off the BOUND integrator (a
+        # parametric g counts as a correction for controller="auto");
+        # the pool cells re-bind g over the traced gp operand themselves
+        self.controller = make_controller(bound_integrator(model),
+                                          engine_cfg)
+        # hot-swappable correction params: host-held, appended to every
+        # parametric probe/segment cell call — hot_swap_g replaces them
+        # between segments with zero retraces and no pool drain
+        self.g_params = None if model.g_apply is None else \
+            jax.tree_util.tree_map(jnp.asarray, model.g_params)
+        self.ledger = ledger   # optional ResidualLedger (launch/refinery)
         self.overlap = bool(overlap)
         # Donating the carry buffers halves pool memory on accelerators,
         # where XLA aliases them in place without giving up async
@@ -675,6 +713,12 @@ class InflightScheduler:
         self.total_useful_steps = 0
         self.total_slot_steps = 0
         self.total_occupied_steps = 0
+        # cumulative hardening counters (per-tick twins live in
+        # TickReport): what the serve CLI's live progress line reports
+        self.total_quarantined = 0
+        self.total_deadline_evicted = 0
+        self.total_requeued = 0
+        self.total_shed = 0
         self.last_report = TickReport()
         self.queue_cap = None if queue_cap is None else int(queue_cap)
         self.overload_policy = overload_policy
@@ -694,6 +738,33 @@ class InflightScheduler:
         """Per-request probe cost net of the reused first stage (same
         accounting as MultiRateEngine.probe_nfe)."""
         return probe_net_nfe(self.controller)
+
+    def _g_args(self) -> Tuple:
+        """Trailing cell operands for the hot-swappable correction:
+        ``(g_params,)`` on a parametric model, ``()`` otherwise. Read at
+        CALL time, so a hot_swap_g is visible from the very next
+        launched segment."""
+        return () if self.model.g_apply is None else (self.g_params,)
+
+    def hot_swap_g(self, gp):
+        """Install new correction params BETWEEN segments: the pool
+        cells take them as traced inputs (same treedef/shapes/dtypes
+        enforced by ``validate_g_swap``), so the swap compiles nothing,
+        drains nothing, and every segment launched after this call —
+        including refills of slots admitted under the old params —
+        integrates with the new g. Under ``overlap=True`` the one
+        in-flight segment finishes on the old params (it was dispatched
+        with them); the swap is visible from the next launch. Returns
+        the previous params — the refinery's rollback handle."""
+        if self.model.g_apply is None:
+            raise ValueError(
+                "hot_swap_g on a non-parametric model: build the "
+                "DepthModel with g_apply/g_params (params-are-inputs) "
+                "to make the correction swappable")
+        gp = jax.tree_util.tree_map(jnp.asarray, gp)
+        validate_g_swap(self.g_params, gp)
+        old, self.g_params = self.g_params, gp
+        return old
 
     def can_submit(self) -> bool:
         """False exactly when the next ``submit`` would raise QueueFull:
@@ -869,6 +940,10 @@ class InflightScheduler:
         self.total_useful_steps += useful
         self.total_slot_steps += total
         self.total_occupied_steps += occupied
+        self.total_quarantined += quarantined
+        self.total_deadline_evicted += deadline_evicted
+        self.total_requeued += requeued
+        self.total_shed += shed
         self.last_report = TickReport(
             cost=cost, probe_cost=probe_cost, admitted=admitted,
             retired=retired, useful_steps=useful, total_steps=total,

@@ -39,11 +39,24 @@ over-cap submit does (shed terminally / degrade one bucket coarser /
 block the caller). Diverged solves are quarantined on device and
 retried once at a finer bucket before returning best-effort.
 
+--refine attaches the online refinery (launch/refinery.py): serving
+captures per-segment residual samples into a bounded ledger
+(--capture-rate, --ledger-cap), a background trainer fits a candidate
+correction between scheduler ticks (--refine-steps per tick,
+checkpointed to --refine-dir), and every --shadow-every candidate steps
+a shadow scorer replays a held-out trace and hot-swaps the candidate in
+ONLY on non-regression — no retrace, no pool drain. --progress-every N
+prints a live line every N ticks (hardening counters + refinery state).
+SIGTERM/SIGINT drain gracefully: admission stops, in-flight slots flush,
+the ledger (--ledger-out) and any pending candidate checkpoint land on
+disk before exit.
+
 Full flag reference with worked examples: docs/serving.md.
 """
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 import jax
@@ -150,6 +163,38 @@ def main():
                          "save the trace here (inspect with TensorBoard/"
                          "Perfetto) — wall-clock regressions become "
                          "diagnosable from the saved timeline")
+    ap.add_argument("--refine", action="store_true",
+                    help="attach the online refinery (--inflight only): "
+                         "capture serving-time residuals into a ledger, "
+                         "fit a candidate correction between scheduler "
+                         "ticks, shadow-score it on a held-out trace and "
+                         "hot-swap it in only on non-regression "
+                         "(launch/refinery.py)")
+    ap.add_argument("--refine-dir", default=None,
+                    help="CheckpointManager directory for async candidate "
+                         "checkpoints (--refine); restorable via --g-ckpt "
+                         "on a later run")
+    ap.add_argument("--capture-rate", type=float, default=1.0,
+                    help="fraction of capture events the residual ledger "
+                         "keeps (--refine); 0 disables capture entirely")
+    ap.add_argument("--ledger-cap", type=int, default=512,
+                    help="residual-ledger reservoir capacity in samples "
+                         "(--refine)")
+    ap.add_argument("--refine-steps", type=int, default=2,
+                    help="candidate fit steps per scheduler tick "
+                         "(--refine): the cooperative training budget "
+                         "interleaved between segments")
+    ap.add_argument("--shadow-every", type=int, default=50,
+                    help="candidate steps between shadow-gate evaluations "
+                         "(--refine)")
+    ap.add_argument("--ledger-out", default=None,
+                    help="flush the residual ledger to this .npz on exit "
+                         "or graceful drain (--refine)")
+    ap.add_argument("--progress-every", type=int, default=0,
+                    help="print a live progress line every N scheduler "
+                         "ticks (--inflight): hardening counters "
+                         "(quarantined/deadline/requeued/shed) plus "
+                         "refinery state under --refine; 0 = off")
     args = ap.parse_args()
     if args.mesh and not args.inflight:
         # same policy as --g-ckpt: a silently ignored flag would let a
@@ -173,6 +218,27 @@ def main():
         raise SystemExit(f"--overload-policy {args.overload_policy} is "
                          "meaningless without --queue-cap (an unbounded "
                          "queue never overloads)")
+    if args.refine and not args.inflight:
+        # same policy as --mesh/--overlap: the refinery trains BETWEEN
+        # scheduler ticks; the drain engine has no tick to interleave
+        raise SystemExit("--refine interleaves with the in-flight "
+                         "scheduler's ticks; pass --inflight with it")
+    if args.refine and args.solver == "discrete":
+        raise SystemExit("--refine fits a hypersolver correction; pass a "
+                         "continuous --solver (e.g. euler/hyper_euler)")
+    if not args.refine and (
+            args.refine_dir or args.ledger_out
+            or args.capture_rate != 1.0 or args.ledger_cap != 512
+            or args.refine_steps != 2 or args.shadow_every != 50):
+        raise SystemExit("--refine-dir/--capture-rate/--ledger-cap/"
+                         "--refine-steps/--shadow-every/--ledger-out "
+                         "tune the online refinery; pass --refine with "
+                         "them (a silently ignored knob would mislabel "
+                         "the run)")
+    if args.progress_every and not args.inflight:
+        raise SystemExit("--progress-every reports the in-flight "
+                         "scheduler's tick counters; pass --inflight "
+                         "with it")
 
     cfg = get(args.arch)
     if args.reduced:
@@ -197,9 +263,12 @@ def main():
     g_params = None
     if args.g_ckpt:
         g_params = load_g_params(args.g_ckpt, cfg, rank=args.g_rank)
-    if args.solver.startswith("hyper_") and g_params is None:
+    if args.solver.startswith("hyper_") and g_params is None \
+            and not args.refine:
         raise SystemExit(f"--solver {args.solver} needs --g-ckpt "
-                         "(a trained correction checkpoint)")
+                         "(a trained correction checkpoint) — or "
+                         "--refine to fit one from live traffic, "
+                         "starting at a zero correction")
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
     K_fixed = args.nfe or max(1, n_groups // 2)
@@ -213,7 +282,8 @@ def main():
         fused=args.fused,
     )
     model = lm_depth_model(params, cfg, solver=args.solver,
-                           g_params=g_params, fused=args.fused)
+                           g_params=g_params, fused=args.fused,
+                           refinable=args.refine, rank=args.g_rank)
     # the roofline clock prices the SERVED arch at the prompt's context;
     # reported latency/wait switch to its unit (device-us) with it
     from repro.launch.oracle import make_oracle
@@ -225,7 +295,8 @@ def main():
     if args.inflight:
         from repro.launch.scheduler import InflightScheduler
         from repro.launch.workload import (
-            bursty_trace, latency_stats, poisson_trace, replay_scheduler,
+            Arrival, bursty_trace, latency_stats, poisson_trace,
+            replay_scheduler,
         )
 
         if args.arrival_trace != "none" and args.arrival_rate <= 0:
@@ -235,36 +306,121 @@ def main():
         if args.mesh:
             from repro.launch.mesh import make_serving_mesh
             mesh = make_serving_mesh(args.mesh)
+
+        ledger = refinery = None
+        if args.refine:
+            from repro.launch.refinery import (
+                Refinery, RefineryConfig, ResidualLedger,
+            )
+            ledger = ResidualLedger(model, capacity=args.ledger_cap,
+                                    capture_rate=args.capture_rate,
+                                    seed=args.seed)
         sched = InflightScheduler(model, ecfg, slots=args.slots,
                                   seg=args.seg, mesh=mesh, oracle=oracle,
                                   overlap=args.overlap,
                                   deadline=args.deadline or None,
                                   queue_cap=args.queue_cap or None,
-                                  overload_policy=args.overload_policy)
+                                  overload_policy=args.overload_policy,
+                                  ledger=ledger)
+        if args.refine:
+            # held-out seeded prompts the live trace never serves: the
+            # shadow gate's replay set
+            shadow = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(args.seed + 1000),
+                (max(2, min(args.max_batch, 4)), args.prompt_len),
+                0, cfg.vocab))
+            refinery = Refinery(
+                model, ledger,
+                RefineryConfig(steps_per_tick=args.refine_steps,
+                               shadow_every=args.shadow_every,
+                               min_fill=min(32, args.ledger_cap),
+                               ref_K=max(n_groups, max(buckets)),
+                               seed=args.seed),
+                ecfg=ecfg, shadow_xs=shadow, ckpt_dir=args.refine_dir)
+
+        # graceful drain: first SIGTERM/SIGINT stops admission and lets
+        # the in-flight slots flush; the ledger + any pending candidate
+        # checkpoint land on disk below before the process exits
+        draining = [False]
+
+        def _on_signal(signum, frame):
+            if draining[0]:
+                raise KeyboardInterrupt  # second signal: give up the drain
+            draining[0] = True
+            print(f"[serve] caught signal {signum}: admission stopped, "
+                  "draining in-flight slots")
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            signal.signal(sig, _on_signal)
+
+        ticks = [0]
+
+        def on_tick(s):
+            ticks[0] += 1
+            if refinery is not None:
+                refinery.tick([s])
+            if args.progress_every \
+                    and ticks[0] % args.progress_every == 0:
+                parts = [f"t={s.now:.1f}", f"ticks={s.ticks}",
+                         f"inflight={len(s)}",
+                         f"quarantined={s.total_quarantined}",
+                         f"deadline_evicted={s.total_deadline_evicted}",
+                         f"requeued={s.total_requeued}",
+                         f"shed={s.total_shed}"]
+                if refinery is not None:
+                    st = refinery.status()
+                    parts += [
+                        f"ledger={st['ledger_fill']}/{ledger.capacity}",
+                        f"cand_step={st['candidate_step']}",
+                        f"promotions={st['promotions']}",
+                        f"last_promotion={st['last_promotion']}"]
+                print("[progress] " + " ".join(parts), flush=True)
+
         xs = np.asarray(prompt)
         t0 = time.time()
         with _profiled(args.profile_dir):
-            if args.arrival_trace == "none":
+            if args.arrival_trace == "none" and refinery is None \
+                    and not args.progress_every:
                 results = sched.run(xs)
             else:
-                trace = poisson_trace(xs, rate=args.arrival_rate,
-                                      seed=args.seed) \
-                    if args.arrival_trace == "poisson" else \
-                    bursty_trace(xs, burst=args.slots,
-                                 gap=args.slots / args.arrival_rate,
-                                 seed=args.seed)
-                report = replay_scheduler(sched, trace)
+                if args.arrival_trace == "none":
+                    # batch submit, replayed tick-by-tick so on_tick
+                    # (refinery slice + progress line) still runs
+                    trace = [Arrival(t=0.0, x=row) for row in xs]
+                else:
+                    trace = poisson_trace(xs, rate=args.arrival_rate,
+                                          seed=args.seed) \
+                        if args.arrival_trace == "poisson" else \
+                        bursty_trace(xs, burst=args.slots,
+                                     gap=args.slots / args.arrival_rate,
+                                     seed=args.seed)
+                report = replay_scheduler(
+                    sched, trace, on_tick=on_tick,
+                    should_admit=lambda: not draining[0])
                 # records join back to prompt rows by uid (arrival order)
                 results = sorted(report.records, key=lambda r: r.uid)
-                print(f"[inflight {args.arrival_trace}] "
-                      f"{latency_stats(report)}")
+                if args.arrival_trace != "none":
+                    print(f"[inflight {args.arrival_trace}] "
+                          f"{latency_stats(report)}")
         dt = time.time() - t0
+        if draining[0]:
+            print(f"[serve] drained: {len(results)} completions flushed, "
+                  f"{len(xs) - len(results)} arrivals never admitted")
+        if refinery is not None:
+            refinery.flush()   # pending async candidate checkpoint
+            print(f"[refinery] {refinery.status()}")
+        if ledger is not None and args.ledger_out:
+            n_rows = ledger.flush(args.ledger_out)
+            print(f"[ledger] flushed {n_rows} residual rows -> "
+                  f"{args.ledger_out}")
         # shed/expired requests carry no outputs — agreement is over the
         # requests actually served (their status says why the rest
         # are not)
+        # uid is submission order = prompt-row order, which survives a
+        # partial (drained) run where enumerate order would not
         agree = {r.uid: float(np.mean(np.argmax(r.outputs, -1)
-                                      == full_top[i]))
-                 for i, r in enumerate(results) if r.outputs is not None}
+                                      == full_top[r.uid - 1]))
+                 for r in results if r.outputs is not None}
         nfes = [r.nfe for r in results if r.outputs is not None]
         mode = "multirate" if args.multirate else f"K={K_fixed}"
         print(f"[{args.solver} {mode} inflight slots={args.slots} "

@@ -59,6 +59,33 @@ def heterogeneous_requests(n: int, d: int, *, easy_frac: float = 0.5,
     return xs
 
 
+def drifting_requests(n: int, d: int, *, phases: int = 3, seed: int = 0,
+                      easy_frac0: float = 0.8, easy_frac1: float = 0.2,
+                      hard_loc0: float = 2.0, hard_loc1: float = 3.5,
+                      scale: float = 0.05) -> np.ndarray:
+    """A NON-stationary difficulty mix: the trace is split into ``phases``
+    contiguous blocks whose easy fraction slides from ``easy_frac0`` to
+    ``easy_frac1`` and whose hard-class location from ``hard_loc0`` to
+    ``hard_loc1``. Early traffic looks nothing like late traffic — the
+    drift the online refinery exists for (an offline-trained g only ever
+    saw phase 0; benchmarks/bench_refinery.py serves this mix and lets
+    the ledger re-fit g on what is actually arriving)."""
+    rng = np.random.RandomState(seed)
+    blocks = []
+    edges = np.linspace(0, n, phases + 1).astype(int)
+    for p in range(phases):
+        m = int(edges[p + 1] - edges[p])
+        if m == 0:
+            continue
+        u = p / max(phases - 1, 1)
+        blocks.append(heterogeneous_requests(
+            m, d,
+            easy_frac=float(easy_frac0 + (easy_frac1 - easy_frac0) * u),
+            hard_loc=float(hard_loc0 + (hard_loc1 - hard_loc0) * u),
+            scale=scale, seed=int(rng.randint(1 << 30)), interleave=True))
+    return np.concatenate(blocks).astype(np.float32)
+
+
 def poisson_trace(xs: np.ndarray, rate: float, *, seed: int = 0,
                   t0: float = 0.0,
                   deadline_slack: Optional[float] = None) -> List[Arrival]:
@@ -226,12 +253,21 @@ def ok_records(report: TraceReport) -> TraceReport:
 
 # ---------------------------------------------------------------- replays ----
 
-def replay_engine(engine, trace: Sequence[Arrival]) -> TraceReport:
+def replay_engine(engine, trace: Sequence[Arrival], *,
+                  on_tick=None, should_admit=None) -> TraceReport:
     """Drive a ``MultiRateEngine`` through an arrival trace with drain
     semantics: whenever the loop turns and work is queued, ``step()``
     serves EVERYTHING queued to completion (new arrivals wait out the
     drain). Request i's service start is the drain start; its completion
-    lands at the drain's per-batch finish offset (engine.StepReport)."""
+    lands at the drain's per-batch finish offset (engine.StepReport).
+
+    ``on_tick(engine)``, if given, runs after every drain step — the
+    cooperative slot the online refinery trains in
+    (``launch/refinery.py::Refinery.tick``); it must not touch the
+    engine's queue or pools (the loops own those). ``should_admit()``
+    returning False stops admission for good: remaining arrivals are
+    dropped unsubmitted, already-queued work drains to completion — the
+    graceful-shutdown contract (serve.py SIGTERM/SIGINT)."""
     trace = sorted(trace, key=lambda a: a.t)
     now = 0.0
     i = 0
@@ -240,6 +276,10 @@ def replay_engine(engine, trace: Sequence[Arrival]) -> TraceReport:
     total_cost = probe_cost = 0.0
     useful = total = 0
     while i < len(trace) or len(engine):
+        if should_admit is not None and not should_admit():
+            i = len(trace)          # drain what's in; admit nothing more
+            if not len(engine):
+                break
         if not len(engine):
             now = max(now, trace[i].t)          # idle-jump to next arrival
         while i < len(trace) and trace[i].t <= now \
@@ -260,6 +300,8 @@ def replay_engine(engine, trace: Sequence[Arrival]) -> TraceReport:
                 uid=c.uid, t_submit=t_submit.pop(c.uid), t_admit=t_drain,
                 t_done=t_drain + rep.finish_offset[c.uid], K=c.K, nfe=c.nfe,
                 outputs=c.outputs, status=c.status))
+        if on_tick is not None:
+            on_tick(engine)
     t0 = trace[0].t if trace else 0.0
     t_end = max((r.t_done for r in records), default=t0)
     # every scanned row of a drain was an admitted request, so the
@@ -272,15 +314,30 @@ def replay_engine(engine, trace: Sequence[Arrival]) -> TraceReport:
                                          "unit", "sequential_evals"))
 
 
-def replay_scheduler(sched, trace: Sequence[Arrival]) -> TraceReport:
+def replay_scheduler(sched, trace: Sequence[Arrival], *,
+                     on_tick=None, should_admit=None) -> TraceReport:
     """Drive an ``InflightScheduler`` through the same arrival trace:
     arrivals are submitted the moment the virtual clock passes them, and
     each ``step()`` admits + advances one segment — requests overlap
-    in-flight instead of waiting out a drain."""
+    in-flight instead of waiting out a drain.
+
+    ``on_tick(sched)``, if given, runs BETWEEN scheduler ticks — after a
+    segment retires, before the next admission. This is where the online
+    refinery trains and (between segments) hot-swaps g
+    (``launch/refinery.py``): cooperative, same thread, never inside the
+    compiled path. It must not submit or retire requests itself.
+    ``should_admit()`` returning False stops admission for good:
+    remaining arrivals are dropped unsubmitted and the in-flight slots
+    flush to completion — the graceful-shutdown contract (serve.py
+    SIGTERM/SIGINT)."""
     trace = sorted(trace, key=lambda a: a.t)
     i = 0
     records: List[RequestRecord] = []
     while i < len(trace) or sched.pending:
+        if should_admit is not None and not should_admit():
+            i = len(trace)          # drain what's in; admit nothing more
+            if not sched.pending:
+                break
         while i < len(trace) and trace[i].t <= sched.now \
                 and sched.can_submit():
             sched.submit(trace[i].x, t=trace[i].t,
@@ -294,6 +351,8 @@ def replay_scheduler(sched, trace: Sequence[Arrival]) -> TraceReport:
                 uid=c.uid, t_submit=c.t_submit, t_admit=c.t_admit,
                 t_done=c.t_done, K=c.K, nfe=c.nfe, outputs=c.outputs,
                 status=c.status))
+        if on_tick is not None:
+            on_tick(sched)
     t0 = trace[0].t if trace else 0.0
     t_end = max((r.t_done for r in records), default=t0)
     return TraceReport(
@@ -340,4 +399,67 @@ def toy_classifier(solver: str = "euler", fused: bool = True, *,
         field_of=field_of,
         readout=lambda x, zT: zT @ jnp.asarray(W),
         integ=Integrator(tableau=get_tableau(base), g=g, fused=fused),
+    )
+
+
+def toy_refinable_classifier(base: str = "euler", fused: bool = True, *,
+                             d: int = 32, n_classes: int = 10,
+                             hidden: int = 8, seed: int = 11):
+    """``toy_classifier``'s PARAMETRIC twin: the same stiff decay field
+    and seeded linear head, but the correction is an element-wise MLP
+    ``g_apply(gp, eps, s, z, dz)`` over features ``[z, dz, s, eps]``
+    whose params ride the serving cells as traced inputs — the model the
+    refinery tests/bench train, shadow-score, and hot-swap.
+
+    The output layer is ZERO-initialized, so fresh params make g vanish
+    exactly: a cold hyper-euler serve of this model is bitwise the base
+    euler serve, and every later improvement is attributable to the
+    ledger fit.
+
+    Unlike ``toy_classifier``, the decay here is ANISOTROPIC (a fixed
+    per-feature stiffness profile scales the row's difficulty): a
+    row-uniform decay would leave the readout argmax invariant to any
+    integration error, and agreement could never distinguish a refined
+    correction from a frozen one."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import Integrator, get_tableau
+    from repro.launch.engine import DepthModel
+
+    W = np.asarray(jax.random.normal(jax.random.PRNGKey(7),
+                                     (d, n_classes)) / np.sqrt(d))
+    w_feat = jnp.asarray(np.linspace(0.4, 1.6, d), jnp.float32)
+
+    def field_of(x):
+        k = jax.nn.softplus(jnp.mean(x, axis=-1, keepdims=True))
+        return lambda s, z: -z * (k * w_feat)
+
+    k1, = jax.random.split(jax.random.PRNGKey(seed), 1)
+    g_params = {
+        "w1": jnp.asarray(jax.random.normal(k1, (4, hidden)) * 0.5),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jnp.zeros((hidden, 1)),
+        "b2": jnp.zeros((1,)),
+    }
+
+    def g_apply(gp, eps, s, z, dz):
+        # broadcast the (possibly per-sample) scalars up to z's shape:
+        # serving cells call with z (B, d) / eps (B,), the ledger loss
+        # vmaps per row with z (d,) / eps scalar — both land here
+        up = lambda a: jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(a, z.dtype),
+                        jnp.shape(a) + (1,) * (z.ndim - jnp.ndim(a))),
+            z.shape)
+        feats = jnp.stack([z, dz, up(s), up(eps)], axis=-1)
+        h = jnp.tanh(feats @ gp["w1"] + gp["b1"])
+        return (h @ gp["w2"])[..., 0] + gp["b2"][0]
+
+    return DepthModel(
+        embed=lambda x: x + 0.0,
+        field_of=field_of,
+        readout=lambda x, zT: zT @ jnp.asarray(W),
+        integ=Integrator(tableau=get_tableau(base), fused=fused),
+        g_apply=g_apply,
+        g_params=g_params,
     )

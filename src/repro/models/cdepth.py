@@ -105,12 +105,15 @@ def lm_g_init(key, cfg: ArchConfig, rank: int = 64, n_fourier: int = 8,
 
 
 def _fourier(s, n: int, dtype):
+    """Fourier depth features; ``s`` may be a scalar (fixed-K serving) or
+    per-sample batched ``(B,)`` (multi-rate meshes and the refinery's
+    residual-capture cell hand every row its own depth)."""
     s = jnp.asarray(s, jnp.float32)
     ks = jnp.arange(1, n + 1, dtype=jnp.float32)
-    feats = jnp.concatenate([jnp.sin(2 * jnp.pi * ks * s),
-                             jnp.cos(2 * jnp.pi * ks * s),
-                             jnp.ones((1,), jnp.float32) * s])
-    return feats.astype(dtype)
+    ang = 2 * jnp.pi * ks * s[..., None]            # (..., n)
+    feats = jnp.concatenate([jnp.sin(ang), jnp.cos(ang), s[..., None]],
+                            axis=-1)                # (..., 2n + 1)
+    return feats.reshape(s.shape + (2 * n + 1,)).astype(dtype)
 
 
 def lm_g_apply(gp, eps, s, x, h, dh):
@@ -119,6 +122,11 @@ def lm_g_apply(gp, eps, s, x, h, dh):
     del eps, x
     nf = (gp["w_s"].shape[0] - 1) // 2  # w_s: (2*n_fourier + 1, rank)
     sf = _fourier(s, nf, h.dtype) @ gp["w_s"].astype(h.dtype)
+    if jnp.ndim(s):
+        # batched depth row: align sf's leading sample axis with h's by
+        # inserting singleton token axes — (B, r) -> (B, 1..., r)
+        sf = jnp.reshape(
+            sf, sf.shape[:-1] + (1,) * (h.ndim - sf.ndim) + sf.shape[-1:])
     pre = (h @ gp["w_h"].astype(h.dtype)
            + dh.astype(h.dtype) @ gp["w_dh"].astype(h.dtype) + sf)
     return (jnp.tanh(pre) @ gp["w_out"].astype(h.dtype)).astype(h.dtype)

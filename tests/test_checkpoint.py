@@ -67,6 +67,51 @@ def test_restore_latest_none(tmp_path):
     assert step is None and state is None
 
 
+def test_save_while_restore_latest_race(tmp_path):
+    """REGRESSION (PR 9): with ``keep=1`` + ``async_save=True``, the
+    async writer's publish+GC could delete the very step a concurrent
+    ``restore_latest`` had just picked, crashing the reader with
+    FileNotFoundError mid-read. The per-directory lock makes publish+GC
+    and pick+read atomic against each other (plus a bounded rescan for
+    cross-process deleters) — a second manager instance on the SAME
+    directory shares the lock, so this hammers writer and reader from
+    two threads and requires zero read failures."""
+    import threading
+
+    cm_w = CheckpointManager(str(tmp_path), keep=1, async_save=True)
+    cm_r = CheckpointManager(str(tmp_path), keep=1)   # shared dir lock
+    t = _tree()
+    like = jax.eval_shape(lambda: t)
+    cm_w.save(0, t)
+    cm_w.wait()
+
+    errors = []
+    seen_steps = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            try:
+                step, state = cm_r.restore_latest(like)
+                assert step is not None and state is not None
+                seen_steps.append(step)
+            except Exception as e:      # noqa: BLE001 — the regression
+                errors.append(e)
+                return
+
+    th = threading.Thread(target=reader)
+    th.start()
+    for s in range(1, 40):
+        cm_w.save(s, _tree(s))
+    cm_w.wait()
+    stop.set()
+    th.join(timeout=60)
+    assert not th.is_alive()
+    assert not errors, errors
+    assert seen_steps and seen_steps == sorted(seen_steps), (
+        "restore_latest went back in time")
+
+
 def test_shape_mismatch_rejected(tmp_path):
     cm = CheckpointManager(str(tmp_path))
     cm.save(1, {"a": jnp.ones((4,))})

@@ -1,0 +1,388 @@
+"""Online refinery (launch/refinery.py): ledger determinism + bounds,
+capture bitwise parity on every serving loop, trainer convergence over
+captured residuals, hot-swap zero-retrace + liveness, the shadow
+promotion gate (promote / reject / rollback), and the graceful-drain
+hooks (``should_admit`` admission stop, ledger flush roundtrip)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.hyper_step.ops import TRACE_COUNTS
+from repro.launch.engine import EngineConfig, MultiRateEngine
+from repro.launch.refinery import Refinery, RefineryConfig, ResidualLedger
+from repro.launch.scheduler import InflightScheduler
+from repro.launch.workload import (
+    drifting_requests, heterogeneous_requests, poisson_trace,
+    replay_engine, replay_scheduler, toy_refinable_classifier,
+)
+
+D = 16
+
+
+def _ecfg(**kw):
+    # fixed K=2 + seg=1 below: every request crosses one interior
+    # segment boundary, so the scheduler's retire hook has healthy
+    # interior rows to capture
+    kw.setdefault("controller", "fixed")
+    kw.setdefault("fixed_K", 2)
+    kw.setdefault("buckets", (2,))
+    return EngineConfig(**kw)
+
+
+def _sched(model, ledger=None, overlap=False, slots=8):
+    return InflightScheduler(model, _ecfg(), slots=slots, seg=1,
+                             overlap=overlap, ledger=ledger)
+
+
+def _fill_ledger(model, **led_kw):
+    led_kw.setdefault("capacity", 256)
+    led_kw.setdefault("seed", 0)
+    led = ResidualLedger(model, **led_kw)
+    sched = _sched(model, ledger=led)
+    xs = heterogeneous_requests(32, D, seed=3)
+    replay_scheduler(sched, poisson_trace(xs, rate=1.0, seed=7))
+    return led
+
+
+# -------------------------------------------------------------- ledger ----
+
+def test_ledger_validation_errors():
+    model = toy_refinable_classifier(d=D)
+    with pytest.raises(ValueError, match="capacity"):
+        ResidualLedger(model, capacity=0)
+    with pytest.raises(ValueError, match="capture_rate"):
+        ResidualLedger(model, capture_rate=1.5)
+    with pytest.raises(ValueError, match="capture_rate"):
+        ResidualLedger(model, capture_rate=-0.1)
+
+
+def test_ledger_reservoir_is_bounded_and_seeded():
+    model = toy_refinable_classifier(d=D)
+    leds = [_fill_ledger(model, capacity=8, seed=5) for _ in range(2)]
+    for led in leds:
+        assert led.fill <= 8 and led.holdout_fill <= 8
+        assert led.seen > 8          # the reservoir actually overflowed
+    # same seed, same traffic -> identical reservoir contents
+    a, b = leds
+    assert a.seen == b.seen
+    for ta, tb in zip(a._samples, b._samples):
+        assert ta[0] == tb[0] and ta[1] == tb[1]
+        for la, lb in zip(jax.tree_util.tree_leaves(ta[2]),
+                          jax.tree_util.tree_leaves(tb[2])):
+            np.testing.assert_array_equal(la, lb)
+
+
+def test_capture_rate_zero_captures_nothing():
+    model = toy_refinable_classifier(d=D)
+    led = _fill_ledger(model, capture_rate=0.0)
+    assert led.fill == 0 and led.seen == 0 and led.captures == 0
+
+
+def test_scheduler_captures_interior_rows_only():
+    """Captured depths are interior mesh points (0 < s < 1): the retire
+    hook reads live rows mid-flight, never admission or finished state.
+    """
+    model = toy_refinable_classifier(d=D)
+    led = _fill_ledger(model)
+    assert led.fill > 0
+    s_vals = np.asarray([t[0] for t in led._samples + led._holdout])
+    assert np.all((s_vals > 0.0) & (s_vals < 1.0)), np.unique(s_vals)
+
+
+def test_engine_captures_under_fixed_controller():
+    """The drain engine has no probe under controller='fixed' — capture
+    must still fire (it embeds its own state copy)."""
+    model = toy_refinable_classifier(d=D)
+    led = ResidualLedger(model, capacity=64, seed=0)
+    eng = MultiRateEngine(model, _ecfg(), ledger=led)
+    eng.run(heterogeneous_requests(16, D, seed=3))
+    assert led.fill > 0
+
+
+def test_capture_parity_bitwise_all_loops():
+    """ACCEPTANCE: capture on (rate=1.0) vs off — completions uid-for-uid
+    bitwise identical on the sync scheduler, the overlap scheduler, and
+    the drain engine (capture only READS resident state and is never
+    priced by the cost oracle)."""
+    from benchmarks.bench_faults import records_bitwise_equal
+    xs = heterogeneous_requests(24, D, seed=11)
+    trace = poisson_trace(xs, rate=0.5, seed=13)
+
+    def pair(mk_loop, replay):
+        m_off, m_on = (toy_refinable_classifier(d=D) for _ in range(2))
+        rep_off = replay(mk_loop(m_off, None), trace)
+        rep_on = replay(
+            mk_loop(m_on, ResidualLedger(m_on, capacity=64, seed=0)),
+            trace)
+        return records_bitwise_equal(rep_off, rep_on)
+
+    assert pair(lambda m, led: _sched(m, ledger=led), replay_scheduler)
+    assert pair(lambda m, led: _sched(m, ledger=led, overlap=True),
+                replay_scheduler)
+    assert pair(lambda m, led: MultiRateEngine(m, _ecfg(), ledger=led),
+                replay_engine)
+
+
+def test_ledger_flush_roundtrip(tmp_path):
+    model = toy_refinable_classifier(d=D)
+    led = _fill_ledger(model)
+    path = os.path.join(str(tmp_path), "ledger.npz")
+    n = led.flush(path)
+    assert n == led.fill + led.holdout_fill
+    data = np.load(path)
+    assert int(data["n_train"]) == led.fill
+    assert data["s"].shape == (n,) and data["eps"].shape == (n,)
+    assert data["z_0"].shape[0] == n and data["R_0"].shape[0] == n
+    # an empty ledger still writes a readable file
+    led2 = ResidualLedger(model, capacity=4, capture_rate=0.0)
+    p2 = os.path.join(str(tmp_path), "empty.npz")
+    assert led2.flush(p2) == 0
+    assert int(np.load(p2)["n_train"]) == 0
+
+
+# ------------------------------------------------------------- trainer ----
+
+def test_trainer_converges_on_captured_residuals():
+    model = toy_refinable_classifier(d=D, hidden=16)
+    led = _fill_ledger(model, capacity=256)
+    refin = Refinery(model, led,
+                     RefineryConfig(steps_per_tick=60, batch_size=32,
+                                    min_fill=8, lr=5e-3, total_steps=600))
+    b = led.sample_batch(64, np.random.RandomState(0))
+    loss0 = float(refin._eval_loss(refin.candidate, b["s"], b["eps"],
+                                   b["z"], b["dz"], b["R"]))
+    for _ in range(10):
+        last = refin.train_tick()
+    assert refin.steps == 600
+    loss1 = float(refin._eval_loss(refin.candidate, b["s"], b["eps"],
+                                   b["z"], b["dz"], b["R"]))
+    assert loss1 < 0.5 * loss0, (loss0, loss1)
+    assert last is not None
+    # holdout residual-norm score drops too (generalizes off-batch)
+    fr = refin.shadow_score(
+        jax.tree_util.tree_map(jnp.asarray, model.g_params))
+    ca = refin.shadow_score(refin.candidate)
+    assert ca["resid"] < fr["resid"]
+
+
+def test_trainer_noop_below_min_fill():
+    model = toy_refinable_classifier(d=D)
+    led = ResidualLedger(model, capacity=64)
+    refin = Refinery(model, led, RefineryConfig(min_fill=8))
+    assert refin.train_tick() is None and refin.steps == 0
+
+
+def test_refinery_requires_parametric_model():
+    from repro.launch.workload import toy_classifier
+    model = toy_classifier("euler")
+    led = ResidualLedger(toy_refinable_classifier(d=D), capacity=4)
+    with pytest.raises(ValueError, match="parametric"):
+        Refinery(model, led)
+
+
+def test_refinery_async_checkpoints_candidate(tmp_path):
+    model = toy_refinable_classifier(d=D)
+    led = _fill_ledger(model)
+    refin = Refinery(model, led,
+                     RefineryConfig(steps_per_tick=4, min_fill=8,
+                                    ckpt_every=2),
+                     ckpt_dir=str(tmp_path))
+    refin.train_tick()
+    refin.flush()
+    from repro.checkpoint import CheckpointManager
+    cm = CheckpointManager(str(tmp_path))
+    step, state = cm.restore_latest(
+        jax.eval_shape(lambda: refin.candidate))
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(state["w1"]),
+                                  np.asarray(refin.candidate["w1"]))
+
+
+# ------------------------------------------------------------ hot swap ----
+
+def test_hot_swap_mid_flight_no_retrace_and_live():
+    """ACCEPTANCE: swapping g mid-replay (pool busy, between segments)
+    compiles NOTHING — TRACE_COUNTS frozen — and the swapped params are
+    LIVE: completions after the swap differ from a never-swapped run."""
+    xs = heterogeneous_requests(24, D, seed=21)
+    trace = poisson_trace(xs, rate=0.25, seed=23)
+    new_gp = jax.tree_util.tree_map(
+        lambda l: l + 0.5, toy_refinable_classifier(d=D).g_params)
+
+    def run(swap):
+        sched = _sched(toy_refinable_classifier(d=D))
+        state = {"tick": 0, "before": None}
+
+        def on_tick(s):
+            state["tick"] += 1
+            if swap and state["tick"] == 3:
+                assert s.pending, "swap must land on a busy pool"
+                state["before"] = TRACE_COUNTS["fused_rk_update"]
+                s.hot_swap_g(new_gp)
+
+        rep = replay_scheduler(sched, trace, on_tick=on_tick)
+        if swap:
+            assert state["before"] is not None
+            assert TRACE_COUNTS["fused_rk_update"] == state["before"], \
+                "hot_swap_g retraced a pool cell"
+        return {r.uid: r.outputs for r in rep.records}
+
+    plain, swapped = run(False), run(True)
+    assert set(plain) == set(swapped)
+    assert any(not np.array_equal(plain[u], swapped[u]) for u in plain), \
+        "swapped params never reached the pool cells"
+
+
+def test_engine_hot_swap_no_retrace_and_live():
+    model = toy_refinable_classifier(d=D)
+    eng = MultiRateEngine(model, _ecfg())
+    xs = heterogeneous_requests(8, D, seed=31)
+    out_a = {c.uid: c.outputs for c in eng.run(xs)}
+    before = TRACE_COUNTS["fused_rk_update"]
+    eng.hot_swap_g(jax.tree_util.tree_map(lambda l: l + 0.5,
+                                          model.g_params))
+    out_b = {c.uid: c.outputs for c in eng.run(xs)}
+    assert TRACE_COUNTS["fused_rk_update"] == before
+    # uids keep counting across runs; requests resubmit in order, so
+    # uid u in run B served the same x as uid u - 8 in run A
+    assert len(out_a) == len(out_b) == 8
+    assert any(not np.array_equal(out_a[u - 8], out_b[u])
+               for u in out_b)
+
+
+def test_hot_swap_validation_errors():
+    model = toy_refinable_classifier(d=D)
+    sched = _sched(model)
+    gp = sched.g_params
+    with pytest.raises(ValueError):                     # shape mismatch
+        sched.hot_swap_g(jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape + (1,), l.dtype), gp))
+    with pytest.raises(ValueError):                     # dtype mismatch
+        sched.hot_swap_g(jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, jnp.int32), gp))
+    with pytest.raises(ValueError):                     # treedef mismatch
+        sched.hot_swap_g({"nope": jnp.zeros(())})
+    from repro.launch.workload import toy_classifier
+    with pytest.raises(ValueError, match="parametric"):
+        _sched(toy_classifier("euler")).hot_swap_g(gp)
+
+
+# --------------------------------------------------------- shadow gate ----
+
+def _refinery(model, led, **cfg_kw):
+    cfg_kw.setdefault("min_fill", 8)
+    cfg_kw.setdefault("ref_K", 32)
+    return Refinery(model, led, RefineryConfig(**cfg_kw), ecfg=_ecfg(),
+                    shadow_xs=heterogeneous_requests(8, D, seed=99))
+
+
+def test_gate_promotes_trained_candidate_into_targets():
+    model = toy_refinable_classifier(d=D)
+    led = _fill_ledger(model, capacity=256)
+    sched = _sched(model)
+    refin = _refinery(model, led, steps_per_tick=30, lr=5e-3,
+                      total_steps=300)
+    for _ in range(10):
+        refin.train_tick()
+    old = sched.g_params
+    verdict = refin.maybe_promote([sched])
+    assert verdict["promoted"] and refin.promotions == 1
+    assert refin.last_promotion == refin.steps
+    # the target now serves the promoted params
+    assert all(np.array_equal(a, b) for a, b in zip(
+        jax.tree_util.tree_leaves(sched.g_params),
+        jax.tree_util.tree_leaves(refin.current)))
+    assert any(not np.array_equal(a, b) for a, b in zip(
+        jax.tree_util.tree_leaves(old),
+        jax.tree_util.tree_leaves(sched.g_params)))
+
+
+def test_gate_rejects_corrupted_candidate():
+    model = toy_refinable_classifier(d=D)
+    led = _fill_ledger(model)
+    sched = _sched(model)
+    refin = _refinery(model, led)
+    rng = np.random.RandomState(0)
+    refin.candidate = jax.tree_util.tree_map(
+        lambda l: l + 100.0 * rng.standard_normal(l.shape).astype(l.dtype),
+        refin.candidate)
+    old = sched.g_params
+    verdict = refin.maybe_promote([sched])
+    assert not verdict["promoted"] and refin.rejections == 1
+    # serving params untouched by the rejected candidate
+    assert all(np.array_equal(a, b) for a, b in zip(
+        jax.tree_util.tree_leaves(old),
+        jax.tree_util.tree_leaves(sched.g_params)))
+
+
+def test_check_promoted_rolls_back_regressed_params():
+    model = toy_refinable_classifier(d=D)
+    led = _fill_ledger(model, capacity=256)
+    sched = _sched(model)
+    refin = _refinery(model, led, steps_per_tick=30, lr=5e-3,
+                      total_steps=300)
+    for _ in range(10):
+        refin.train_tick()
+    assert refin.maybe_promote([sched])["promoted"]
+    good = refin.current
+    # the promoted params rot in place (checkpoint corruption, a bad
+    # in-place update...): the post-promotion guard must restore prev
+    rng = np.random.RandomState(1)
+    refin.current = jax.tree_util.tree_map(
+        lambda l: l + 100.0 * rng.standard_normal(l.shape).astype(l.dtype),
+        good)
+    assert refin.check_promoted([sched]) is True
+    assert refin.rollbacks == 1
+    prev = refin.current                   # rolled back to pre-promotion
+    assert all(np.array_equal(a, b) for a, b in zip(
+        jax.tree_util.tree_leaves(sched.g_params),
+        jax.tree_util.tree_leaves(prev)))
+    assert refin.check_promoted([sched]) is None   # handle consumed
+
+
+def test_status_keys_for_progress_line():
+    model = toy_refinable_classifier(d=D)
+    refin = _refinery(model, ResidualLedger(model, capacity=8))
+    st = refin.status()
+    for key in ("ledger_fill", "ledger_seen", "candidate_step",
+                "last_loss", "last_promotion", "promotions",
+                "rejections", "rollbacks"):
+        assert key in st
+
+
+# ------------------------------------------------------- graceful drain ----
+
+def test_should_admit_false_drains_inflight_and_stops_admission():
+    """The graceful-shutdown contract: once ``should_admit`` goes False,
+    no further arrivals are admitted, every in-flight request still
+    reaches a terminal record, and the replay loop exits."""
+    model = toy_refinable_classifier(d=D)
+    sched = _sched(model, slots=4)
+    xs = heterogeneous_requests(24, D, seed=41)
+    trace = poisson_trace(xs, rate=0.25, seed=43)
+    ticks = [0]
+
+    def on_tick(s):
+        ticks[0] += 1
+
+    rep = replay_scheduler(sched, trace, on_tick=on_tick,
+                           should_admit=lambda: ticks[0] < 3)
+    assert 0 < len(rep.records) < len(trace)
+    assert sched.pending == 0
+    assert all(r.status in ("ok", "retried") for r in rep.records)
+
+
+def test_drifting_requests_seeded_and_nonstationary():
+    a = drifting_requests(48, D, seed=3)
+    b = drifting_requests(48, D, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (48, D)
+    # the phases drift: the late third is harder (larger mean norm) than
+    # the early third
+    n = len(a) // 3
+    early = np.linalg.norm(a[:n], axis=1).mean()
+    late = np.linalg.norm(a[-n:], axis=1).mean()
+    assert late > early

@@ -268,6 +268,50 @@ def test_scheduler_same_shape_mixed_dtypes_get_separate_pools():
                                rtol=1e-6, atol=1e-6)
 
 
+# ------------------------------------------------------- hot-swapped g ----
+
+@pytest.mark.parametrize("overlap", [False, True],
+                         ids=["sync", "overlap"])
+def test_hot_swap_g_mid_flight_no_retrace(overlap):
+    """ACCEPTANCE (PR 9): swapping correction params into a BUSY pool —
+    sync and overlap loops — compiles nothing (TRACE_COUNTS frozen: the
+    params are traced cell inputs), drains nothing, and is LIVE
+    (post-swap completions differ from a never-swapped replay)."""
+    from repro.launch.workload import toy_refinable_classifier
+
+    ecfg = EngineConfig(controller="fixed", fixed_K=4, buckets=(4,))
+    xs = heterogeneous_requests(16, 8, seed=5)
+    trace = poisson_trace(xs, rate=0.25, seed=6)
+    new_gp = jax.tree_util.tree_map(
+        lambda l: l + 0.5, toy_refinable_classifier(d=8).g_params)
+
+    def run(swap):
+        sched = InflightScheduler(toy_refinable_classifier(d=8), ecfg,
+                                  slots=4, seg=1, overlap=overlap)
+        state = {"tick": 0, "before": None}
+
+        def on_tick(s):
+            state["tick"] += 1
+            if swap and state["tick"] == 3:
+                assert s.pending, "swap must land on a busy pool"
+                state["before"] = TRACE_COUNTS["fused_rk_update"]
+                s.hot_swap_g(new_gp)
+
+        rep = replay_scheduler(sched, trace, on_tick=on_tick)
+        if swap:
+            assert state["before"] is not None
+            assert TRACE_COUNTS["fused_rk_update"] == state["before"], (
+                "hot_swap_g retraced a pool cell — params stopped being "
+                "traced inputs")
+        assert len(rep.records) == 16
+        return {r.uid: r.outputs for r in rep.records}
+
+    plain, swapped = run(False), run(True)
+    assert set(plain) == set(swapped)
+    assert any(not np.array_equal(plain[u], swapped[u]) for u in plain), (
+        "swapped params never reached the pool cells")
+
+
 # ------------------------------------------------- sharded slot pools ----
 
 _SHARDED_SCRIPT = textwrap.dedent("""
@@ -375,6 +419,46 @@ _SHARDED_SCRIPT = textwrap.dedent("""
                               np.asarray(ref.outputs))
     assert latency_stats(rep_o) == s4
     print("SHARDED_OVERLAP_PARITY_OK")
+
+    # hot-swapping correction params into a BUSY sharded pool (sync and
+    # overlap) compiles nothing and is live — the params-are-inputs
+    # invariant holds per (shape, seg, mesh) cell too
+    from repro.launch.workload import toy_refinable_classifier
+
+    pecfg = EngineConfig(controller="fixed", fixed_K=4, buckets=(4,))
+    pxs = heterogeneous_requests(16, 8, seed=5)
+    ptrace = poisson_trace(pxs, rate=0.25, seed=6)
+    new_gp = jax.tree_util.tree_map(
+        lambda l: l + 0.5, toy_refinable_classifier(d=8).g_params)
+
+    def hot_run(swap, overlap):
+        sched = InflightScheduler(toy_refinable_classifier(d=8), pecfg,
+                                  slots=8, seg=1, mesh=mesh,
+                                  overlap=overlap)
+        state = {"tick": 0, "before": None}
+
+        def on_tick(s):
+            state["tick"] += 1
+            if swap and state["tick"] == 3:
+                assert s.pending
+                state["before"] = TRACE_COUNTS["fused_rk_update"]
+                s.hot_swap_g(new_gp)
+
+        rep = replay_scheduler(sched, ptrace, on_tick=on_tick)
+        if swap:
+            assert state["before"] is not None
+            assert TRACE_COUNTS["fused_rk_update"] == state["before"], (
+                "hot_swap_g retraced a sharded pool cell")
+        assert len(rep.records) == 16
+        return {r.uid: r.outputs for r in rep.records}
+
+    for overlap in (False, True):
+        plain = hot_run(False, overlap)
+        swapped = hot_run(True, overlap)
+        assert set(plain) == set(swapped)
+        assert any(not np.array_equal(plain[u], swapped[u])
+                   for u in plain)
+    print("SHARDED_HOTSWAP_NO_RETRACE_OK")
 """)
 
 
@@ -396,7 +480,8 @@ def test_sharded_slot_pool_debug_mesh_subprocess():
     for marker in ("SHARDED_SEGMENT_PARITY_OK",
                    "SHARDED_SEGMENT_DIVISIBILITY_OK",
                    "SHARDED_POOL_REPLAY_OK",
-                   "SHARDED_OVERLAP_PARITY_OK"):
+                   "SHARDED_OVERLAP_PARITY_OK",
+                   "SHARDED_HOTSWAP_NO_RETRACE_OK"):
         assert marker in out, (marker, out[-4000:])
 
 
