@@ -19,9 +19,11 @@ BENCH_wallclock.json (bench_wallclock — the real-clock overlap-vs-sync
 serving race + async-dispatch mechanism + predicted-vs-measured join),
 BENCH_faults.json (bench_faults — the chaos harness: zero-hang,
 status accounting, and fault-free parity under seeded fault injection),
-and BENCH_refinery.json (bench_refinery — the closed refinement loop:
+BENCH_refinery.json (bench_refinery — the closed refinement loop:
 refined-vs-frozen agreement at equal NFE, capture bitwise parity, and
-shadow-gate rejection cleanliness).
+shadow-gate rejection cleanliness), and BENCH_flow.json (bench_flow —
+the K=0 flow tier: three-tier-router vs hypersolver-only pareto,
+flow-disabled bitwise parity, and escalation-path accounting).
 
 ``--check`` is the BENCH-schema smoke gate (tier-1 CI): it validates
 every committed BENCH_*.json — parseable, non-empty list of rows, every
@@ -51,6 +53,7 @@ MODULES = [
     "bench_scheduler",
     "bench_faults",
     "bench_refinery",
+    "bench_flow",
 ]
 
 REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
@@ -76,6 +79,10 @@ BENCH_REQUIRED = {
     # the closed-loop refinery (bench_refinery): 'agreement' pins the
     # frozen-vs-refined scoring rows, 'section' the three-part layout
     "BENCH_refinery.json": ("agreement", "section"),
+    # the K=0 flow tier (bench_flow): 'mean_nfe' pins the pareto rows
+    # (three-tier vs hypersolver-only), 'escalated' the fault-path
+    # accounting rows, 'section' the three-part layout
+    "BENCH_flow.json": ("mean_nfe", "escalated", "section"),
 }
 
 
@@ -132,6 +139,68 @@ def check_bench_files(root: str = REPO_ROOT) -> list:
             errors.extend(_check_faults_section(name, rows))
         if name == "BENCH_refinery.json":
             errors.extend(_check_refinery_section(name, rows))
+        if name == "BENCH_flow.json":
+            errors.extend(_check_flow_section(name, rows))
+    return errors
+
+
+def _check_flow_section(name: str, rows: list) -> list:
+    """K=0 flow-tier invariants: pareto rows for BOTH router variants
+    with the three-tier side at equal-or-better agreement and STRICTLY
+    lower mean NFE (and actually serving flow traffic — a zero-traffic
+    'win' is vacuous), flow-disabled parity rows for all three serving
+    loops each bitwise at parity, escalation rows whose poisoned flow
+    evals were requeued into the K-ladder with accounting that closes,
+    and the verdict scoreboard all True."""
+    errors = []
+    par = {r.get("variant"): r for r in rows if isinstance(r, dict)
+           and r.get("section") == "pareto"}
+    for variant in ("hyper_multirate", "three_tier"):
+        if variant not in par:
+            errors.append(f"{name}: no pareto row for the {variant!r} "
+                          "variant — the head-to-head needs both sides")
+    if len(par) == 2:
+        h, f = par["hyper_multirate"], par["three_tier"]
+        if not (f.get("agreement", 0) >= h.get("agreement", 1)):
+            errors.append(f"{name}: three-tier agreement "
+                          f"{f.get('agreement')} fell below the "
+                          f"hypersolver-only {h.get('agreement')}")
+        if not (f.get("mean_nfe", 1e9) < h.get("mean_nfe", 0)):
+            errors.append(f"{name}: three-tier mean NFE "
+                          f"{f.get('mean_nfe')} is not strictly below "
+                          f"the hypersolver-only {h.get('mean_nfe')}")
+        if not f.get("flow_served", 0) > 0:
+            errors.append(f"{name}: the three-tier pareto row served "
+                          "zero flow-tier requests — the comparison is "
+                          "vacuous")
+    dis = {r.get("mode"): r for r in rows if isinstance(r, dict)
+           and r.get("section") == "flow_disabled_parity"}
+    for loop in ("engine", "inflight", "inflight_overlap"):
+        if loop not in dis:
+            errors.append(f"{name}: no flow-disabled parity row for "
+                          f"the {loop!r} loop")
+        elif dis[loop].get("parity") is not True:
+            errors.append(f"{name}: flow-disabled parity row for "
+                          f"{loop!r} is not at parity — attaching a "
+                          "disabled flow head perturbed the ladder")
+    esc = [r for r in rows if isinstance(r, dict)
+           and r.get("section") == "escalation" and "escalated" in r]
+    if not esc:
+        errors.append(f"{name}: no escalation rows (flow fault path)")
+    elif not any(r.get("escalated", 0) > 0 for r in esc):
+        errors.append(f"{name}: no escalation row recorded a poisoned "
+                      "flow eval requeued into the K-ladder")
+    verdicts = [r for r in rows if isinstance(r, dict)
+                and r.get("mode") == "verdict"]
+    if not verdicts:
+        errors.append(f"{name}: missing the verdict row "
+                      "(three_tier_dominates scoreboard)")
+    else:
+        for key in ("three_tier_dominates", "flow_disabled_parity",
+                    "escalation_accounted", "zero_hang"):
+            if verdicts[0].get(key) is not True:
+                errors.append(f"{name}: verdict {key} is not True — "
+                              "the flow-tier contract regressed")
     return errors
 
 

@@ -12,17 +12,19 @@ from repro.core.solvers import (  # noqa: F401
 )
 from repro.core.controllers import (  # noqa: F401
     EmbeddedErrorController, FixedController, HypersolverResidualController,
-    embedded_step, error_ratio, per_sample_norm, step_factor,
+    TierRouter, embedded_step, error_ratio, per_sample_norm, step_factor,
 )
+from repro.core.flowhead import flow_combine, make_flow_apply  # noqa: F401
 from repro.core.adaptive import (  # noqa: F401
     odeint_dopri5, odeint_dopri5_batched,
 )
 from repro.core.hypersolver import HyperSolver, make as make_solver  # noqa: F401
 from repro.core.residual import (  # noqa: F401
-    solver_residual, residual_fitting_loss, trajectory_fitting_loss, combined_loss,
+    solver_residual, residual_fitting_loss, trajectory_fitting_loss,
+    combined_loss, flow_fitting_loss,
 )
 from repro.core.neural_ode import NeuralODE  # noqa: F401
 from repro.core.train import (  # noqa: F401
-    HypersolverTrainConfig, train_hypersolver, make_hypersolver,
-    make_integrator, bind_g,
+    FlowTrainConfig, HypersolverTrainConfig, train_flowhead,
+    train_hypersolver, make_hypersolver, make_integrator, bind_g,
 )

@@ -216,4 +216,60 @@ class HypersolverResidualController:
         return Probe(Ks, e, 1, dz)
 
 
+# ------------------------------------------------------------ tier router ----
+
+@dataclasses.dataclass(frozen=True)
+class TierRouter:
+    """The three-way serving-ladder policy layered ON TOP of a probing
+    step controller: snap each request's difficulty estimate to a tier —
+
+      * ``flow``   — probe error confidently below tolerance
+        (``err <= flow_threshold * tol``): serve with the K=0 learned
+        solution operator (core/flowhead.py), ONE net eval, no solver;
+      * ``hyper``  — easy-to-medium (``K <= hyper_k_max`` after bucket
+        snap): hypersolver at a small mesh;
+      * ``high-K`` — everything else: the fine buckets.
+
+    ``flow_threshold`` is a CONFIDENCE margin, not a second tolerance:
+    the probe error estimates one full-span base step's defect, and the
+    flow head is exactly that step plus a correction fitted to cancel
+    it, so routing demands the estimate sit well inside ``tol`` before
+    trusting the no-solver answer. Requests on the escalation path
+    (``K_floor > 0`` from the retry ladder) are never flow-eligible —
+    a request the flow already failed must not loop back to it. Tier is
+    a PACKING decision like the K-buckets (launch/engine.py): it picks
+    which jit cell serves a row, and never respecializes any cell.
+    """
+
+    flow_threshold: float = 0.25   # route to flow iff err <= this * tol
+    hyper_k_max: int = 4           # hyper/high-K boundary (reporting tier)
+
+    def __post_init__(self):
+        if not (0.0 <= self.flow_threshold <= 1.0):
+            raise ValueError(
+                f"flow_threshold={self.flow_threshold}: expected a "
+                "confidence fraction in [0, 1] — the flow tier serves "
+                "requests whose probe error is confidently BELOW "
+                "tolerance, so a threshold above 1 would route requests "
+                "the probe already flagged as failing")
+
+    def flow_mask(self, err, tol: float, k_floor) -> jnp.ndarray:
+        """(B,) bool: rows to serve on the K=0 flow tier. Non-finite
+        probe errors (the probe itself blew up) and escalated requests
+        (``k_floor > 0``) are excluded unconditionally."""
+        err = jnp.asarray(err, jnp.float32)
+        k_floor = jnp.asarray(k_floor, jnp.int32)
+        return (jnp.isfinite(err)
+                & (err <= self.flow_threshold * tol)
+                & (k_floor == 0))
+
+    def tier_of(self, K) -> jnp.ndarray:
+        """Reporting tier for a snapped bucket row: 1 = hyper
+        (``K <= hyper_k_max``), 2 = high-K. Flow rows (tier 0) never
+        reach the bucket ladder, so they are assigned by ``flow_mask``,
+        not here."""
+        K = jnp.asarray(K, jnp.int32)
+        return jnp.where(K <= self.hyper_k_max, 1, 2).astype(jnp.int32)
+
+
 StepController = Any  # FixedController | EmbeddedErrorController | ...

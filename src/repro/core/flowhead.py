@@ -1,0 +1,73 @@
+"""FlowHead — a learned solution operator as the serving ladder's K=0 tier.
+
+*Neural Flows* (Biloš et al., PAPERS.md) takes the paper's bet — a cheap
+learned corrector buys solver accuracy — to its limit: replace the solver
+entirely with a learned map z(s1) = F(z(s0)). One network eval, zero
+integration steps. This module keeps that operator INSIDE the hypersolver
+parameterization instead of learning a free-form F:
+
+    F(fp, eps, s, z, dz) = z + eps * dz + eps^{p+1} * net(fp, eps, s, z, dz)
+
+i.e. one full-span explicit-Euler step plus an eps^{p+1}-scaled learned
+correction — exactly the hypersolver update shape (paper Eq. 3) with the
+whole span as the single step. Three properties fall out:
+
+  * **zero-init == Euler.** With ``net == 0`` (the zero-readout init every
+    correction net here uses), F is EXACTLY one full-span Euler step — the
+    flow tier degrades to the cheapest classical answer, never garbage.
+  * **same fitting data as g.** Rearranging the Eq.-6 residual definition,
+    the true solution satisfies ``z(s+eps) = z + eps*dz + eps^{p+1} * R``,
+    so fitting F to z(s+eps) on the refinery ledger's captured
+    ``(s, eps, z, dz, R)`` rows reduces to fitting ``net`` to R — the SAME
+    ``ledger_fitting_loss`` target the hypersolver g trains on
+    (``core/residual.py::flow_fitting_loss`` is the scaled restatement).
+  * **same swap machinery as g.** ``net`` has the g_apply signature
+    ``(params, eps, s, z, dz)``, so flow params ride the serving cells as
+    traced inputs and hot-swap with the zero-retrace ``hot_swap_g``
+    validation path (``launch/engine.py::hot_swap_flow``).
+
+``launch/engine.py`` / ``launch/scheduler.py`` route admission-probe-easy
+requests here (the ``flow``/``hyper``/``high-K`` three-tier ladder,
+``core/controllers.py::TierRouter``); ``launch/refinery.py`` refits the
+flow head online off the same residual ledger (``param_site="flow"``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+# net(params, eps, s, z, dz) -> correction pytree like z — the g_apply
+# signature (launch/engine.py::DepthModel), so any correction net (toy MLP,
+# models/cdepth.py::lm_g_apply adapter) doubles as a flow net.
+FlowNet = Callable[..., Any]
+
+__all__ = ["make_flow_apply", "flow_combine"]
+
+
+def flow_combine(eps, z: Pytree, dz: Pytree, corr: Pytree,
+                 order: int = 1) -> Pytree:
+    """``z + eps*dz + eps^{order+1}*corr`` — the hypersolver update shape
+    (paper Eq. 3) applied once over the full span. Leaf-wise, so z/dz/corr
+    may be arbitrary matching pytrees; ``eps`` is a scalar (the span)."""
+    scale = eps ** (order + 1)
+    return jax.tree_util.tree_map(
+        lambda zl, dzl, cl: zl + eps * dzl
+        + jnp.asarray(scale, dtype=zl.dtype) * cl.astype(zl.dtype),
+        z, dz, corr)
+
+
+def make_flow_apply(net: FlowNet, order: int = 1) -> Callable:
+    """Wrap a correction net into the solution-operator signature
+    ``flow_apply(fp, eps, s, z, dz) -> z(s + eps)`` that ``DepthModel``
+    carries (``flow_apply``/``flow_params``). ``order`` is the base
+    solver's order p; the net's output is scaled by eps^{p+1}, matching
+    the residual target it is fitted to (core/residual.py)."""
+
+    def flow_apply(fp, eps, s, z, dz):
+        return flow_combine(eps, z, dz, net(fp, eps, s, z, dz), order=order)
+
+    return flow_apply

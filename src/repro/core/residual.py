@@ -109,6 +109,54 @@ def ledger_fitting_loss(
     return jnp.mean(losses)
 
 
+def flow_fitting_loss(
+    flow: Callable, s: jnp.ndarray, eps: jnp.ndarray, z: Pytree, dz: Pytree,
+    R: Pytree, order: int = 1, relative: bool = False
+) -> jnp.ndarray:
+    """Fit a FlowHead solution operator (core/flowhead.py) on the SAME
+    ledger rows the hypersolver g trains on. By the Eq.-6 residual
+    definition the true step target is reconstructable from a captured
+    sample without re-evaluating the vector field:
+
+        z(s_i + eps_i) = z_i + eps_i * dz_i + eps_i^{p+1} * R_i
+
+    so the loss is the eps^{p+1}-normalized step-prediction error
+
+        ell = (1/N) sum_i || z(s_i+eps_i) - F(eps_i, s_i, z_i, dz_i) ||_2
+                    / eps_i^{p+1}
+
+    — for the structured ``make_flow_apply`` head this is EXACTLY
+    ``ledger_fitting_loss`` of its net (the Euler part cancels), so the
+    flow tier and the g tier fit the same target off the same reservoir.
+    ``flow(eps, s, z, dz)`` is the params-bound operator; normalization
+    keeps the objective O(1) so one lr/clip config serves both sites.
+
+    ``relative=True`` additionally normalizes each sample by its residual
+    magnitude ``1 + ||R_i||``. On a mixed-difficulty ledger the raw
+    objective is dominated by the hardest rows (their residuals can sit
+    orders of magnitude above the easy ones), and the fitted head trades
+    easy-row accuracy away to chase them — exactly backwards for the K=0
+    tier, which the router only ever hands the CONFIDENTLY EASY rows.
+    Relative fitting is the deployment-matched objective; the default
+    ``False`` keeps the exact ledger_fitting_loss equivalence above."""
+    R = jax.lax.stop_gradient(R)
+    dz = jax.lax.stop_gradient(dz)
+    z = jax.lax.stop_gradient(z)
+
+    def per_i(si, epsi, zi, dzi, Ri):
+        scale = epsi ** (order + 1)
+        target = jax.tree_util.tree_map(
+            lambda zl, dzl, Rl: zl + epsi * dzl + scale * Rl, zi, dzi, Ri)
+        pred = flow(epsi, si, zi, dzi)
+        ell = _tree_l2(_tree_sub(target, pred)) / scale
+        if relative:
+            ell = ell / (1.0 + _tree_l2(Ri))
+        return ell
+
+    losses = jax.vmap(per_i)(s, eps, z, dz, R)
+    return jnp.mean(losses)
+
+
 def trajectory_fitting_loss(
     hs: Integrator, f: VectorField, traj: Pytree, grid: FixedGrid
 ) -> jnp.ndarray:

@@ -14,11 +14,12 @@ from typing import Any, Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.hypersolver import HyperSolver
 from repro.core.integrate import Integrator
 from repro.core.neural_ode import NeuralODE
-from repro.core.residual import combined_loss
+from repro.core.residual import combined_loss, flow_fitting_loss
 from repro.core.solvers import FixedGrid
 from repro.core.tableaus import Tableau, get as get_tableau
 from repro.optim import Optimizer, adamw, clip_by_global_norm, apply_updates
@@ -81,6 +82,72 @@ def make_fit_step(loss_fn: Callable, opt: Optimizer, grad_clip: float):
         return gp, opt_state, loss
 
     return fit_step
+
+
+@dataclasses.dataclass
+class FlowTrainConfig:
+    """Offline FlowHead fitting knobs (core/flowhead.py). Defaults match
+    the refinery's online fit (launch/refinery.py::RefineryConfig) so the
+    two flow-training paths share one optimizer regime."""
+
+    iters: int = 400
+    batch_size: int = 64
+    lr: float = 3e-3
+    lr_min: float = 1e-4
+    weight_decay: float = 1e-6
+    grad_clip: float = 10.0
+    order: int = 1                # base solver order p (eps^{p+1} scaling)
+    relative: bool = True         # per-sample ||R||-normalized objective:
+    #   the router only hands the flow tier CONFIDENTLY EASY rows, so the
+    #   head must not trade easy-row accuracy for hard-row magnitudes
+    #   (see core/residual.py::flow_fitting_loss)
+    seed: int = 0
+
+
+def train_flowhead(
+    flow_apply: Callable,
+    flow_params: Any,
+    ledger: Any,
+    cfg: Optional[FlowTrainConfig] = None,
+    log_every: int = 0,
+    logger: Optional[Callable[[int, float], None]] = None,
+):
+    """Fit a flow head on residual-ledger rows — the SAME reservoir the
+    hypersolver g trains on (``ledger`` is any source with the
+    ``ResidualLedger.sample_batch(n, rng) -> {"s","eps","z","dz","R"}``
+    contract, launch/refinery.py). Built on ``make_fit_step`` over
+    ``core/residual.py::flow_fitting_loss``, so offline flow fitting,
+    offline g fitting, and the online refinery cannot drift on optimizer
+    mechanics. Returns (flow_params, losses list)."""
+    cfg = cfg or FlowTrainConfig()
+    opt: Optimizer = adamw(
+        cosine_annealing(cfg.lr, cfg.lr_min, cfg.iters),
+        weight_decay=cfg.weight_decay,
+    )
+    opt_state = opt.init(flow_params)
+
+    def loss_fn(fp, s, eps, z, dz, R):
+        flow = lambda e, si, zi, dzi: flow_apply(fp, e, si, zi, dzi)
+        return flow_fitting_loss(flow, s, eps, z, dz, R, order=cfg.order,
+                                 relative=cfg.relative)
+
+    fit_step = make_fit_step(loss_fn, opt, cfg.grad_clip)
+    rng = np.random.RandomState(cfg.seed)
+    losses = []
+    for it in range(cfg.iters):
+        b = ledger.sample_batch(cfg.batch_size, rng)
+        if b is None:
+            raise ValueError(
+                "train_flowhead: ledger has no capacity to sample from "
+                "(fill it via live capture or ResidualLedger.capture "
+                "before fitting)")
+        flow_params, opt_state, loss = fit_step(
+            flow_params, opt_state, it,
+            b["s"], b["eps"], b["z"], b["dz"], b["R"])
+        losses.append(float(loss))
+        if log_every and logger and it % log_every == 0:
+            logger(it, float(loss))
+    return flow_params, losses
 
 
 def train_hypersolver(

@@ -161,6 +161,14 @@ class FaultInjector:
         counter: the overlap loop burns retire-only flush ticks at pool
         drain, so tick counters drift across loops while the dispatch
         sequence stays identical.
+      * ``corrupt_flow_eval`` — NaN-poison a fraction of K=0 flow-tier
+        outputs (``flow_nan_frac``), exercising the escalation path:
+        the serving loops screen the flow row host-side and requeue the
+        request into the K-bucket ladder (terminal ``escalated``). A
+        SEPARATE site from ``corrupt_admission`` because an admission-
+        poisoned input already fails the probe's finite screen and is
+        never flow-routed — only a fault in the flow eval itself can
+        exercise escalation. Honors ``nan_transient`` the same way.
     """
 
     seed: int = 0
@@ -169,6 +177,7 @@ class FaultInjector:
     drop_flag_p: float = 0.0
     straggle_tick_frac: float = 0.0
     straggle_factor: float = 4.0
+    flow_nan_frac: float = 0.0
 
     def corrupt_admission(self, uid: int, attempts: int,
                           x: np.ndarray) -> np.ndarray:
@@ -180,6 +189,17 @@ class FaultInjector:
             x = np.array(x, copy=True)
             x.reshape(-1)[0] = np.nan
         return x
+
+    def corrupt_flow_eval(self, uid: int, attempts: int,
+                          out_row: np.ndarray) -> np.ndarray:
+        if self.flow_nan_frac <= 0.0:
+            return out_row
+        if self.nan_transient and attempts > 0:
+            return out_row
+        if _hash01(self.seed, "flow", int(uid)) < self.flow_nan_frac:
+            out_row = np.array(out_row, copy=True)
+            out_row.reshape(-1)[0] = np.nan
+        return out_row
 
     def drop_retire_flags(self, uids: np.ndarray, segments: np.ndarray,
                           finished: np.ndarray) -> np.ndarray:

@@ -52,6 +52,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import ArchConfig
 from repro.core.controllers import (
     EmbeddedErrorController, FixedController, HypersolverResidualController,
+    TierRouter,
 )
 from repro.core.integrate import Integrator, OneTimeWarning
 from repro.models.cdepth import lm_g_init, lm_integrator
@@ -92,6 +93,19 @@ def load_g_params(path: str, cfg: ArchConfig, rank: int = 32):
     return cm.restore(step, jax.eval_shape(lambda: template))
 
 
+def load_flow_params(path: str, cfg: ArchConfig, rank: int = 64):
+    """Restore a trained LM flow head (core/flowhead.py) from a
+    CheckpointManager directory (the --flow-ckpt CLI flag)."""
+    from repro.models.cdepth import lm_flow_init
+    cm = CheckpointManager(path)
+    step = cm.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {path!r}")
+    template = lm_flow_init(jax.random.PRNGKey(0), cfg, rank=rank,
+                            param_dtype=jnp.float32)
+    return cm.restore(step, jax.eval_shape(lambda: template))
+
+
 # ---------------------------------------------------------- model adapters ----
 
 @dataclasses.dataclass(frozen=True)
@@ -115,7 +129,15 @@ class DepthModel:
       (``hot_swap_g``) reuses every compilation — the params-are-inputs
       invariant the online refinery's no-retrace hot-swap rests on
       (launch/refinery.py; docs/architecture.md "the refinery layer").
-      ``integ.g`` must be None on this path."""
+      ``integ.g`` must be None on this path.
+
+    ``flow_apply``/``flow_params`` carry the OPTIONAL K=0 flow tier
+    (core/flowhead.py): ``flow_apply(fp, eps, s, z, dz) -> z(s + eps)``
+    is a learned solution operator — one eval, no solver — that the
+    serving loops route probe-easy requests to when
+    ``EngineConfig.flow_threshold > 0``. Flow params follow the same
+    params-are-inputs contract as g (traced cell operands,
+    ``hot_swap_flow``)."""
 
     embed: Callable[[Any], Any]
     field_of: Callable[[Any], Callable]
@@ -124,6 +146,8 @@ class DepthModel:
     span: Tuple[float, float] = (0.0, 1.0)
     g_apply: Optional[Callable] = None   # g_apply(gp, eps, s, z, dz)
     g_params: Any = None                 # initial swappable params
+    flow_apply: Optional[Callable] = None  # flow_apply(fp, eps, s, z, dz)
+    flow_params: Any = None              # initial swappable flow params
 
 
 def bound_integrator(model: DepthModel, gp=None) -> Integrator:
@@ -141,17 +165,18 @@ def bound_integrator(model: DepthModel, gp=None) -> Integrator:
         model.integ, g=lambda e, s, z, dz: ga(gp, e, s, z, dz))
 
 
-def validate_g_swap(current, new) -> None:
+def validate_g_swap(current, new, label: str = "hot_swap_g") -> None:
     """Refuse a hot-swap that would retrace: the incoming params must
     match the resident pytree leaf for leaf (treedef, shapes, dtypes) —
     the exact condition under which jit reuses the compiled cells that
-    took ``current`` as an input. Shared by MultiRateEngine.hot_swap_g
-    and InflightScheduler.hot_swap_g."""
+    took ``current`` as an input. Shared by the engine's and scheduler's
+    ``hot_swap_g`` AND ``hot_swap_flow`` (``label`` names the caller in
+    the error)."""
     t_cur, d_cur = jax.tree_util.tree_flatten(current)
     t_new, d_new = jax.tree_util.tree_flatten(new)
     if d_cur != d_new:
         raise ValueError(
-            f"hot_swap_g: params treedef mismatch ({d_new} vs resident "
+            f"{label}: params treedef mismatch ({d_new} vs resident "
             f"{d_cur}) — a swap must preserve the pytree structure or "
             "every serving cell would retrace")
     for i, (c, n) in enumerate(zip(t_cur, t_new)):
@@ -159,14 +184,15 @@ def validate_g_swap(current, new) -> None:
         ns, nd = jnp.shape(n), jnp.asarray(n).dtype
         if cs != ns or cd != nd:
             raise ValueError(
-                f"hot_swap_g: leaf {i} is {ns}/{nd}, resident is "
+                f"{label}: leaf {i} is {ns}/{nd}, resident is "
                 f"{cs}/{cd} — shapes and dtypes must match exactly "
                 "(the no-retrace contract)")
 
 
 def lm_depth_model(params, cfg: ArchConfig, solver: str = "euler",
                    g_params: Any = None, fused: bool = False, *,
-                   refinable: bool = False, rank: int = 32) -> DepthModel:
+                   refinable: bool = False, rank: int = 32,
+                   flow_params: Any = None) -> DepthModel:
     """The unified LM's depth ODE (models/cdepth.py) as a servable model.
 
     ``refinable=True`` carries the correction on the PARAMETRIC path
@@ -174,8 +200,16 @@ def lm_depth_model(params, cfg: ArchConfig, solver: str = "euler",
     it into ``integ.g`` — required for the online refinery's no-retrace
     hot-swap. Without a trained ``g_params`` it starts from a fresh
     zero-readout init (g == 0 exactly, pure base solver) that the
-    refinery then fits from live traffic."""
-    from repro.models.cdepth import apply_tail, depth_field, lm_g_apply
+    refinery then fits from live traffic.
+
+    ``flow_params`` (a trained ``lm_flow_init``-shaped pytree, e.g. from
+    ``load_flow_params``) attaches the K=0 flow tier: the model carries
+    ``flow_apply``/``flow_params`` on the same parametric contract, and
+    the serving loops route probe-easy requests to it when
+    ``EngineConfig.flow_threshold > 0``."""
+    from repro.models.cdepth import (
+        apply_tail, depth_field, lm_flow_apply, lm_g_apply,
+    )
     from repro.models.lm import _embed
 
     f = depth_field(params, cfg)
@@ -193,6 +227,12 @@ def lm_depth_model(params, cfg: ArchConfig, solver: str = "euler",
             g_params=g_params)
     else:
         integ = lm_integrator(solver, g_params, fused=fused)
+    if flow_params is not None:
+        order = integ.order
+        kw.update(
+            flow_apply=lambda fp, eps, s, z, dz:
+                lm_flow_apply(fp, eps, s, z, dz, order=order),
+            flow_params=flow_params)
     return DepthModel(
         embed=lambda toks: _embed(params, cfg, toks),
         field_of=lambda toks: f,
@@ -320,9 +360,18 @@ class EngineConfig:
     fixed_K: int = 0              # mesh length when controller == "fixed"
     fused: bool = False           # route batch solves through the kernel
     #                               (runtime-eps: any K mix fuses)
+    flow_threshold: float = 0.0   # K=0 flow tier confidence fraction:
+    #                               route iff probe err <= this * tol
+    #                               (0 disables the tier entirely)
 
     def __post_init__(self):
         assert self.buckets == tuple(sorted(self.buckets)), self.buckets
+        if not (0.0 <= self.flow_threshold <= 1.0):
+            raise ValueError(
+                f"flow_threshold={self.flow_threshold}: expected a "
+                "confidence fraction in [0, 1] (core/controllers.py::"
+                "TierRouter) — the flow tier only serves requests whose "
+                "probe error is confidently below tol")
 
 
 def prepare_model(model: DepthModel, ecfg: "EngineConfig") -> DepthModel:
@@ -345,6 +394,18 @@ def prepare_model(model: DepthModel, ecfg: "EngineConfig") -> DepthModel:
         raise ValueError(
             f"solver {ecfg.solver!r} needs a correction: build the "
             "DepthModel with g_params (serve CLI: --g-ckpt)")
+    if ecfg.flow_threshold > 0:
+        if model.flow_apply is None:
+            raise ValueError(
+                f"flow_threshold={ecfg.flow_threshold} routes easy "
+                "requests to the K=0 flow tier, but the DepthModel "
+                "carries no flow head: build it with flow_apply/"
+                "flow_params (serve CLI: --flow-ckpt)")
+        if ecfg.controller == "fixed":
+            raise ValueError(
+                "flow_threshold > 0 needs a probing controller — the "
+                "flow tier routes off the admission probe's difficulty "
+                "estimate, which controller='fixed' never computes")
     return model
 
 
@@ -400,6 +461,8 @@ class StepReport:
     batches: int = 0
     probe_nonfinite: int = 0          # non-finite probe errors this drain
     finish_offset: Dict[int, float] = dataclasses.field(default_factory=dict)
+    flow_served: int = 0              # requests completed on the K=0 tier
+    escalated: int = 0                # flow failures requeued to the ladder
 
     @property
     def waste_steps(self) -> int:
@@ -417,7 +480,10 @@ class StepReport:
 #   deadline  — evicted past its deadline (best-effort partial readout,
 #               or none if it expired while still queued)
 #   shed      — refused at admission by the overload policy (no outputs)
-STATUSES = ("ok", "retried", "diverged", "deadline", "shed")
+#   escalated — completed on the K-bucket ladder after its K=0 flow-tier
+#               eval came back non-finite (real outputs; the flow
+#               attempt's nfe is billed into the record)
+STATUSES = ("ok", "retried", "diverged", "deadline", "shed", "escalated")
 
 
 class QueueFull(RuntimeError):
@@ -433,6 +499,7 @@ class Request:
     deadline: Optional[float] = None  # oracle-clock deadline (None = none)
     attempts: int = 0             # completed (failed) serve attempts so far
     K_floor: int = 0              # retry ladder: minimum bucket on re-probe
+    escalated: bool = False       # a failed K=0 flow eval sent it here
 
 
 @dataclasses.dataclass(frozen=True)
@@ -476,6 +543,14 @@ class MultiRateEngine:
         # between drains with zero retraces (validate_g_swap)
         self.g_params = None if self.model.g_apply is None else \
             jax.tree_util.tree_map(jnp.asarray, self.model.g_params)
+        # the K=0 flow tier's swappable params + router policy; None/None
+        # when the tier is disabled (flow_threshold == 0), in which case
+        # NO flow code runs — the bitwise-parity guarantee vs pre-flow
+        self.flow_params = None if self.model.flow_apply is None else \
+            jax.tree_util.tree_map(jnp.asarray, self.model.flow_params)
+        self.router = TierRouter(
+            flow_threshold=engine_cfg.flow_threshold) \
+            if engine_cfg.flow_threshold > 0 else None
         self.ledger = ledger   # optional ResidualLedger (launch/refinery)
         self.oracle = oracle or SequentialEvalOracle()
         self.queue_cap = queue_cap
@@ -489,6 +564,7 @@ class MultiRateEngine:
         self._probe_fns: Dict[Tuple, Any] = {}
         self._solve_fns: Dict[Tuple, Any] = {}
         self._embed_fns: Dict[Tuple, Any] = {}
+        self._flow_fns: Dict[Tuple, Any] = {}
         self.last_report = StepReport()
 
     # ---------------------------------------------------------- policy ----
@@ -507,6 +583,16 @@ class MultiRateEngine:
         """Per-request NFE for a bucket-K solve, probe included (the solve
         reuses the probe's first stage, so one eval is not double-counted)."""
         return self.probe_nfe + self.model.integ.tableau.stages * K
+
+    @property
+    def nfe_flow(self) -> int:
+        """Per-request NFE on the K=0 flow tier: the probe's RAW field
+        evals, nothing else. ``probe_nfe`` nets out the stage the solve
+        reuses; on the flow tier that same stage is consumed by the flow
+        combine's ``eps*dz`` term, so it is billed back here (+1) and the
+        total is probe evals + ZERO solver steps — strictly below
+        ``nfe_of(k_min)`` for every controller."""
+        return self.probe_nfe + 1
 
     def probe(self, xs):
         """Probe a request batch without serving it: returns (raw per-
@@ -590,6 +676,29 @@ class MultiRateEngine:
             self._embed_fns[shape] = jax.jit(self.model.embed)
         return self._embed_fns[shape]
 
+    def _flow_args(self) -> Tuple:
+        """Trailing cell operands for the hot-swappable flow head:
+        ``(flow_params,)`` when the model carries one, ``()`` otherwise.
+        Read at CALL time so a hot_swap_flow lands on the next drain."""
+        return () if self.model.flow_apply is None else (self.flow_params,)
+
+    def _flow_fn(self, shape):
+        """The K=0 tier's jit cell: one flow-head eval + readout over the
+        probe's already-materialized (z0, dz0). Variable-width like the
+        drain's solve batches; flow params ride as a traced trailing
+        operand (the params-are-inputs invariant, same as g)."""
+        if shape not in self._flow_fns:
+            m = self.model
+            h = m.span[1] - m.span[0]
+            s0 = m.span[0]
+
+            @jax.jit
+            def flow(x, z0, dz0, *fps):
+                return m.readout(x, m.flow_apply(fps[0], h, s0, z0, dz0))
+
+            self._flow_fns[shape] = flow
+        return self._flow_fns[shape]
+
     def _solve_fn(self, shape, k_max: int):
         key = (shape, k_max)
         if key not in self._solve_fns:
@@ -634,6 +743,20 @@ class MultiRateEngine:
         old, self.g_params = self.g_params, gp
         return old
 
+    def hot_swap_flow(self, fp):
+        """Install new flow-head params between drains — the flow twin of
+        ``hot_swap_g``, same zero-retrace contract (the flow cell takes
+        them as a traced input). Returns the previous params."""
+        if self.model.flow_apply is None:
+            raise ValueError(
+                "hot_swap_flow on a model with no flow head: build the "
+                "DepthModel with flow_apply/flow_params (core/flowhead."
+                "py) to make the K=0 tier swappable")
+        fp = jax.tree_util.tree_map(jnp.asarray, fp)
+        validate_g_swap(self.flow_params, fp, label="hot_swap_flow")
+        old, self.flow_params = self.flow_params, fp
+        return old
+
     # ------------------------------------------------------------ serve ----
     def step(self, now: float = 0.0) -> List[Completed]:
         """Drain the queue once: probe, bucket, pack, solve. Returns the
@@ -656,6 +779,7 @@ class MultiRateEngine:
         stages = self.model.integ.tableau.stages
         cost = probe_cost = 0.0
         useful = total = batches = probe_nonfinite = 0
+        flow_served = escalated = 0
         finish_offset: Dict[int, float] = {c.uid: 0.0 for c in done}
         # degrade pressure is measured once per drain, at its start
         degrade = (self.queue_cap is not None
@@ -747,7 +871,68 @@ class MultiRateEngine:
                 self.model.embed,
                 jax.ShapeDtypeStruct(xs.shape, xs.dtype))
             fused = self.fused_in_play(z_like)
+
+            # K=0 flow tier (core/flowhead.py): requests whose probe
+            # error sits confidently below tol skip the ladder entirely
+            # — one flow-head eval + readout, zero solver steps. Tier is
+            # a PACKING decision like the buckets: flow rows route to
+            # their own per-shape jit cell and are excluded from the
+            # pack loop below; nothing about the ladder cells changes.
+            # With the tier disabled (router is None) this whole block
+            # is a no-op and the drain is bitwise identical to pre-flow.
+            flow_sel = np.zeros(len(reqs), bool)
+            if self.router is not None and z0 is not None:
+                flow_sel = np.asarray(self.router.flow_mask(
+                    errs, self.ecfg.tol, floors))
+            fidx = np.flatnonzero(flow_sel)
+            if len(fidx):
+                f_out = np.asarray(self._flow_fn(shape)(
+                    jnp.asarray(xs[fidx]), take(z0, fidx),
+                    take(dz0, fidx), *self._flow_args()))
+                cost += self.oracle.flow_cost(shape, len(fidx))
+                for j, i in enumerate(fidx):
+                    r = reqs[i]
+                    row = f_out[j]
+                    if self.fault_injector is not None:
+                        row = self.fault_injector.corrupt_flow_eval(
+                            r.uid, r.attempts, row)
+                    if not np.isfinite(row).all():
+                        # escalation path: the no-solver answer failed —
+                        # bill the flow attempt and requeue into the
+                        # K-bucket ladder at the coarsest bucket (the
+                        # next drain re-probes; K_floor > 0 also bars
+                        # re-routing to flow), bounded by the RetryPolicy
+                        if self.retry.should_retry(
+                                "diverged", r.attempts):
+                            self._nfe_extra[r.uid] = (
+                                self._nfe_extra.get(r.uid, 0)
+                                + self.nfe_flow)
+                            self._queue.append(dataclasses.replace(
+                                r, attempts=r.attempts + 1,
+                                K_floor=min(self.ecfg.buckets),
+                                escalated=True))
+                            escalated += 1
+                            continue
+                        finish_offset[r.uid] = cost
+                        done.append(Completed(
+                            uid=r.uid, outputs=row, K=0,
+                            nfe=self.nfe_flow
+                            + self._nfe_extra.pop(r.uid, 0),
+                            err_probe=float(errs[i]),
+                            fused_kernel=False, status="diverged"))
+                        continue
+                    # flow_mask bars K_floor > 0, so attempts == 0 here
+                    finish_offset[r.uid] = cost
+                    flow_served += 1
+                    done.append(Completed(
+                        uid=r.uid, outputs=row, K=0,
+                        nfe=self.nfe_flow
+                        + self._nfe_extra.pop(r.uid, 0),
+                        err_probe=float(errs[i]), fused_kernel=False,
+                        status="ok"))
+
             order = np.argsort(Ks, kind="stable")
+            order = order[~flow_sel[order]]
             for lo in range(0, len(order), self.ecfg.max_batch):
                 sel = order[lo:lo + self.ecfg.max_batch]
                 k_max = int(Ks[sel].max())
@@ -783,7 +968,8 @@ class MultiRateEngine:
                             continue     # served by the next drain
                         status = "diverged"
                     else:
-                        status = "ok" if r.attempts == 0 else "retried"
+                        status = "ok" if r.attempts == 0 else (
+                            "escalated" if r.escalated else "retried")
                     finish_offset[r.uid] = cost
                     done.append(Completed(
                         uid=r.uid, outputs=outputs[j], K=K,
@@ -794,7 +980,8 @@ class MultiRateEngine:
         self.last_report = StepReport(
             cost=cost, probe_cost=probe_cost, useful_steps=useful,
             total_steps=total, batches=batches,
-            probe_nonfinite=probe_nonfinite, finish_offset=finish_offset)
+            probe_nonfinite=probe_nonfinite, finish_offset=finish_offset,
+            flow_served=flow_served, escalated=escalated)
         return done
 
     def run(self, xs) -> List[Completed]:

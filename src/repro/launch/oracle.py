@@ -73,6 +73,11 @@ class CostOracle(Protocol):
         """One drain batch of ``width`` rows scanned to ``k_max``."""
         ...
 
+    def flow_cost(self, shape: Tuple[int, ...], width: int) -> float:
+        """One K=0 flow-tier evaluation (core/flowhead.py) over ``width``
+        rows: a single net eval, no solver steps."""
+        ...
+
 
 @dataclasses.dataclass(frozen=True)
 class SequentialEvalOracle:
@@ -94,6 +99,11 @@ class SequentialEvalOracle:
     def solve_cost(self, shape, k_max: int, width: int,
                    stages: int) -> float:
         return float(stages * k_max)
+
+    def flow_cost(self, shape, width: int) -> float:
+        # one correction-net eval ~ one field eval on this clock; the
+        # flow tier's whole pitch is that this is its TOTAL solve cost
+        return 1.0
 
 
 class RooflineOracle:
@@ -148,6 +158,11 @@ class RooflineOracle:
     def solve_cost(self, shape, k_max: int, width: int,
                    stages: int) -> float:
         return stages * k_max * self.step_time(width)
+
+    def flow_cost(self, shape, width: int) -> float:
+        # the flow net is eval-shaped (rank-r MLP ~ one depth group's
+        # cost envelope), so price it as one field evaluation
+        return self.step_time(width)
 
 
 def make_oracle(name: str, cfg: Optional[ArchConfig] = None, *,

@@ -54,7 +54,7 @@ import numpy as np
 from repro.core.integrate import (
     Integrator, _bcast, rk_stages, tree_axpy, tree_lincomb,
 )
-from repro.core.residual import ledger_fitting_loss
+from repro.core.residual import flow_fitting_loss, ledger_fitting_loss
 from repro.core.tableaus import get as get_tableau
 from repro.core.train import make_fit_step
 from repro.optim import adamw
@@ -336,21 +336,33 @@ class Refinery:
     def __init__(self, model, ledger: ResidualLedger,
                  cfg: Optional[RefineryConfig] = None, *,
                  ecfg=None, shadow_xs=None, ckpt_dir: Optional[str] = None,
-                 score_fn: Optional[Callable] = None):
+                 score_fn: Optional[Callable] = None,
+                 param_site: str = "g"):
         from repro.launch.engine import EngineConfig, MultiRateEngine
-        if model.g_apply is None:
+        if param_site not in ("g", "flow"):
+            raise ValueError(
+                f"param_site={param_site!r}: expected 'g' (refine the "
+                "hypersolver correction) or 'flow' (refine the K=0 flow "
+                "head, core/flowhead.py)")
+        if param_site == "g" and model.g_apply is None:
             raise ValueError(
                 "Refinery needs a parametric model (DepthModel.g_apply/"
                 "g_params): a closure g cannot hot-swap without retraces")
+        if param_site == "flow" and model.flow_apply is None:
+            raise ValueError(
+                "Refinery(param_site='flow') needs a model with a flow "
+                "head (DepthModel.flow_apply/flow_params)")
         self.model = model
         self.ledger = ledger
         self.cfg = cfg or RefineryConfig()
+        self.param_site = param_site
         self._rng = np.random.RandomState(self.cfg.seed)
 
         # candidate/current params: current is what serving runs; the
         # candidate trains ahead of it on ledger batches
         as_dev = lambda t: jax.tree_util.tree_map(jnp.asarray, t)
-        self.current = as_dev(model.g_params)
+        self.current = as_dev(model.g_params if param_site == "g"
+                              else model.flow_params)
         self.candidate = self.current
         self.steps = 0                      # candidate fit steps taken
         self.last_loss: Optional[float] = None
@@ -362,31 +374,54 @@ class Refinery:
         self._prev: Optional[Tuple[Any, Dict]] = None   # rollback handle
         self._current_score: Optional[Dict] = None
 
-        ga = model.g_apply
         opt = adamw(
             cosine_annealing(self.cfg.lr, self.cfg.lr_min,
                              self.cfg.total_steps),
             weight_decay=self.cfg.weight_decay)
         self._opt_state = opt.init(self.candidate)
 
-        def loss_fn(gp, s, eps, z, dz, R):
-            g = lambda e, s_, z_, dz_: ga(gp, e, s_, z_, dz_)
-            return ledger_fitting_loss(g, s, eps, z, dz, R)
+        if param_site == "g":
+            ga = model.g_apply
+
+            def loss_fn(gp, s, eps, z, dz, R):
+                g = lambda e, s_, z_, dz_: ga(gp, e, s_, z_, dz_)
+                return ledger_fitting_loss(g, s, eps, z, dz, R)
+        else:
+            # the flow head fits the SAME ledger rows: for a structured
+            # F = z + eps*dz + eps^{p+1}*net, flow_fitting_loss reduces
+            # exactly to ledger_fitting_loss on the inner net — one
+            # residual stream trains both tiers. relative=True because
+            # the router only hands the flow tier confidently-easy rows:
+            # the live ledger is difficulty-mixed, and the raw objective
+            # would trade easy-row accuracy for hard-row magnitudes
+            fa = model.flow_apply
+            order = model.integ.order
+
+            def loss_fn(fp, s, eps, z, dz, R):
+                flow = lambda e, s_, z_, dz_: fa(fp, e, s_, z_, dz_)
+                return flow_fitting_loss(flow, s, eps, z, dz, R,
+                                         order=order, relative=True)
 
         self._fit_step = make_fit_step(loss_fn, opt, self.cfg.grad_clip)
         self._eval_loss = jax.jit(loss_fn)
 
         # shadow scorer: its OWN engine instance over the same model and
         # policy — candidate params score on cells that take gp as a
-        # traced input, so scoring N candidates compiles once
+        # traced input, so scoring N candidates compiles once. At
+        # param_site="flow" the engine is replaced by a dedicated
+        # full-span flow cell (the K=0 tier has no mesh to serve).
         self._shadow_xs = None if shadow_xs is None else np.asarray(
             shadow_xs)
         self._score_fn = score_fn or self._argmax_agreement
         self._shadow_engine = None
+        self._flow_score_fn = None
         self._ref_out = None
         if self._shadow_xs is not None:
-            self._shadow_engine = MultiRateEngine(
-                model, ecfg or EngineConfig())
+            if param_site == "g":
+                self._shadow_engine = MultiRateEngine(
+                    model, ecfg or EngineConfig())
+            else:
+                self._flow_score_fn = self._flow_cell()
             self._ref_out = np.asarray(
                 self._reference_cell()(jnp.asarray(self._shadow_xs)))
 
@@ -436,6 +471,24 @@ class Refinery:
 
         return run
 
+    def _flow_cell(self):
+        """Shadow scorer for ``param_site="flow"``: the candidate flow
+        params serve the held-out set as the K=0 tier would — one
+        full-span F eval off ``(z0, dz0)`` plus readout — and score
+        agreement against the same fine frozen reference. Params ride as
+        a traced input, so scoring N candidates compiles once."""
+        m = self.model
+        h, s0 = m.span[1] - m.span[0], m.span[0]
+        fa = m.flow_apply
+
+        @jax.jit
+        def run(xs, fp):
+            z0 = m.embed(xs)
+            dz0 = m.field_of(xs)(s0, z0)
+            return m.readout(xs, fa(fp, h, s0, z0, dz0))
+
+        return run
+
     @staticmethod
     def _argmax_agreement(outs: np.ndarray, ref: np.ndarray) -> float:
         """Default agreement: fraction of matching argmax over the last
@@ -455,6 +508,10 @@ class Refinery:
             outs = np.stack([c.outputs for c in recs])
             out["agreement"] = self._score_fn(outs, self._ref_out)
             out["mean_nfe"] = float(np.mean([c.nfe for c in recs]))
+        elif self._flow_score_fn is not None:
+            outs = np.asarray(self._flow_score_fn(
+                jnp.asarray(self._shadow_xs), gp))
+            out["agreement"] = self._score_fn(outs, self._ref_out)
         hb = self.ledger.holdout_batch(self.cfg.holdout_rows)
         if hb is not None:
             out["resid"] = float(self._eval_loss(
@@ -472,6 +529,15 @@ class Refinery:
         if "resid" in cand and "resid" in cur:
             ok &= cand["resid"] <= cur["resid"] + self.cfg.resid_margin
         return bool(ok)
+
+    def _swap(self, target, params) -> None:
+        """Hot-swap ``params`` into a live serving loop at this
+        refinery's param site — ``hot_swap_g`` or ``hot_swap_flow``,
+        both zero-retrace by the params-are-inputs invariant."""
+        if self.param_site == "g":
+            target.hot_swap_g(params)
+        else:
+            target.hot_swap_flow(params)
 
     # ---------------------------------------------------- promote / roll ----
     def maybe_promote(self, targets: Sequence = ()) -> Dict:
@@ -498,7 +564,7 @@ class Refinery:
             self.current = self.candidate
             self._current_score = cand
             for t in targets:
-                t.hot_swap_g(self.current)
+                self._swap(t, self.current)
             self.promotions += 1
             self.last_promotion = self.steps
         else:
@@ -523,7 +589,7 @@ class Refinery:
             self._current_score = score
             return False
         for t in targets:
-            t.hot_swap_g(prev_params)
+            self._swap(t, prev_params)
         self.current = prev_params
         self._current_score = prev_score
         self._prev = None

@@ -92,7 +92,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controllers import FixedController
+from repro.core.controllers import FixedController, TierRouter
 from repro.core.integrate import SegmentCarry
 from repro.distributed.fault import FaultInjector, RetryPolicy
 from repro.launch.engine import (
@@ -159,6 +159,8 @@ class TickReport:
     requeued: int = 0             # failed slots re-queued by the retry ladder
     shed: int = 0                 # admission refusals surfaced this tick
     probe_nonfinite: int = 0      # non-finite probe errors seen at admission
+    flow_served: int = 0          # requests completed on the K=0 flow tier
+    escalated: int = 0            # flow failures requeued to the K ladder
 
     @property
     def waste_steps(self) -> int:
@@ -176,6 +178,27 @@ class _PendingSegment:
     k_old: np.ndarray             # k rows at launch
     occ: np.ndarray               # occupancy at launch (bool row)
     t_done: float                 # virtual completion stamp for retires
+
+
+@dataclasses.dataclass
+class _FlowBatch:
+    """K=0 flow-tier rows staged at admission. ``outs`` stays an async
+    device future until ``finalize_retired`` (same deferral contract as
+    ``_RetireBatch``); host rows are snapshots of the admitted requests —
+    flow rows never touch a slot, so there is nothing to free. ``xs``
+    keeps the ORIGINAL request inputs (never the chaos-poisoned probe
+    copies) so an escalation requeues clean data."""
+
+    n: int                        # real rows (outs may be pow2-padded)
+    outs: Any                     # flow readout rows, device future
+    t_done: float                 # admission probe + flow eval, this pool
+    uid: np.ndarray
+    err: np.ndarray
+    t_submit: np.ndarray
+    t_admit: float
+    deadline: np.ndarray          # np.inf = none
+    attempts: np.ndarray
+    xs: np.ndarray
 
 
 @dataclasses.dataclass
@@ -234,17 +257,21 @@ class _SlotPool:
         self.segments = np.zeros((n,), np.int32)
         self.deadline = np.full((n,), np.inf, np.float64)
         self.attempts = np.zeros((n,), np.int32)
+        self.escalated = np.zeros((n,), bool)   # flow-escalation provenance
         self.xs = np.zeros((n,) + shape, dtype)
         self._xs_dev = None     # device mirror of xs, refreshed on admit
         self.z: Any = None                            # device pytree or None
         self.fs: Any = None                           # probe dz rows or None
         self._pending: Optional[_PendingSegment] = None
         self._staged: List[_RetireBatch] = []
+        self._staged_flow: List[_FlowBatch] = []
+        self.flow_retired_last = 0   # flow terminals in the last finalize
         self._readout_widths: set = set()   # pow2 readout cells traced
         self._probe_fn = None
         self._embed_fn = None
         self._segment_fn = None
         self._readout_fn = None
+        self._flow_fn = None
 
     # ------------------------------------------------------- jit cells ----
     def _cells(self):
@@ -297,6 +324,21 @@ class _SlotPool:
             @jax.jit
             def readout(xs, z):
                 return m.readout(xs, z)
+
+            if m.flow_apply is not None:
+                h, fs0 = m.span[1] - m.span[0], m.span[0]
+
+                @jax.jit
+                def flow(xs, z0, dz0, *fps):
+                    # the K=0 tier: one flow-head eval + readout over the
+                    # admission probe's already-materialized (z0, dz0);
+                    # flow params ride as a traced trailing operand (the
+                    # params-are-inputs invariant, same as g). Widths are
+                    # pow2-gated by the caller like _readout_finished.
+                    return m.readout(xs, m.flow_apply(fps[0], h, fs0,
+                                                      z0, dz0))
+
+                self._flow_fn = flow
 
             self._probe_fn, self._embed_fn = probe, embed
             self._segment_fn, self._readout_fn = segment, readout
@@ -371,8 +413,42 @@ class _SlotPool:
             Ks = b[np.maximum(np.searchsorted(b, Ks) - 1, 0)]
         # retry-ladder escalation: a re-queued request never re-serves
         # below its K_floor (the next-finer bucket than the failed one)
-        Ks = np.maximum(Ks, np.asarray([r.K_floor for r in reqs],
-                                       np.int32))
+        floors = np.asarray([r.K_floor for r in reqs], np.int32)
+        Ks = np.maximum(Ks, floors)
+
+        # K=0 flow tier (core/flowhead.py): probe-easy rows never touch
+        # a slot — one flow-head eval off the probe's (z0, dz0), staged
+        # async and materialized in finalize_retired. The remaining rows
+        # (and the padded probe outputs) are subset so every line below
+        # runs exactly as if only they had been admitted; with the tier
+        # disabled (router is None) this block never executes and
+        # admission is bitwise identical to pre-flow.
+        if sched.router is not None and not fixed:
+            flow_sel = np.asarray(sched.router.flow_mask(
+                errs, sched.ecfg.tol, floors))
+            if flow_sel.any():
+                flow_cost = sched.oracle.flow_cost(
+                    self.shape, int(flow_sel.sum()))
+                sched._flow_cost_tick += flow_cost
+                self._stage_flow(reqs, flow_sel, xs_new, z0, dz0, errs,
+                                 submit_t, now,
+                                 t_done=now + probe_cost + flow_cost)
+                keep = np.flatnonzero(~flow_sel)
+                reqs = [reqs[i] for i in keep]
+                xs_new = xs_new[keep]
+                Ks, errs = Ks[keep], errs[keep]
+                idx = idx[:len(reqs)]
+                if not len(reqs):
+                    return probe_cost, probe_nonfinite
+                # remap the PADDED probe outputs so rows 0..len(reqs)-1
+                # are the kept rows (take_rows and the first-admission
+                # full-pool shortcut below both rely on that layout)
+                pad_pos = jnp.asarray(np.concatenate(
+                    [keep, np.full(sched.slots - len(keep), keep[0])]))
+                remap = lambda t: jax.tree_util.tree_map(
+                    lambda l: l[pad_pos], t)
+                z0 = remap(z0)
+                dz0 = None if dz0 is None else remap(dz0)
 
         # scatter: host rows directly, device pytrees leaf-wise. On the
         # pool's first admission the padded probe output IS the pool state.
@@ -403,6 +479,7 @@ class _SlotPool:
             self.segments[i] = 0
             self.deadline[i] = np.inf if r.deadline is None else r.deadline
             self.attempts[i] = r.attempts
+            self.escalated[i] = r.escalated
             self.xs[i] = r.x
         # device mirror of xs: scatter only the refilled rows (a full
         # re-upload per admission would put the big operand back on the
@@ -412,6 +489,38 @@ class _SlotPool:
         else:
             self._xs_dev = self._xs_dev.at[jidx].set(jnp.asarray(xs_new))
         return probe_cost, probe_nonfinite
+
+    def _stage_flow(self, reqs: List[Request], flow_sel: np.ndarray,
+                    xs_new: np.ndarray, z0, dz0, errs: np.ndarray,
+                    submit_t: Dict[int, float], now: float,
+                    t_done: float) -> None:
+        """Dispatch the flow-tier rows' K=0 eval (async device future,
+        pow2-padded gather like ``_readout_finished``) and stage the
+        batch for ``finalize_retired``. Rows are gathered from the
+        PADDED probe outputs, so this is purely a read of state the
+        probe already materialized — no extra probe, no slot."""
+        sched = self.sched
+        fidx = np.flatnonzero(flow_sel)
+        w = min(1 << (len(fidx) - 1).bit_length(), sched.slots)
+        pad = fidx if w == len(fidx) else np.concatenate(
+            [fidx, np.repeat(fidx[:1], w - len(fidx))])
+        jf = jnp.asarray(pad)
+        gather = lambda t: jax.tree_util.tree_map(lambda l: l[jf], t)
+        outs = self._flow_fn(jnp.asarray(xs_new[pad]), gather(z0),
+                             gather(dz0), *sched._flow_args())
+        rs = [reqs[i] for i in fidx]
+        self._staged_flow.append(_FlowBatch(
+            n=len(fidx), outs=outs, t_done=t_done,
+            uid=np.asarray([r.uid for r in rs], np.int64),
+            err=errs[fidx].copy(),
+            t_submit=np.asarray([submit_t.pop(r.uid) for r in rs],
+                                np.float64),
+            t_admit=now,
+            deadline=np.asarray(
+                [np.inf if r.deadline is None else r.deadline
+                 for r in rs], np.float64),
+            attempts=np.asarray([r.attempts for r in rs], np.int32),
+            xs=np.stack([r.x for r in rs])))
 
     # --------------------------------------------------------- segment ----
     def launch_segment(self, t_done: float) -> None:
@@ -485,7 +594,8 @@ class _SlotPool:
             sched.ledger.capture_pool(self, np.flatnonzero(live))
 
         idx: List[int] = [int(i) for i in np.flatnonzero(finished)]
-        status = ["ok" if self.attempts[i] == 0 else "retried"
+        status = ["ok" if self.attempts[i] == 0 else
+                  ("escalated" if self.escalated[i] else "retried")
                   for i in idx]
         requeued = 0
         for i in np.flatnonzero(nonfin | expired):
@@ -528,7 +638,8 @@ class _SlotPool:
         sched._queue.appendleft(Request(
             uid=uid, x=self.xs[i].copy(),
             deadline=deadline if np.isfinite(deadline) else None,
-            attempts=int(self.attempts[i]) + 1, K_floor=K_floor))
+            attempts=int(self.attempts[i]) + 1, K_floor=K_floor,
+            escalated=bool(self.escalated[i])))
         self.uid[i] = -1
         self.Ks[i] = 0
         self.eps[i] = 1.0
@@ -582,6 +693,60 @@ class _SlotPool:
         sync loop calls it immediately."""
         sched = self.sched
         done: List[InflightCompleted] = []
+        self.flow_retired_last = 0
+        for fb in self._staged_flow:
+            outs = np.asarray(fb.outs)
+            for j in range(fb.n):
+                uid = int(fb.uid[j])
+                attempts = int(fb.attempts[j])
+                row = outs[j]
+                if sched.fault_injector is not None:
+                    # chaos hook: a poisoned FLOW eval (the only fault
+                    # that can reach this tier — admission-poisoned
+                    # inputs fail the probe's finite screen and are
+                    # never flow-routed)
+                    row = sched.fault_injector.corrupt_flow_eval(
+                        uid, attempts, row)
+                if np.isfinite(row).all():
+                    # flow_mask bars K_floor > 0, so attempts == 0 here
+                    self.flow_retired_last += 1
+                    sched._flow_tick += 1
+                    sched.total_flow_served += 1
+                    done.append(InflightCompleted(
+                        uid=uid, outputs=row, K=0,
+                        nfe=sched.nfe_flow + sched._nfe_extra.pop(uid, 0),
+                        err_probe=float(fb.err[j]), fused_kernel=False,
+                        t_submit=float(fb.t_submit[j]),
+                        t_admit=fb.t_admit, t_done=fb.t_done,
+                        segments=0, status="ok"))
+                    continue
+                if sched.retry.should_retry("diverged", attempts):
+                    # escalation: bill the flow attempt's nfe, requeue
+                    # into the K-bucket ladder at the coarsest bucket
+                    # (the front of the queue, like _requeue_slot — the
+                    # sync/overlap parity contract); K_floor > 0 also
+                    # bars re-routing to flow
+                    sched._nfe_extra[uid] = \
+                        sched._nfe_extra.get(uid, 0) + sched.nfe_flow
+                    sched._submit_t[uid] = float(fb.t_submit[j])
+                    dl = float(fb.deadline[j])
+                    sched._queue.appendleft(Request(
+                        uid=uid, x=fb.xs[j].copy(),
+                        deadline=dl if np.isfinite(dl) else None,
+                        attempts=attempts + 1,
+                        K_floor=min(sched.ecfg.buckets),
+                        escalated=True))
+                    sched._esc_tick += 1
+                    sched.total_escalated += 1
+                    continue
+                self.flow_retired_last += 1
+                done.append(InflightCompleted(
+                    uid=uid, outputs=row, K=0,
+                    nfe=sched.nfe_flow + sched._nfe_extra.pop(uid, 0),
+                    err_probe=float(fb.err[j]), fused_kernel=False,
+                    t_submit=float(fb.t_submit[j]), t_admit=fb.t_admit,
+                    t_done=fb.t_done, segments=0, status="diverged"))
+        self._staged_flow = []
         for b in self._staged:
             outs = np.asarray(b.outs)
             for j in range(len(b.idx)):
@@ -690,6 +855,12 @@ class InflightScheduler:
         # between segments with zero retraces and no pool drain
         self.g_params = None if model.g_apply is None else \
             jax.tree_util.tree_map(jnp.asarray, model.g_params)
+        # K=0 flow tier (core/flowhead.py): hot-swappable like g, routed
+        # by the TierRouter off the admission probe's difficulty estimate
+        self.flow_params = None if model.flow_apply is None else \
+            jax.tree_util.tree_map(jnp.asarray, model.flow_params)
+        self.router = TierRouter(flow_threshold=engine_cfg.flow_threshold) \
+            if engine_cfg.flow_threshold > 0 else None
         self.ledger = ledger   # optional ResidualLedger (launch/refinery)
         self.overlap = bool(overlap)
         # Donating the carry buffers halves pool memory on accelerators,
@@ -719,6 +890,13 @@ class InflightScheduler:
         self.total_deadline_evicted = 0
         self.total_requeued = 0
         self.total_shed = 0
+        self.total_flow_served = 0
+        self.total_escalated = 0
+        # per-tick flow accounting, accrued inside pool.admit/finalize
+        # (reset at the top of each tick variant)
+        self._flow_tick = 0
+        self._esc_tick = 0
+        self._flow_cost_tick = 0.0
         self.last_report = TickReport()
         self.queue_cap = None if queue_cap is None else int(queue_cap)
         self.overload_policy = overload_policy
@@ -738,6 +916,19 @@ class InflightScheduler:
         """Per-request probe cost net of the reused first stage (same
         accounting as MultiRateEngine.probe_nfe)."""
         return probe_net_nfe(self.controller)
+
+    @property
+    def nfe_flow(self) -> int:
+        """NFE billed to a flow-tier completion: the raw probe evals
+        plus ZERO solver steps. ``probe_nfe`` nets out the reused first
+        stage, but on the flow tier that stage is consumed by the flow
+        combine's ``eps*dz`` term rather than a solver, so it is billed
+        back (+1). Same accounting as MultiRateEngine.nfe_flow."""
+        return self.probe_nfe + 1
+
+    def _flow_args(self) -> Tuple:
+        """Trailing flow-cell operands, the flow twin of ``_g_args``."""
+        return () if self.model.flow_apply is None else (self.flow_params,)
 
     def _g_args(self) -> Tuple:
         """Trailing cell operands for the hot-swappable correction:
@@ -764,6 +955,21 @@ class InflightScheduler:
         gp = jax.tree_util.tree_map(jnp.asarray, gp)
         validate_g_swap(self.g_params, gp)
         old, self.g_params = self.g_params, gp
+        return old
+
+    def hot_swap_flow(self, fp):
+        """Install new flow-head params between ticks — identical
+        contract to ``hot_swap_g`` (zero retraces, no drain; the params
+        are traced operands read at flow-cell CALL time). Returns the
+        previous params as the rollback handle."""
+        if self.model.flow_apply is None:
+            raise ValueError(
+                "hot_swap_flow on a model without a flow head: build "
+                "the DepthModel with flow_apply/flow_params to make the "
+                "K=0 tier swappable")
+        fp = jax.tree_util.tree_map(jnp.asarray, fp)
+        validate_g_swap(self.flow_params, fp, label="hot_swap_flow")
+        old, self.flow_params = self.flow_params, fp
         return old
 
     def can_submit(self) -> bool:
@@ -930,7 +1136,8 @@ class InflightScheduler:
     def _finish_tick(self, *, cost, probe_cost, admitted, retired,
                      useful, total, occupied, quarantined=0,
                      deadline_evicted=0, requeued=0, shed=0,
-                     probe_nonfinite=0) -> None:
+                     probe_nonfinite=0, flow_served=0,
+                     escalated=0) -> None:
         """Advance the virtual clock and the resource ledgers — the one
         accounting epilogue both tick variants share."""
         self.now += cost
@@ -949,7 +1156,8 @@ class InflightScheduler:
             retired=retired, useful_steps=useful, total_steps=total,
             occupied_steps=occupied, quarantined=quarantined,
             deadline_evicted=deadline_evicted, requeued=requeued,
-            shed=shed, probe_nonfinite=probe_nonfinite)
+            shed=shed, probe_nonfinite=probe_nonfinite,
+            flow_served=flow_served, escalated=escalated)
 
     def _step_sync(self) -> List[InflightCompleted]:
         """The synchronous tick: (1) refill free slots from the queue
@@ -965,10 +1173,12 @@ class InflightScheduler:
         done: List[InflightCompleted] = list(self._shed)
         shed = len(done)
         self._shed = []
+        self._flow_tick = self._esc_tick = 0
+        self._flow_cost_tick = 0.0
         probe_cost, admitted, pool_probe, dropped, probe_nonfinite = \
             self._admit_tick()
         done.extend(dropped)
-        cost = probe_cost
+        cost = probe_cost + self._flow_cost_tick
         # -- segments
         useful = total = occupied = retired = 0
         quarantined = evicted = requeued = 0
@@ -997,6 +1207,15 @@ class InflightScheduler:
             quarantined += st.quarantined
             evicted += st.deadline_evicted
             requeued += st.requeued
+        # flow-only admissions leave their pool non-busy (flow rows
+        # never occupy slots), so run_segment never fires for them —
+        # drain any pool still holding staged flow batches here or the
+        # tick would silently strand (and hang) those requests
+        for pool in self._pools.values():
+            if pool._staged_flow:
+                d = pool.finalize_retired()
+                done.extend(d)
+                retired += len(d)
         self._finish_tick(cost=cost, probe_cost=probe_cost,
                           admitted=admitted,
                           retired=retired + shed + len(dropped),
@@ -1004,7 +1223,9 @@ class InflightScheduler:
                           quarantined=quarantined,
                           deadline_evicted=evicted + len(dropped),
                           requeued=requeued, shed=shed,
-                          probe_nonfinite=probe_nonfinite)
+                          probe_nonfinite=probe_nonfinite,
+                          flow_served=self._flow_tick,
+                          escalated=self._esc_tick)
         return done
 
     def _step_overlap(self) -> List[InflightCompleted]:
@@ -1035,6 +1256,8 @@ class InflightScheduler:
         done: List[InflightCompleted] = list(self._shed)
         shed = len(done)
         self._shed = []
+        self._flow_tick = self._esc_tick = 0
+        self._flow_cost_tick = 0.0
         useful = total = occupied = retired = 0
         quarantined = evicted = requeued = 0
         for pool in self._pools.values():
@@ -1050,7 +1273,7 @@ class InflightScheduler:
         probe_cost, admitted, pool_probe, dropped, probe_nonfinite = \
             self._admit_tick()
         done.extend(dropped)
-        cost = probe_cost
+        cost = probe_cost + self._flow_cost_tick
         for key, pool in self._pools.items():
             if not pool.busy():
                 continue
@@ -1066,6 +1289,9 @@ class InflightScheduler:
                                 + seg_cost)
         for pool in self._pools.values():
             done.extend(pool.finalize_retired())
+            # staged-segment retire stats (st.retired above) never see
+            # flow rows — they retire straight out of finalize
+            retired += pool.flow_retired_last
         self._finish_tick(cost=cost, probe_cost=probe_cost,
                           admitted=admitted,
                           retired=retired + shed + len(dropped),
@@ -1073,7 +1299,9 @@ class InflightScheduler:
                           quarantined=quarantined,
                           deadline_evicted=evicted + len(dropped),
                           requeued=requeued, shed=shed,
-                          probe_nonfinite=probe_nonfinite)
+                          probe_nonfinite=probe_nonfinite,
+                          flow_served=self._flow_tick,
+                          escalated=self._esc_tick)
         return done
 
     # ----------------------------------------------------- convenience ----

@@ -16,6 +16,11 @@ correction, freeze mask) is a single runtime-eps Pallas kernel pass, for
 every bucket mix (see launch/engine.py). ``hyper_*`` solvers apply a
 trained hypersolver correction loaded via --g-ckpt (HyperEuler etc.).
 Reports per-request NFE and argmax agreement vs the full-depth forward.
+--flow-ckpt + --flow-threshold add the K=0 flow tier on top of
+--multirate: requests whose probe error sits below threshold*tol are
+served by a learned solution operator in ONE net eval (core/flowhead.py);
+non-finite flow evals escalate back into the K-bucket ladder
+(status="escalated").
 
 --inflight swaps the drain-the-queue engine for the continuous-batching
 slot-pool scheduler (launch/scheduler.py): --slots slots advance --seg
@@ -66,7 +71,7 @@ import numpy as np
 from repro.configs import get
 from repro.launch.engine import (
     EngineConfig, MultiRateEngine, greedy_generate, lm_depth_model,
-    load_g_params,
+    load_flow_params, load_g_params,
 )
 from repro.models.lm import discrete_nfe, group_layout, init_lm, lm_forward
 
@@ -98,6 +103,18 @@ def main():
                          "correction (enables hyper_* solvers)")
     ap.add_argument("--g-rank", type=int, default=32,
                     help="rank of the g_omega checkpoint being restored")
+    ap.add_argument("--flow-ckpt", default=None,
+                    help="CheckpointManager dir of a trained K=0 flow head "
+                         "(core/flowhead.py); requires --flow-threshold")
+    ap.add_argument("--flow-rank", type=int, default=64,
+                    help="rank of the flow-head checkpoint being restored")
+    ap.add_argument("--flow-threshold", type=float, default=0.0,
+                    help="route requests whose probe error is below this "
+                         "fraction of --tol to the K=0 flow tier (one net "
+                         "eval, no solver; --multirate only). 0 disables "
+                         "the tier; flow evals that come back non-finite "
+                         "escalate into the K-bucket ladder "
+                         "(status='escalated')")
     ap.add_argument("--multirate", action="store_true",
                     help="error-controlled per-request step sizes "
                          "(launch/engine.py) instead of one fixed K")
@@ -239,6 +256,22 @@ def main():
         raise SystemExit("--progress-every reports the in-flight "
                          "scheduler's tick counters; pass --inflight "
                          "with it")
+    if args.flow_threshold and not args.multirate:
+        # the flow tier routes off the admission probe's difficulty
+        # estimate; fixed-K serving never probes
+        raise SystemExit("--flow-threshold routes off the multi-rate "
+                         "admission probe; pass --multirate with it "
+                         "(fixed-K serving has no probe to route from)")
+    if args.flow_threshold and not args.flow_ckpt:
+        raise SystemExit("--flow-threshold needs --flow-ckpt (a trained "
+                         "flow head): a fresh zero-init head is exactly "
+                         "one full-span Euler step, which would mislabel "
+                         "the K=0 tier's numbers")
+    if args.flow_ckpt and not args.flow_threshold:
+        # same policy as --g-ckpt/--mesh: a silently ignored checkpoint
+        # would let a run labeled flow-tiered report ladder-only numbers
+        raise SystemExit("--flow-ckpt is only read by the flow tier; "
+                         "pass --flow-threshold > 0 with it")
 
     cfg = get(args.arch)
     if args.reduced:
@@ -270,6 +303,11 @@ def main():
                          "--refine to fit one from live traffic, "
                          "starting at a zero correction")
 
+    flow_params = None
+    if args.flow_ckpt:
+        flow_params = load_flow_params(args.flow_ckpt, cfg,
+                                       rank=args.flow_rank)
+
     buckets = tuple(int(b) for b in args.buckets.split(","))
     K_fixed = args.nfe or max(1, n_groups // 2)
     ecfg = EngineConfig(
@@ -280,10 +318,12 @@ def main():
         controller="auto" if args.multirate else "fixed",
         fixed_K=K_fixed,
         fused=args.fused,
+        flow_threshold=args.flow_threshold,
     )
     model = lm_depth_model(params, cfg, solver=args.solver,
                            g_params=g_params, fused=args.fused,
-                           refinable=args.refine, rank=args.g_rank)
+                           refinable=args.refine, rank=args.g_rank,
+                           flow_params=flow_params)
     # the roofline clock prices the SERVED arch at the prompt's context;
     # reported latency/wait switch to its unit (device-us) with it
     from repro.launch.oracle import make_oracle
@@ -367,6 +407,9 @@ def main():
                          f"deadline_evicted={s.total_deadline_evicted}",
                          f"requeued={s.total_requeued}",
                          f"shed={s.total_shed}"]
+                if args.flow_threshold:
+                    parts += [f"flow={s.total_flow_served}",
+                              f"escalated={s.total_escalated}"]
                 if refinery is not None:
                     st = refinery.status()
                     parts += [

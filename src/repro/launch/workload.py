@@ -243,11 +243,13 @@ def status_counts(report: TraceReport) -> Dict[str, int]:
 
 def ok_records(report: TraceReport) -> TraceReport:
     """The report restricted to requests that produced real outputs
-    (``ok``/``retried``) — latency percentiles over shed or evicted
-    requests (t_done == t_submit, or a truncated solve) would flatter
-    the very loop that failed them."""
+    (``ok``/``retried``/``escalated`` — an escalated request completed
+    on the K-bucket ladder after its flow eval failed, so its outputs
+    are as real as a retried one's) — latency percentiles over shed or
+    evicted requests (t_done == t_submit, or a truncated solve) would
+    flatter the very loop that failed them."""
     keep = tuple(r for r in report.records
-                 if r.status in ("ok", "retried"))
+                 if r.status in ("ok", "retried", "escalated"))
     return dataclasses.replace(report, records=keep)
 
 
@@ -462,4 +464,52 @@ def toy_refinable_classifier(base: str = "euler", fused: bool = True, *,
         integ=Integrator(tableau=get_tableau(base), fused=fused),
         g_apply=g_apply,
         g_params=g_params,
+    )
+
+
+def toy_flow_classifier(base: str = "euler", fused: bool = True, *,
+                        d: int = 32, n_classes: int = 10,
+                        hidden: int = 8, seed: int = 11,
+                        flow_seed: int = 23):
+    """``toy_refinable_classifier`` plus a K=0 FLOW HEAD: the same
+    parametric correction g, and a second element-wise MLP wrapped by
+    ``core.flowhead.make_flow_apply`` into a one-eval solution operator
+    ``F(fp, eps, s, z, dz)`` whose params also ride the cells as traced
+    inputs — the model the three-tier router serves and the refinery
+    can hot-swap at ``param_site="flow"``.
+
+    Both nets are ZERO-initialized at the output, so a cold serve makes
+    g vanish exactly AND makes F exactly one full-span Euler step —
+    every later agreement gain is attributable to the ledger fit."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.flowhead import make_flow_apply
+
+    model = toy_refinable_classifier(base, fused, d=d,
+                                     n_classes=n_classes, hidden=hidden,
+                                     seed=seed)
+    k1, = jax.random.split(jax.random.PRNGKey(flow_seed), 1)
+    flow_params = {
+        "w1": jnp.asarray(jax.random.normal(k1, (4, hidden)) * 0.5),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jnp.zeros((hidden, 1)),
+        "b2": jnp.zeros((1,)),
+    }
+
+    def net(fp, eps, s, z, dz):
+        # same broadcast contract as the toy g_apply: serving cells call
+        # with batched rows, the ledger loss vmaps per row
+        up = lambda a: jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(a, z.dtype),
+                        jnp.shape(a) + (1,) * (z.ndim - jnp.ndim(a))),
+            z.shape)
+        feats = jnp.stack([z, dz, up(s), up(eps)], axis=-1)
+        h = jnp.tanh(feats @ fp["w1"] + fp["b1"])
+        return (h @ fp["w2"])[..., 0] + fp["b2"][0]
+
+    return dataclasses.replace(
+        model,
+        flow_apply=make_flow_apply(net, order=model.integ.order),
+        flow_params=flow_params,
     )

@@ -132,6 +132,28 @@ def lm_g_apply(gp, eps, s, x, h, dh):
     return (jnp.tanh(pre) @ gp["w_out"].astype(h.dtype)).astype(h.dtype)
 
 
+# ----------------------------------------------- flow head for the LM ----
+
+def lm_flow_init(key, cfg: ArchConfig, rank: int = 64, n_fourier: int = 8,
+                 param_dtype=None):
+    """Flow-net params for the K=0 tier (core/flowhead.py): the SAME
+    rank-r architecture as g_omega — flow and correction fit the same
+    eps^{p+1}-scaled residual target, so one net family serves both
+    sites. Zero-init readout means the flow starts as EXACTLY one
+    full-span Euler step."""
+    return lm_g_init(key, cfg, rank=rank, n_fourier=n_fourier,
+                     param_dtype=param_dtype)
+
+
+def lm_flow_apply(fp, eps, s, z, dz, order: int = 1):
+    """LM solution operator F(z(s)) -> z(s+eps) — ``make_flow_apply``
+    over the ``lm_g_apply`` net (DepthModel.flow_apply signature)."""
+    from repro.core.flowhead import flow_combine
+
+    return flow_combine(eps, z, dz, lm_g_apply(fp, eps, s, None, z, dz),
+                        order=order)
+
+
 # ----------------------------------------------------------- inference ----
 
 def bind_lm_g(g_params):

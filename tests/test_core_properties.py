@@ -120,3 +120,83 @@ def test_lincomb_skips_zeros():
     np.testing.assert_allclose(np.asarray(out), 1.0)
     out0 = tree_lincomb((0.0, 0.0), trees)
     np.testing.assert_allclose(np.asarray(out0), 0.0)
+
+
+# ------------------------------------------- controller-policy properties ----
+# (core/controllers.py + the engine's bucket snap — the selection rules
+# the serving ladder routes on)
+
+from repro.core.controllers import (  # noqa: E402
+    MAX_FACTOR, MIN_FACTOR, error_ratio, mesh_for_tolerance, step_factor,
+)
+from repro.launch.engine import snap_to_buckets  # noqa: E402
+
+pos_f = st.floats(min_value=1e-8, max_value=1e8,
+                  allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(z=small_vec(), err=small_vec(), scale=st.floats(min_value=1.0,
+                                                       max_value=16.0))
+def test_error_ratio_monotone_in_err(z, err, scale):
+    """Uniformly inflating the error estimate never shrinks the ratio
+    (the accept/reject decision is monotone in the evidence)."""
+    r1 = float(error_ratio(z, z, err, 1e-6, 1e-3))
+    r2 = float(error_ratio(z, z, jnp.asarray(err) * scale, 1e-6, 1e-3))
+    assert r2 >= r1 - 1e-12
+    assert r1 >= 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(r1=pos_f, r2=pos_f, order=st.integers(min_value=1, max_value=4))
+def test_step_factor_monotone_and_clamped(r1, r2, order):
+    """A worse (larger) error ratio never asks for a LARGER next step,
+    and the multiplier always lands inside the classical safety clamp —
+    for every ratio, including the extremes."""
+    f1, f2 = float(step_factor(r1, order)), float(step_factor(r2, order))
+    if r1 <= r2:
+        assert f1 >= f2 - 1e-12
+    for f in (f1, f2):
+        assert MIN_FACTOR - 1e-12 <= f <= MAX_FACTOR + 1e-12
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    err=st.lists(st.floats(min_value=0.0, max_value=1e6), min_size=1,
+                 max_size=6),
+    tol=st.floats(min_value=1e-6, max_value=10.0),
+    q=st.integers(min_value=1, max_value=4),
+    k_max=st.integers(min_value=1, max_value=64),
+)
+def test_mesh_for_tolerance_bounds_and_nan(err, tol, q, k_max):
+    """Selected K always lands in [k_min, k_max]; a non-finite probe
+    error must select k_max (the probe blowing up means maximally hard),
+    never the smallest mesh via an int cast of NaN."""
+    e = jnp.asarray(err, jnp.float32)
+    Ks = np.asarray(mesh_for_tolerance(e, tol, q, 1, k_max))
+    assert ((Ks >= 1) & (Ks <= k_max)).all()
+    bad = jnp.asarray([np.nan, np.inf] + list(err), jnp.float32)
+    Kb = np.asarray(mesh_for_tolerance(bad, tol, q, 1, k_max))
+    assert Kb[0] == k_max and Kb[1] == k_max
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    buckets=st.lists(st.integers(min_value=1, max_value=64), min_size=1,
+                     max_size=6, unique=True),
+    Ks=st.lists(st.integers(min_value=1, max_value=128), min_size=1,
+                max_size=8),
+)
+def test_snap_to_buckets_idempotent_and_clamped(buckets, Ks):
+    """Snapping is idempotent (a snapped mesh is a fixed point), lands
+    on a configured bucket, never integrates coarser than asked below
+    the top bucket, and clamps overshooting K down to the largest
+    bucket."""
+    Ks = np.asarray(Ks, np.int32)
+    snapped = snap_to_buckets(Ks, buckets)
+    assert np.array_equal(snap_to_buckets(snapped, buckets), snapped)
+    assert np.isin(snapped, np.asarray(buckets, np.int32)).all()
+    top = max(buckets)
+    under = Ks <= top
+    assert (snapped[under] >= Ks[under]).all()
+    assert (snapped[~under] == top).all()

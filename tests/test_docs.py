@@ -328,6 +328,61 @@ def test_refinery_prose_matches_live_api():
     assert _check_refinery_section("BENCH_refinery.json", [])
 
 
+def test_flow_tier_prose_matches_live_router():
+    """The K=0 flow-tier flag table + BENCH_flow glossary (serving.md)
+    and the three-tier ladder diagram (architecture.md) describe the
+    LIVE router: the documented thresholds are TierRouter's actual
+    defaults, the tier is actually off by default on EngineConfig, the
+    named swap surface exists on both loops, and the verdict keys are
+    the ones benchmarks/run.py gates."""
+    import inspect
+
+    from repro.core.controllers import TierRouter
+    from repro.core.train import FlowTrainConfig, train_flowhead
+    from repro.launch.engine import EngineConfig, MultiRateEngine
+    from repro.launch.scheduler import InflightScheduler
+
+    arch = _read(os.path.join(DOCS_DIR, "architecture.md"))
+    serving = _read(os.path.join(DOCS_DIR, "serving.md"))
+
+    # the documented default thresholds are the live ones
+    router = TierRouter()
+    assert router.flow_threshold == 0.25 and router.hyper_k_max == 4
+    assert "`0.25`" in serving and "TierRouter" in serving
+    assert "hyper_k_max" in serving
+    # ...and the tier really is off unless asked for
+    assert EngineConfig().flow_threshold == 0.0
+
+    # architecture.md draws the ladder with the live pieces
+    for token in ("TierRouter", "core/flowhead.py", "FLOW TIER",
+                  "escalated", "min(buckets)"):
+        assert token in arch, f"{token!r} missing from architecture.md"
+
+    # the documented swap/accounting surface is live on BOTH loops
+    for cls in (InflightScheduler, MultiRateEngine):
+        assert hasattr(cls, "hot_swap_flow")
+        assert "nfe_flow" in inspect.getsource(
+            sys.modules[cls.__module__])
+    assert train_flowhead is not None
+    assert FlowTrainConfig().relative is True
+
+    # the flag table documents the real CLI surface
+    for flag in ("--flow-ckpt", "--flow-rank", "--flow-threshold"):
+        assert f"`{flag}`" in serving, f"{flag} missing from serving.md"
+
+    # the BENCH_flow glossary names the verdict keys --check gates
+    if REPO_ROOT not in sys.path:
+        sys.path.insert(0, REPO_ROOT)
+    from benchmarks.run import BENCH_REQUIRED, _check_flow_section
+    assert "BENCH_flow.json" in BENCH_REQUIRED
+    assert "BENCH_flow.json" in serving
+    for key in ("three_tier_dominates", "flow_disabled_parity",
+                "escalation_accounted", "zero_hang"):
+        assert f"`{key}`" in serving, f"verdict key {key} undocumented"
+    # the gate function rejects an empty file shape (it is live)
+    assert _check_flow_section("BENCH_flow.json", [])
+
+
 def test_failure_semantics_prose_matches_live_enum():
     """The 'Failure semantics' status glossary in docs/serving.md is
     asserted against the LIVE terminal-status enum and retry defaults —

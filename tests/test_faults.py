@@ -34,8 +34,9 @@ from repro.launch.engine import (
 )
 from repro.launch.scheduler import InflightScheduler
 from repro.launch.workload import (
-    Arrival, heterogeneous_requests, ok_records, poisson_trace,
-    replay_engine, replay_scheduler, status_counts, toy_classifier,
+    Arrival, heterogeneous_requests, latency_stats, ok_records,
+    poisson_trace, replay_engine, replay_scheduler, status_counts,
+    toy_classifier, toy_flow_classifier,
 )
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -446,6 +447,149 @@ def test_overlap_parity_under_faults():
             else:
                 assert np.array_equal(ra.outputs, rb.outputs,
                                       equal_nan=True)
+
+
+# --------------------------------------------- flow-tier escalation path ----
+# (PR 10: a NaN-poisoned K=0 flow eval must quarantine and requeue into
+# the K-bucket ladder — never hang, never serve the poison)
+
+import dataclasses as _dc  # noqa: E402
+
+FLOW_ECFG = _dc.replace(ECFG, solver="hyper_euler",
+                        flow_threshold=0.25)
+
+
+def _flow_sched(inj=None, overlap=False, **kw):
+    return InflightScheduler(toy_flow_classifier(d=D), FLOW_ECFG,
+                             slots=4, seg=2, overlap=overlap,
+                             fault_injector=inj, **kw)
+
+
+def _flow_engine(inj=None, **kw):
+    return MultiRateEngine(toy_flow_classifier(d=D), FLOW_ECFG,
+                           fault_injector=inj, **kw)
+
+
+@pytest.mark.parametrize("loop", ["engine", "inflight",
+                                  "inflight_overlap"])
+def test_flow_nan_escalates_into_ladder(loop):
+    """Transient flow-eval poison -> quarantine + requeue at a K_floor
+    (status 'escalated'), real finite outputs from the ladder, and the
+    wasted flow attempt billed into nfe. Zero-init g routes EVERY
+    request to the flow tier, so the injected fraction is exact."""
+    n = 12
+    trace = _trace(n)
+    inj = FaultInjector(seed=4, flow_nan_frac=0.5, nan_transient=True)
+    if loop == "engine":
+        rep = replay_engine(_flow_engine(inj), trace)
+        clean = replay_engine(_flow_engine(None), _trace(n))
+        nfe_flow = _flow_engine(None).nfe_flow
+    else:
+        ov = loop == "inflight_overlap"
+        rep = replay_scheduler(_flow_sched(inj, overlap=ov), trace)
+        clean = replay_scheduler(_flow_sched(None, overlap=ov), _trace(n))
+        nfe_flow = _flow_sched(None).nfe_flow
+    _zero_hang(rep, n)
+    counts = status_counts(rep)
+    assert counts["escalated"] >= 1 and counts["diverged"] == 0, counts
+    ok = {r.uid: r for r in clean.records}
+    for r in rep.records:
+        if r.status == "escalated":
+            assert np.isfinite(r.outputs).all()
+            assert r.K > 0                      # served by the ladder
+            assert r.nfe > ok[r.uid].nfe        # flow attempt billed
+            assert r.nfe >= nfe_flow + 1
+        else:
+            assert r.status == "ok" and r.K == 0
+            assert r.nfe == ok[r.uid].nfe
+
+
+def test_flow_nan_persistent_diverges_when_retries_exhausted():
+    """max_retries=0 makes the poisoned flow eval terminal: best-effort
+    'diverged' with the non-finite flow row — still zero-hang."""
+    n = 8
+    inj = FaultInjector(seed=4, flow_nan_frac=0.5, nan_transient=False)
+    for make in (lambda: _flow_engine(inj,
+                                      retry=RetryPolicy(max_retries=0)),
+                 lambda: _flow_sched(inj,
+                                     retry=RetryPolicy(max_retries=0))):
+        rep = (replay_engine if make().__class__ is MultiRateEngine
+               else replay_scheduler)(make(), _trace(n))
+        _zero_hang(rep, n)
+        counts = status_counts(rep)
+        assert counts["diverged"] >= 1 and counts["escalated"] == 0
+        for r in rep.records:
+            if r.status == "diverged":
+                assert not np.isfinite(r.outputs).all()
+
+
+def test_flow_escalation_zero_hang_under_chaos_mixes():
+    """Flow poison composed with the PR-8 chaos sources: every mix
+    terminates every uid, and sync == overlap bitwise on the identical
+    schedule."""
+    n = 14
+    mixes = [
+        FaultInjector(seed=4, flow_nan_frac=0.6, nan_transient=True),
+        FaultInjector(seed=6, flow_nan_frac=0.4, drop_flag_p=0.3,
+                      nan_transient=True),
+        FaultInjector(seed=8, flow_nan_frac=0.4, straggle_tick_frac=0.3,
+                      straggle_factor=4.0, nan_transient=True),
+    ]
+    for inj in mixes:
+        a = {r.uid: r for r in replay_scheduler(
+            _flow_sched(inj), _trace(n)).records}
+        b = {r.uid: r for r in replay_scheduler(
+            _flow_sched(inj, overlap=True), _trace(n)).records}
+        assert len(a) == n and set(a) == set(b)
+        for u in a:
+            ra, rb = a[u], b[u]
+            assert (ra.status, ra.K, ra.nfe, ra.t_done) == \
+                (rb.status, rb.K, rb.nfe, rb.t_done), (ra, rb)
+            assert np.array_equal(ra.outputs, rb.outputs,
+                                  equal_nan=True)
+
+
+def test_flow_injector_skips_admission_poisoned_rows():
+    """corrupt_flow_eval and corrupt_admission are SEPARATE sites: an
+    admission-poisoned request fails the probe's finite screen, never
+    reaches the flow tier, and resolves through the PR-8 quarantine
+    ('retried'), not the escalation path."""
+    n = 10
+    inj = FaultInjector(seed=3, nan_uid_frac=0.4, nan_transient=True)
+    rep = replay_scheduler(_flow_sched(inj), _trace(n))
+    _zero_hang(rep, n)
+    counts = status_counts(rep)
+    assert counts["retried"] >= 1 and counts["escalated"] == 0, counts
+
+
+# --------------------------------------------- status-key frozen contract ----
+
+def test_status_counts_and_latency_stats_frozen_keys():
+    """REGRESSION (PR 10): growing ``engine.STATUSES`` with 'escalated'
+    must flow through ``status_counts`` automatically and must NOT
+    change ``latency_stats``' frozen summary-key set (dashboards key on
+    it)."""
+    assert "escalated" in STATUSES
+    n = 10
+    inj = FaultInjector(seed=4, flow_nan_frac=0.5, nan_transient=True)
+    rep = replay_scheduler(_flow_sched(inj), _trace(n))
+    counts = status_counts(rep)
+    assert set(counts) == set(STATUSES)
+    assert sum(counts.values()) == n
+    frozen = {"requests", "p50_latency", "p99_latency", "mean_latency",
+              "p50_queue_wait", "p99_queue_wait", "mean_nfe",
+              "throughput", "total_cost", "probe_cost", "useful_steps",
+              "waste_steps", "waste_frac", "occupancy", "cost_unit"}
+    assert set(latency_stats(rep)) == frozen
+    # the empty-replay branch reports the identical key set
+    empty = replay_scheduler(_flow_sched(None), [])
+    assert set(latency_stats(empty)) == frozen
+    # escalated completions are kept by ok_records (they finished with
+    # real ladder outputs), alongside ok and retried
+    kept = ok_records(rep)
+    assert {r.status for r in kept.records} <= {"ok", "retried",
+                                                "escalated"}
+    assert any(r.status == "escalated" for r in kept.records)
 
 
 # ----------------------------------------------------- bench check gate ----

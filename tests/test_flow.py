@@ -1,0 +1,384 @@
+"""The K=0 flow tier (PR 10): FlowHead solution operator, the shared
+residual-ledger fitting path, the three-way tier router, and the
+flow-disabled bitwise-parity acceptance — engine, in-flight sync,
+in-flight overlap, and the forced-4-device sharded pool (subprocess).
+
+The acceptance pins:
+  * a ZERO-INIT flow head is EXACTLY one full-span base Euler step —
+    so a cold flow tier can never silently change numerics, and every
+    later gain is attributable to the ledger fit;
+  * ``flow_fitting_loss`` of the structured head reduces EXACTLY to
+    ``ledger_fitting_loss`` of its inner net — the flow tier and the
+    hypersolver g fit the same target off the same reservoir;
+  * with the flow tier disabled (``flow_threshold=0``) or with a
+    threshold that routes zero requests, completions are uid-for-uid
+    BITWISE identical to a serve with no flow head attached — the tier
+    is pure packing policy;
+  * ``hot_swap_flow`` validates like ``hot_swap_g`` (params-are-inputs:
+    a structural mismatch would silently retrace every cell).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TierRouter, flow_combine, make_flow_apply
+from repro.core.residual import flow_fitting_loss, ledger_fitting_loss
+from repro.launch.engine import (
+    EngineConfig, MultiRateEngine, prepare_model,
+)
+from repro.launch.scheduler import InflightScheduler
+from repro.launch.workload import (
+    heterogeneous_requests, poisson_trace, replay_engine, replay_scheduler,
+    toy_flow_classifier, toy_refinable_classifier,
+)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+D = 12   # distinct from test_faults (10) / test_scheduler (8): the fused
+#          segment cell is globally cached per signature
+
+
+def _ecfg(flow_threshold=0.0, **kw):
+    kw.setdefault("buckets", (2, 4, 8, 16))
+    kw.setdefault("tol", 5e-3)
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("solver", "hyper_euler")
+    kw.setdefault("fused", True)
+    return EngineConfig(flow_threshold=flow_threshold, **kw)
+
+
+# ------------------------------------------------------- flow head unit ----
+
+def test_zero_init_flow_is_exactly_one_euler_step():
+    """F(fp0, eps, s, z, dz) == z + eps*dz bitwise for a zero-output-init
+    net — the cold flow tier IS the base solver's full-span step."""
+    model = toy_flow_classifier(d=D)
+    z = jnp.asarray(np.random.RandomState(0).randn(5, D), jnp.float32)
+    dz = jnp.asarray(np.random.RandomState(1).randn(5, D), jnp.float32)
+    eps = jnp.float32(1.0)
+    out = model.flow_apply(model.flow_params, eps, jnp.float32(0.0), z, dz)
+    euler = z + eps * dz
+    assert np.array_equal(np.asarray(out), np.asarray(euler))
+
+
+def test_flow_combine_order_scaling():
+    """The correction enters at eps^{p+1} — the same scaling the
+    hypersolver update uses (paper Eq. 5)."""
+    z = jnp.ones((3,)); dz = jnp.full((3,), 2.0); corr = jnp.full((3,), 5.0)
+    for order in (1, 2, 4):
+        got = flow_combine(jnp.float32(0.5), z, dz, corr, order=order)
+        want = z + 0.5 * dz + 0.5 ** (order + 1) * corr
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+
+def test_flow_fitting_loss_reduces_to_ledger_fitting_loss():
+    """For the structured head the Euler part cancels: fitting F equals
+    fitting its inner net on the raw residual rows — one ledger, two
+    tiers. (Default relative=False; the relative variant reweights per
+    sample and is pinned separately.)"""
+    rs = np.random.RandomState(7)
+    n = 16
+    s = jnp.asarray(rs.rand(n), jnp.float32)
+    eps = jnp.asarray(0.1 + rs.rand(n), jnp.float32)
+    z = jnp.asarray(rs.randn(n, D), jnp.float32)
+    dz = jnp.asarray(rs.randn(n, D), jnp.float32)
+    R = jnp.asarray(rs.randn(n, D), jnp.float32)
+
+    def net(fp, e, si, zi, dzi):
+        return fp["w"] * zi + dzi * e
+
+    fp = {"w": jnp.float32(0.3)}
+    fa = make_flow_apply(net, order=1)
+    flow = lambda e, si, zi, dzi: fa(fp, e, si, zi, dzi)
+    g = lambda e, si, zi, dzi: net(fp, e, si, zi, dzi)
+    lf = float(flow_fitting_loss(flow, s, eps, z, dz, R, order=1))
+    lg = float(ledger_fitting_loss(g, s, eps, z, dz, R))
+    np.testing.assert_allclose(lf, lg, rtol=1e-4)
+    # relative=True downweights each sample by 1 + ||R||: strictly
+    # smaller on any batch with nonzero residuals, and still positive
+    lr = float(flow_fitting_loss(flow, s, eps, z, dz, R, order=1,
+                                 relative=True))
+    assert 0.0 < lr < lf
+
+
+# ----------------------------------------------------------- tier router ----
+
+def test_tier_router_masks_and_bounds():
+    r = TierRouter(flow_threshold=0.5, hyper_k_max=4)
+    err = jnp.asarray([0.001, 0.004, 0.01, np.nan, np.inf, 0.0])
+    tol = 0.01
+    k_floor = jnp.asarray([0, 0, 0, 0, 0, 3])
+    mask = np.asarray(r.flow_mask(err, tol, k_floor))
+    # 0.001/0.004 pass (<= 0.005); 0.01 exceeds the gate; non-finite
+    # and escalated (k_floor > 0) rows are excluded unconditionally
+    assert mask.tolist() == [True, True, False, False, False, False]
+    tiers = np.asarray(r.tier_of(jnp.asarray([2, 4, 8, 16])))
+    assert tiers.tolist() == [1, 1, 2, 2]
+    with pytest.raises(ValueError, match="confidence fraction"):
+        TierRouter(flow_threshold=1.5)
+    with pytest.raises(ValueError, match="confidence fraction"):
+        TierRouter(flow_threshold=-0.1)
+
+
+def test_engine_config_flow_validation():
+    """flow_threshold > 0 demands a flow-capable model and a probing
+    controller — fail at prepare time, not mid-serve."""
+    with pytest.raises(ValueError, match="flow_threshold"):
+        EngineConfig(flow_threshold=1.5)
+    flowless = toy_refinable_classifier(d=D)
+    with pytest.raises(ValueError, match="flow"):
+        prepare_model(flowless, _ecfg(0.25))
+    with pytest.raises(ValueError, match="controller"):
+        prepare_model(toy_flow_classifier(d=D),
+                      _ecfg(0.25, controller="fixed", fixed_K=4))
+
+
+# ----------------------------------------------------- flow-tier serving ----
+
+def test_engine_serves_flow_tier_with_k0_accounting():
+    """Zero-init g makes every probe error 0, so every request is
+    confidently easy: all complete on the flow tier with K=0, status
+    'ok', and nfe == the engine's nfe_flow (probe + combine)."""
+    eng = MultiRateEngine(toy_flow_classifier(d=D), _ecfg(0.25))
+    xs = heterogeneous_requests(12, D, seed=0)
+    uids = [eng.submit(x) for x in xs]
+    done = {}
+    while len(eng):
+        for c in eng.step():
+            done[c.uid] = c
+    assert set(done) == set(uids)
+    for c in done.values():
+        assert c.K == 0 and c.status == "ok"
+        assert c.nfe == eng.nfe_flow
+        assert np.isfinite(c.outputs).all()
+    assert eng.last_report.flow_served == 12
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_scheduler_serves_flow_tier(overlap):
+    sched = InflightScheduler(toy_flow_classifier(d=D), _ecfg(0.25),
+                              slots=4, seg=2, overlap=overlap)
+    xs = heterogeneous_requests(10, D, seed=1)
+    uids = [sched.submit(x) for x in xs]
+    done = {}
+    while sched.pending:
+        for c in sched.step():
+            done[c.uid] = c
+    assert set(done) == set(uids)
+    assert all(c.K == 0 and c.status == "ok" for c in done.values())
+    assert sched.total_flow_served == 10
+    assert sched.total_escalated == 0
+
+
+def test_flow_sync_overlap_bitwise_parity():
+    """Sync and overlap resolve the same flow-routed trace to bitwise
+    identical completions (same jit cell, same staging drain)."""
+    xs = heterogeneous_requests(12, D, seed=5)
+    trace = poisson_trace(xs, rate=0.25, seed=105)
+    reps = {}
+    for ov in (False, True):
+        sched = InflightScheduler(toy_flow_classifier(d=D), _ecfg(0.25),
+                                  slots=4, seg=2, overlap=ov)
+        reps[ov] = {r.uid: r for r in replay_scheduler(sched, trace).records}
+    assert set(reps[False]) == set(reps[True])
+    for u, ra in reps[False].items():
+        rb = reps[True][u]
+        assert (ra.status, ra.K, ra.nfe, ra.t_done) == \
+            (rb.status, rb.K, rb.nfe, rb.t_done)
+        assert np.array_equal(ra.outputs, rb.outputs)
+
+
+# ------------------------------------- flow-disabled bitwise parity (e2e) ----
+
+def _bitwise_records_equal(a, b):
+    ra = {r.uid: r for r in a.records}
+    rb = {r.uid: r for r in b.records}
+    if set(ra) != set(rb):
+        return False
+    for u in ra:
+        x, y = ra[u], rb[u]
+        if (x.status, x.K, x.nfe, x.t_submit, x.t_done) != \
+                (y.status, y.K, y.nfe, y.t_submit, y.t_done):
+            return False
+        if (x.outputs is None) != (y.outputs is None):
+            return False
+        if x.outputs is not None and not np.array_equal(
+                x.outputs, y.outputs, equal_nan=True):
+            return False
+    return True
+
+
+@pytest.mark.parametrize("threshold", [0.0, 1e-6])
+def test_flow_disabled_parity_all_loops(threshold):
+    """ACCEPTANCE: flow_threshold=0 (tier off) — and a threshold so
+    tight ZERO requests qualify — serve uid-for-uid bitwise identical to
+    a model with no flow head attached, on all three loops. The embedded
+    controller gives every row a real positive probe error, so the 1e-6
+    gate routes nothing while exercising the live router."""
+    kw = {"controller": "embedded"}
+    ecfg_flow = _ecfg(threshold, **kw)
+    ecfg_off = _ecfg(0.0, **kw)
+    xs = heterogeneous_requests(14, D, seed=9)
+    trace = poisson_trace(xs, rate=0.25, seed=109)
+
+    def serve(model, ecfg):
+        eng = replay_engine(MultiRateEngine(model, ecfg), trace)
+        sy = replay_scheduler(
+            InflightScheduler(model, ecfg, slots=4, seg=2), trace)
+        ov = replay_scheduler(
+            InflightScheduler(model, ecfg, slots=4, seg=2, overlap=True),
+            trace)
+        return eng, sy, ov
+
+    with_flow = serve(toy_flow_classifier(d=D), ecfg_flow)
+    without = serve(toy_refinable_classifier(d=D), ecfg_off)
+    for a, b in zip(with_flow, without):
+        assert _bitwise_records_equal(a, b)
+        assert all(r.K > 0 for r in a.records)   # nothing flow-routed
+
+
+def test_hot_swap_flow_validates_structure():
+    """hot_swap_flow is zero-retrace ONLY for structurally identical
+    params; a mismatched pytree or dtype must refuse (engine and
+    scheduler share validate_g_swap)."""
+    eng = MultiRateEngine(toy_flow_classifier(d=D), _ecfg(0.25))
+    good = jax.tree_util.tree_map(lambda l: l + 1.0, eng.flow_params)
+    eng.hot_swap_flow(good)
+    with pytest.raises(ValueError, match="hot_swap_flow"):
+        eng.hot_swap_flow({"wrong": jnp.zeros(3)})
+    sched = InflightScheduler(toy_flow_classifier(d=D), _ecfg(0.25),
+                              slots=4, seg=2)
+    sched.hot_swap_flow(good)
+    with pytest.raises(ValueError, match="hot_swap_flow"):
+        sched.hot_swap_flow({"wrong": jnp.zeros(3)})
+
+
+# ------------------------------------------------------ bench check gate ----
+
+def test_bench_flow_check_gate():
+    """``run.py --check``'s flow section passes well-formed rows and
+    fails fast on a missing variant, a lost pareto win, a broken parity,
+    or a regressed verdict."""
+    if REPO_ROOT not in sys.path:
+        sys.path.insert(0, REPO_ROOT)
+    from benchmarks.run import _check_flow_section
+
+    good = [
+        {"bench": "flow", "section": "pareto", "variant": "hyper_multirate",
+         "agreement": 0.93, "mean_nfe": 9.0, "flow_served": 0},
+        {"bench": "flow", "section": "pareto", "variant": "three_tier",
+         "agreement": 0.99, "mean_nfe": 8.5, "flow_served": 40},
+        {"bench": "flow", "section": "flow_disabled_parity",
+         "mode": "engine", "parity": True},
+        {"bench": "flow", "section": "flow_disabled_parity",
+         "mode": "inflight", "parity": True},
+        {"bench": "flow", "section": "flow_disabled_parity",
+         "mode": "inflight_overlap", "parity": True},
+        {"bench": "flow", "section": "escalation", "mode": "inflight",
+         "escalated": 5, "zero_hang": True},
+        {"bench": "flow", "mode": "verdict", "three_tier_dominates": True,
+         "flow_disabled_parity": True, "escalation_accounted": True,
+         "zero_hang": True},
+    ]
+    assert _check_flow_section("BENCH_flow.json", good) == []
+    slow = [dict(good[1], mean_nfe=9.5)] + good[:1] + good[2:]
+    assert any("strictly below" in e for e in
+               _check_flow_section("BENCH_flow.json", slow))
+    vac = [good[0], dict(good[1], flow_served=0)] + good[2:]
+    assert any("vacuous" in e for e in
+               _check_flow_section("BENCH_flow.json", vac))
+    broken = good[:3] + [dict(good[3], parity=False)] + good[4:]
+    assert any("not at parity" in e for e in
+               _check_flow_section("BENCH_flow.json", broken))
+    noesc = good[:5] + [dict(good[5], escalated=0)] + good[6:]
+    assert any("requeued" in e for e in
+               _check_flow_section("BENCH_flow.json", noesc))
+    regressed = good[:6] + [dict(good[6], three_tier_dominates=False)]
+    assert any("three_tier_dominates" in e for e in
+               _check_flow_section("BENCH_flow.json", regressed))
+
+
+# ------------------------------------------------- sharded pool (4 dev) ----
+
+_SHARDED_FLOW_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+
+    from repro.launch.engine import EngineConfig
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.scheduler import InflightScheduler
+    from repro.launch.workload import (
+        heterogeneous_requests, poisson_trace, replay_scheduler,
+        toy_flow_classifier, toy_refinable_classifier,
+    )
+
+    assert jax.device_count() == 4, jax.device_count()
+    mesh = make_serving_mesh(4)
+    D = 12
+
+    def serve(model, ft, overlap=False):
+        ecfg = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, fused=True,
+                            solver="hyper_euler", controller="embedded",
+                            flow_threshold=ft)
+        sched = InflightScheduler(model, ecfg, slots=8, seg=2,
+                                  mesh=mesh, overlap=overlap)
+        return replay_scheduler(sched, trace)
+
+    xs = heterogeneous_requests(16, D, seed=9)
+    trace = poisson_trace(xs, rate=0.25, seed=109)
+
+    # flow-disabled parity on the sharded pool: a threshold routing zero
+    # requests serves bitwise like a flowless model, sync and overlap
+    for overlap in (False, True):
+        a = {r.uid: r for r in serve(
+            toy_flow_classifier(d=D), 1e-6, overlap).records}
+        b = {r.uid: r for r in serve(
+            toy_refinable_classifier(d=D), 0.0, overlap).records}
+        assert set(a) == set(b)
+        for u in a:
+            ra, rb = a[u], b[u]
+            assert (ra.status, ra.K, ra.nfe, ra.t_done) == (
+                rb.status, rb.K, rb.nfe, rb.t_done)
+            assert np.array_equal(ra.outputs, rb.outputs)
+            assert ra.K > 0
+    print("SHARDED_FLOW_PARITY_OK")
+
+    # and the flow tier itself serves on the mesh (zero-init g routes
+    # everything under the residual controller)
+    ecfg_f = EngineConfig(buckets=(2, 4, 8, 16), tol=5e-3, fused=True,
+                          solver="hyper_euler", flow_threshold=0.25)
+    sched = InflightScheduler(toy_flow_classifier(d=D), ecfg_f, slots=8,
+                              seg=2, mesh=mesh)
+    rep = replay_scheduler(sched, trace)
+    assert len(rep.records) == 16
+    assert all(r.K == 0 and r.status == "ok" for r in rep.records)
+    assert sched.total_flow_served == 16
+    print("SHARDED_FLOW_SERVE_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_flow_parity_subprocess():
+    """EDGE (tier-2): the flow-disabled parity acceptance and the flow
+    tier itself on a forced 4-device mesh (device topology is frozen at
+    first jax init, hence subprocess)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_FLOW_SCRIPT],
+                          env=env, capture_output=True, text=True,
+                          timeout=600, cwd=REPO_ROOT)
+    out = proc.stdout + proc.stderr
+    assert proc.returncode == 0, out[-4000:]
+    for marker in ("SHARDED_FLOW_PARITY_OK", "SHARDED_FLOW_SERVE_OK"):
+        assert marker in out, out[-4000:]
